@@ -1,0 +1,156 @@
+"""Measured performance benchmarks (real CPU wall time): the simulator engine
+(the paper's computational hot-spot) and the kernels' XLA stand-in paths.
+
+These are the directly-measurable §Perf subjects; the LM cells are measured
+structurally via the dry-run roofline instead (no TPU in this container).
+"""
+from __future__ import annotations
+
+import time
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.calibration import PriorBox, make_theta_mapper, presimulate
+from repro.core.engine import SimSpec, make_params, simulate_batch
+from repro.core.workload import compile_campaign, wlcg_production_workload
+
+
+def _bench(fn, *, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time (us) of fn()."""
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(iters):
+        t0 = time.time()
+        fn()
+        times.append((time.time() - t0) * 1e6)
+    return float(np.median(times))
+
+
+def bench_engine_throughput() -> Tuple[str, float, float]:
+    """Batched stochastic simulations of the production workload (the
+    paper-faithful tick loop). Derived = simulations per second (gates the
+    12.7M-tuple calibration)."""
+    grid, camp = wlcg_production_workload(seed=0)
+    table = compile_campaign(grid, camp)
+    spec = SimSpec.from_table(table, max_ticks=30_000)
+    params = make_params(table, overhead=0.02, bg_mu=36.9, bg_sigma=14.4)
+    B = 64
+    keys = jax.random.split(jax.random.PRNGKey(0), B)
+
+    def run():
+        res = simulate_batch(spec, params, keys)
+        res.transfer_time.block_until_ready()
+
+    us = _bench(run)
+    sims_per_s = B / (us / 1e6)
+    print(f"#   tick engine: {B} sims in {us/1e3:.0f} ms -> {sims_per_s:.1f} sims/s")
+    return "perf_engine_throughput", us, sims_per_s
+
+
+def bench_engine_leap() -> Tuple[str, float, float]:
+    """Beyond-paper event-leap engine on the same workload (results are
+    bit-comparable for deterministic loads; see tests). Derived = sims/s —
+    compare against perf_engine_throughput for the §Perf speedup."""
+    grid, camp = wlcg_production_workload(seed=0)
+    table = compile_campaign(grid, camp)
+    spec = SimSpec.from_table(table, max_ticks=30_000)
+    params = make_params(table, overhead=0.02, bg_mu=36.9, bg_sigma=14.4)
+    B = 64
+    keys = jax.random.split(jax.random.PRNGKey(0), B)
+
+    def run():
+        res = simulate_batch(spec, params, keys, leap=True)
+        res.transfer_time.block_until_ready()
+
+    us = _bench(run)
+    sims_per_s = B / (us / 1e6)
+    print(f"#   leap engine: {B} sims in {us/1e3:.0f} ms -> {sims_per_s:.1f} sims/s")
+    return "perf_engine_leap", us, sims_per_s
+
+
+def bench_presimulate_rate() -> Tuple[str, float, float]:
+    """End-to-end presimulation rate incl. regression fits (tuples/s)."""
+    grid, camp = wlcg_production_workload(seed=0)
+    table = compile_campaign(grid, camp)
+    spec = SimSpec.from_table(table, max_ticks=30_000)
+    mapper = make_theta_mapper(table, "webdav")
+    n = 128
+
+    def run():
+        theta, x = presimulate(
+            spec, mapper, PriorBox.paper(), jax.random.PRNGKey(0), n,
+            batch=64, leap=True,  # the optimized pipeline (§Perf)
+        )
+        x.block_until_ready()
+
+    us = _bench(run, warmup=1, iters=2)
+    rate = n / (us / 1e6)
+    print(f"#   presimulate: {rate:.1f} (theta, x) tuples/s")
+    return "perf_presimulate_rate", us, rate
+
+
+def bench_chunked_attention() -> Tuple[str, float, float]:
+    """XLA flash stand-in wall time, train-shape slice. Derived = achieved
+    GFLOP/s (matmul flops only)."""
+    from repro.kernels import ops
+
+    B, S, H, Hkv, D = 1, 2048, 8, 2, 64
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
+    f = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, backend="xla"))
+
+    def run():
+        f(q, k, v).block_until_ready()
+
+    us = _bench(run)
+    flops = 2 * 2 * B * H * S * S * D  # qk + pv
+    gflops = flops / (us / 1e6) / 1e9
+    print(f"#   chunked attention: {us/1e3:.1f} ms -> {gflops:.1f} GFLOP/s")
+    return "perf_chunked_attention", us, gflops
+
+
+def bench_mlstm_chunked() -> Tuple[str, float, float]:
+    from repro.kernels import ops
+
+    B, S, H, D = 1, 2048, 4, 128
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
+    ig = jnp.asarray(rng.standard_normal((B, S, H)) * 0.5, jnp.float32)
+    fg = jnp.asarray(rng.standard_normal((B, S, H)) + 2, jnp.float32)
+    f = jax.jit(lambda *a: ops.mlstm_chunk(*a, backend="xla"))
+
+    def run():
+        f(q, k, v, ig, fg).block_until_ready()
+
+    us = _bench(run)
+    tok_per_s = B * S / (us / 1e6)
+    print(f"#   chunked mLSTM: {us/1e3:.1f} ms -> {tok_per_s:.0f} tok/s")
+    return "perf_mlstm_chunked", us, tok_per_s
+
+
+def bench_classifier_scoring() -> Tuple[str, float, float]:
+    """MCMC ratio-scoring throughput (the chain's inner loop)."""
+    from repro.core.classifier import ClassifierConfig, classifier_logit, init_classifier
+
+    cfg = ClassifierConfig()
+    params = init_classifier(jax.random.PRNGKey(0), cfg)
+    n = 8192
+    theta = jnp.asarray(np.random.RandomState(0).rand(n, 3), jnp.float32)
+    x = jnp.asarray(np.random.RandomState(1).rand(n, 3), jnp.float32)
+    f = jax.jit(lambda t, xx: classifier_logit(params, t, xx))
+
+    def run():
+        f(theta, x).block_until_ready()
+
+    us = _bench(run)
+    rate = n / (us / 1e6)
+    print(f"#   classifier scoring: {rate/1e6:.2f} M evals/s")
+    return "perf_classifier_scoring", us, rate

@@ -1,0 +1,34 @@
+"""Serve a small model with batched requests through the continuous-batching
+engine (deliverable b's serving example).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.serving import ServeConfig, ServingEngine
+from repro.serving.engine import Request
+
+cfg = get_smoke_config("tinyllama-1.1b")
+params = M.init_params(jax.random.PRNGKey(0), cfg)
+engine = ServingEngine(cfg, params, ServeConfig(slots=4, max_len=96))
+
+rng = np.random.RandomState(0)
+for i in range(10):
+    prompt = rng.randint(0, cfg.vocab_size, rng.randint(3, 10)).tolist()
+    engine.submit(Request(rid=i, prompt=prompt, max_new_tokens=12))
+
+t0 = time.time()
+done = engine.run_until_drained()
+dt = time.time() - t0
+print(json.dumps({
+    "completed": len(done),
+    "tokens": engine.tokens_out,
+    "tok_per_s": round(engine.tokens_out / dt, 1),
+    "sample_output": done[0].output,
+}, indent=2))

@@ -1,0 +1,3 @@
+"""repro: GDAPS-JAX — data-grid access-profile simulation & calibration."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,213 @@
+"""Fault-tolerant sharded checkpointing (no orbax dependency).
+
+Layout on disk::
+
+    <dir>/step_000042/
+        manifest.json        # tree structure, shapes, dtypes, leaf->file map
+        leaf_00000.npy ...   # one .npy per leaf (host-gathered)
+        _COMPLETE            # commit marker written last
+    <dir>/latest             # text file naming the last committed step
+
+Guarantees:
+- **atomicity** — checkpoints are staged in a temp dir and committed by an
+  atomic rename + marker file; a crash mid-save never corrupts ``latest``.
+- **elastic restore** — arrays are saved as full (unsharded) host arrays and
+  re-sharded on load against whatever mesh/sharding the restoring job uses,
+  so the cluster size may change between save and restore.
+- **async save** — ``save(..., blocking=False)`` runs serialization on a
+  background thread after device->host transfer, keeping the train loop
+  running.
+- retention of the newest ``keep`` checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+from repro.utils import get_logger
+
+log = get_logger("checkpoint")
+
+PyTree = Any
+
+# numpy can't round-trip ml_dtypes (bfloat16 etc.) through .npy: store such
+# arrays as raw unsigned views and re-view on load using the manifest dtype.
+_EXT_DTYPES = {
+    "bfloat16": ml_dtypes.bfloat16,
+    "float8_e4m3fn": getattr(ml_dtypes, "float8_e4m3fn", None),
+    "float8_e5m2": getattr(ml_dtypes, "float8_e5m2", None),
+}
+_UINT_BY_SIZE = {1: np.uint8, 2: np.uint16, 4: np.uint32, 8: np.uint64}
+
+
+def _to_storable(arr: np.ndarray) -> Tuple[np.ndarray, str]:
+    name = str(arr.dtype)
+    if name in _EXT_DTYPES:
+        return arr.view(_UINT_BY_SIZE[arr.dtype.itemsize]), name
+    return arr, name
+
+
+def _from_storable(arr: np.ndarray, dtype_name: str) -> np.ndarray:
+    if dtype_name in _EXT_DTYPES:
+        return arr.view(_EXT_DTYPES[dtype_name])
+    return arr
+
+
+def _tree_flatten_with_paths(tree: PyTree) -> Tuple[List[Tuple[str, Any]], Any]:
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in leaves:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        out.append((key, leaf))
+    return out, treedef
+
+
+class CheckpointStore:
+    def __init__(self, directory: str, *, keep: int = 3) -> None:
+        self.directory = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: PyTree, *, blocking: bool = True) -> None:
+        """Persist a pytree of (possibly sharded) jax arrays."""
+        self.wait()  # one async save in flight at a time
+        leaves, _ = _tree_flatten_with_paths(tree)
+        # device -> host while still on the main thread (orders against the
+        # train loop); fully-addressable arrays only (single-controller).
+        host_leaves = [(k, np.asarray(v)) for k, v in leaves]
+
+        def _write():
+            final = os.path.join(self.directory, f"step_{step:08d}")
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            manifest: Dict[str, Any] = {"step": step, "leaves": []}
+            for i, (key, arr) in enumerate(host_leaves):
+                fname = f"leaf_{i:05d}.npy"
+                storable, dtype_name = _to_storable(arr)
+                np.save(os.path.join(tmp, fname), storable)
+                manifest["leaves"].append(
+                    {"key": key, "file": fname, "shape": list(arr.shape),
+                     "dtype": dtype_name}
+                )
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(manifest, f)
+            with open(os.path.join(tmp, "_COMPLETE"), "w") as f:
+                f.write("ok")
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            with open(os.path.join(self.directory, "latest.tmp"), "w") as f:
+                f.write(f"step_{step:08d}")
+            os.replace(
+                os.path.join(self.directory, "latest.tmp"),
+                os.path.join(self.directory, "latest"),
+            )
+            self._gc()
+            log.info("checkpoint step %d committed", step)
+
+        if blocking:
+            _write()
+        else:
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ------------------------------------------------------------------
+    def latest_step(self) -> Optional[int]:
+        path = os.path.join(self.directory, "latest")
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            name = f.read().strip()
+        ckpt = os.path.join(self.directory, name)
+        if not os.path.exists(os.path.join(ckpt, "_COMPLETE")):
+            log.warning("latest checkpoint %s incomplete; scanning", name)
+            return self._scan_latest()
+        return int(name.split("_")[1])
+
+    def _scan_latest(self) -> Optional[int]:
+        steps = []
+        for d in os.listdir(self.directory):
+            if d.startswith("step_") and os.path.exists(
+                os.path.join(self.directory, d, "_COMPLETE")
+            ):
+                steps.append(int(d.split("_")[1]))
+        return max(steps) if steps else None
+
+    def restore(
+        self,
+        template: PyTree,
+        *,
+        step: Optional[int] = None,
+        shardings: Optional[PyTree] = None,
+    ) -> Tuple[PyTree, int]:
+        """Restore into the structure of ``template``.
+
+        ``shardings`` (a matching pytree of NamedSharding) re-shards each
+        array for the *current* mesh — the elastic-restart path: the saved
+        arrays are full host arrays, so any device count works.
+        """
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.directory}")
+        ckpt = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(ckpt, "manifest.json")) as f:
+            manifest = json.load(f)
+        by_key = {e["key"]: e for e in manifest["leaves"]}
+
+        t_leaves, treedef = _tree_flatten_with_paths(template)
+        if shardings is not None:
+            s_leaves, _ = _tree_flatten_with_paths(shardings)
+            shard_by_key = {k: s for k, s in s_leaves}
+        else:
+            shard_by_key = {}
+
+        restored = []
+        for key, tmpl in t_leaves:
+            entry = by_key.get(key)
+            if entry is None:
+                raise KeyError(f"checkpoint missing leaf {key!r}")
+            arr = _from_storable(
+                np.load(os.path.join(ckpt, entry["file"])), entry["dtype"]
+            )
+            if tuple(arr.shape) != tuple(tmpl.shape):
+                raise ValueError(
+                    f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                    f"template {tuple(tmpl.shape)}"
+                )
+            sh = shard_by_key.get(key)
+            if sh is not None:
+                restored.append(jax.device_put(arr, sh))
+            else:
+                restored.append(
+                    jax.numpy.asarray(arr, dtype=tmpl.dtype)
+                )
+        tree = jax.tree_util.tree_unflatten(treedef, restored)
+        return tree, step
+
+    # ------------------------------------------------------------------
+    def _gc(self) -> None:
+        steps = sorted(
+            d for d in os.listdir(self.directory) if d.startswith("step_")
+            and not d.endswith(".tmp")
+        )
+        for d in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.directory, d), ignore_errors=True)

@@ -1,0 +1,43 @@
+"""Architecture config registry: ``get_config(arch_id)`` / ``list_archs()``.
+
+Each module defines ``CONFIG`` (the exact published numbers from the
+assignment) and ``smoke_config()`` (a reduced same-family config for CPU
+smoke tests).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ModelConfig
+
+_ARCHS = {
+    "qwen2.5-14b": "qwen2_5_14b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "minitron-8b": "minitron_8b",
+    "gemma3-27b": "gemma3_27b",
+    "internvl2-2b": "internvl2_2b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "hymba-1.5b": "hymba_1_5b",
+    "xlstm-350m": "xlstm_350m",
+    # the paper's own "architecture": the GDAPS calibration pipeline
+    "gdaps-wlcg": "gdaps_wlcg",
+}
+
+
+def list_archs() -> List[str]:
+    return [a for a in _ARCHS if a != "gdaps-wlcg"]
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; available: {sorted(_ARCHS)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCHS[arch]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_ARCHS[arch]}")
+    return mod.smoke_config()

@@ -1,0 +1,20 @@
+"""The paper's own 'architecture': the GDAPS WLCG calibration pipeline
+(production workload + AALR classifier + MCMC), exposed through the same
+registry so launchers can select it with --arch gdaps-wlcg."""
+from repro.models.config import ModelConfig
+
+# Not an LM; CONFIG carries the classifier topology for bookkeeping.
+CONFIG = ModelConfig(
+    name="gdaps-wlcg",
+    n_layers=4,  # classifier hidden layers
+    d_model=128,  # classifier width
+    n_heads=1,
+    n_kv_heads=1,
+    d_ff=0,
+    vocab_size=0,
+    source="paper Section 5",
+)
+
+
+def smoke_config() -> ModelConfig:
+    return CONFIG

@@ -1,0 +1,1 @@
+"""Core library: the GDAPS grid simulator + SBI calibration in JAX."""

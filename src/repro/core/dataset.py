@@ -1,0 +1,95 @@
+"""Observation datasets derived from simulation results.
+
+The paper treats every launched file access as an observation with fields
+(T, S, ConTh, ConPr) and fits the Section-3 regressions per access profile.
+This module slices :class:`~repro.core.engine.SimResult` into such datasets
+and provides the hourly partitioning used for the Fig.-3 time series.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import SimResult
+from repro.core.regression import OLSFit, fit_eq1, fit_eq2
+from repro.core.workload import ProfileTag
+
+__all__ = [
+    "ObsDataset",
+    "observations",
+    "fit_profile",
+    "hourly_coefficients",
+]
+
+
+class ObsDataset(NamedTuple):
+    transfer_time: jax.Array  # [N]
+    size_mb: jax.Array  # [N]
+    conth_mb: jax.Array  # [N]
+    conpr_mb: jax.Array  # [N]
+    valid: jax.Array  # [N] f32 mask (done legs of the requested profile)
+    start_tick: jax.Array  # [N] f32 (for time partitioning)
+
+
+def observations(
+    res: SimResult,
+    profile: Optional[int] = None,
+    *,
+    start_tick: Optional[jax.Array] = None,
+) -> ObsDataset:
+    """Build a masked observation dataset from a simulation result.
+
+    ``profile`` filters legs by :class:`ProfileTag`; ``None`` keeps all legs.
+    The mask convention keeps shapes static (jit/vmap-friendly) — downstream
+    regressions consume the mask as observation weights.
+    """
+    valid = res.done
+    if profile is not None:
+        valid = valid & (res.profile == profile)
+    if start_tick is None:
+        start_tick = jnp.zeros_like(res.transfer_time)
+    return ObsDataset(
+        transfer_time=res.transfer_time,
+        size_mb=res.size_mb,
+        conth_mb=res.conth_mb,
+        conpr_mb=res.conpr_mb,
+        valid=valid.astype(jnp.float32),
+        start_tick=start_tick,
+    )
+
+
+def fit_profile(ds: ObsDataset, profile: int) -> OLSFit:
+    """Fit the paper's regression appropriate for the profile: Eq. 1 for
+    remote access (3 regressors), Eq. 2 for placement/stage-in."""
+    if profile == ProfileTag.REMOTE:
+        return fit_eq1(ds.transfer_time, ds.size_mb, ds.conth_mb, ds.conpr_mb, ds.valid)
+    return fit_eq2(ds.transfer_time, ds.size_mb, ds.conpr_mb, ds.valid)
+
+
+def hourly_coefficients(
+    res: SimResult,
+    profile: int,
+    *,
+    start_ticks: jax.Array,
+    ticks_per_partition: int = 3600,
+    n_partitions: int = 24,
+) -> np.ndarray:
+    """Fig. 3: partition observations by start hour and fit Eq. 2 per
+    partition. Returns ``[n_partitions, 2]`` (a, b) with NaN rows for
+    partitions with fewer than 3 usable observations."""
+    base = observations(res, profile)
+    out = np.full((n_partitions, 2), np.nan, np.float64)
+    start = np.asarray(start_ticks)
+    for h in range(n_partitions):
+        in_part = (start >= h * ticks_per_partition) & (
+            start < (h + 1) * ticks_per_partition
+        )
+        mask = base.valid * jnp.asarray(in_part, jnp.float32)
+        if float(mask.sum()) < 3:
+            continue
+        fit = fit_eq2(base.transfer_time, base.size_mb, base.conpr_mb, mask)
+        out[h] = np.asarray(fit.coef, np.float64)
+    return out

@@ -1,0 +1,350 @@
+"""Vectorized GDAPS tick engine.
+
+The SimPy process-based discrete-event simulator of the paper is executed
+here as a dense, synchronous tick program (one tick = one second, exactly the
+paper's chunk granularity): the compiled :class:`~repro.core.workload.LegTable`
+becomes constant one-hot incidence matrices, per-tick fair-share bandwidth
+allocation becomes three small matmuls (MXU work), and the tick loop is a
+``jax.lax.while_loop``. Batches of stochastic simulations are ``vmap``-ed and
+sharded over the device mesh by the calibration layer.
+
+Semantics are identical to an event-driven execution at 1-tick resolution;
+``repro.core.refsim`` provides the plain-Python oracle used by the tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.workload import LegTable
+from repro.kernels import ops
+
+__all__ = ["SimSpec", "SimParams", "SimResult", "simulate", "simulate_batch"]
+
+
+class SimSpec(NamedTuple):
+    """Static (weakly-typed, jnp) arrays describing one compiled campaign."""
+
+    size_mb: jax.Array  # [T] f32
+    release: jax.Array  # [T] i32
+    dep: jax.Array  # [T] i32 (-1 = none)
+    profile: jax.Array  # [T] i32 ProfileTag
+    protocol_id: jax.Array  # [T] i32
+    leg_proc: jax.Array  # [T, P] f32 one-hot
+    proc_link: jax.Array  # [P, L] f32 one-hot
+    leg_link: jax.Array  # [T, L] f32 one-hot
+    bandwidth: jax.Array  # [L] f32 MB/tick
+    bg_period: jax.Array  # [L] i32
+    max_ticks: int
+
+    @property
+    def n_legs(self) -> int:
+        return self.size_mb.shape[0]
+
+    @property
+    def n_links(self) -> int:
+        return self.bandwidth.shape[0]
+
+    @staticmethod
+    def from_table(table: LegTable, max_ticks: Optional[int] = None) -> "SimSpec":
+        return SimSpec(
+            size_mb=jnp.asarray(table.size_mb),
+            release=jnp.asarray(table.release),
+            dep=jnp.asarray(table.dep),
+            profile=jnp.asarray(table.profile),
+            protocol_id=jnp.asarray(table.protocol_id),
+            leg_proc=jnp.asarray(table.leg_proc_onehot()),
+            proc_link=jnp.asarray(table.proc_link_onehot()),
+            leg_link=jnp.asarray(table.leg_link_onehot()),
+            bandwidth=jnp.asarray(table.links.bandwidth),
+            bg_period=jnp.asarray(table.links.bg_period),
+            max_ticks=(
+                int(max_ticks)
+                if max_ticks is not None
+                else table.max_ticks_upper_bound()
+            ),
+        )
+
+
+class SimParams(NamedTuple):
+    """Runtime simulator parameters (the calibration target ``theta`` maps
+    onto these without retracing: per-leg keep fraction and per-link
+    background-load distribution). ``enabled`` masks legs out of the
+    campaign entirely (born-done; used by the access-profile optimizer to
+    evaluate candidate assignments against one static super-table)."""
+
+    keep_frac: jax.Array  # [T] f32 = 1 - overhead per leg
+    bg_mu: jax.Array  # [L] f32
+    bg_sigma: jax.Array  # [L] f32
+    enabled: Optional[jax.Array] = None  # [T] bool (None = all enabled)
+
+
+class SimResult(NamedTuple):
+    """Per-leg observation record (the paper's (T, S, ConTh, ConPr) tuples)."""
+
+    transfer_time: jax.Array  # [T] f32 ticks (active duration)
+    size_mb: jax.Array  # [T] f32
+    conth_mb: jax.Array  # [T] f32 traffic of sibling threads during window
+    conpr_mb: jax.Array  # [T] f32 traffic of other campaign procs on the link
+    done: jax.Array  # [T] bool
+    ticks: jax.Array  # [] i32 total ticks simulated
+    profile: jax.Array  # [T] i32
+    start_tick: jax.Array  # [T] f32 first active tick per leg
+
+
+class _Carry(NamedTuple):
+    t: jax.Array
+    remaining: jax.Array
+    done: jax.Array
+    started: jax.Array
+    t_start: jax.Array
+    t_end: jax.Array
+    conth: jax.Array
+    conpr: jax.Array
+    bg: jax.Array
+    key: jax.Array
+
+
+def _leap_body(spec: SimSpec, params: SimParams, backend: Optional[str], c: _Carry) -> _Carry:
+    """Event-leap tick body (beyond-paper, semantics-exact).
+
+    Between events (a leg completing, a release tick, a background-load
+    resample) the fair-share rates are constant, so a whole inter-event
+    window of ``dt`` ticks is applied in closed form: ``dt-1`` rate-exact
+    ticks plus the (possibly clipped) final tick. One ``grid_tick`` rate
+    evaluation plus two small one-hot matmuls per window replaces ``dt``
+    full tick evaluations; results are bit-comparable to the tick loop for
+    deterministic background loads (see tests/benchmarks: ~10x).
+    """
+    t = c.t
+    # background-load resample due at this tick (same order as _tick_body)
+    key, sub = jax.random.split(c.key)
+    noise = jax.random.normal(sub, c.bg.shape, jnp.float32)
+    fresh = jnp.maximum(params.bg_mu + params.bg_sigma * noise, 0.0)
+    bg = jnp.where(t % spec.bg_period == 0, fresh, c.bg)
+
+    dep_done = jnp.where(spec.dep >= 0, c.done[jnp.maximum(spec.dep, 0)], True)
+    active = (~c.done) & (spec.release <= t) & dep_done
+    a = active.astype(jnp.float32)
+
+    # unclipped fair-share rates (chunk per tick) under the current loads
+    inf_rem = jnp.full_like(c.remaining, jnp.inf)
+    rate, proc_rate, link_rate = ops.grid_tick(
+        a, inf_rem, params.keep_frac, bg, spec.bandwidth,
+        spec.leg_proc, spec.proc_link, spec.leg_link, backend=backend,
+    )
+
+    # ticks until each event class; the window includes its event tick
+    ttc = jnp.where(
+        active & (rate > 0), jnp.ceil(c.remaining / jnp.maximum(rate, 1e-30)),
+        jnp.inf,
+    )
+    pending = (~c.done) & (spec.release > t)
+    t_rel = jnp.where(pending, (spec.release - t).astype(jnp.float32), jnp.inf)
+    t_bg = (spec.bg_period - t % spec.bg_period).astype(jnp.float32)  # >= 1
+    dt = jnp.minimum(jnp.minimum(jnp.min(ttc), jnp.min(t_rel)), jnp.min(t_bg))
+    dt = jnp.where(jnp.isfinite(dt), jnp.maximum(dt, 1.0), 1.0)
+
+    # dt-1 rate-exact ticks + the final (possibly clipped) tick
+    rem_mid = c.remaining - a * rate * (dt - 1.0)
+    xfer_f = jnp.minimum(rem_mid, rate) * a
+    proc_xfer_f = xfer_f @ spec.leg_proc
+    link_xfer_f = xfer_f @ spec.leg_link
+    remaining = rem_mid - xfer_f
+
+    own_proc_rate = spec.leg_proc @ proc_rate
+    own_link_rate = spec.leg_link @ link_rate
+    own_proc_f = spec.leg_proc @ proc_xfer_f
+    own_link_f = spec.leg_link @ link_xfer_f
+    conth = c.conth + a * ((own_proc_rate - rate) * (dt - 1.0)
+                           + (own_proc_f - xfer_f))
+    conpr = c.conpr + a * ((own_link_rate - own_proc_rate) * (dt - 1.0)
+                           + (own_link_f - own_proc_f))
+
+    newly_done = active & (remaining <= 1e-6)
+    done = c.done | newly_done
+    t_start = jnp.where(active & (~c.started), t, c.t_start)
+    started = c.started | active
+    t_end = jnp.where(newly_done, t + dt.astype(jnp.int32), c.t_end)
+
+    return _Carry(
+        t=t + dt.astype(jnp.int32),
+        remaining=remaining,
+        done=done,
+        started=started,
+        t_start=t_start,
+        t_end=t_end,
+        conth=conth,
+        conpr=conpr,
+        bg=bg,
+        key=key,
+    )
+
+
+def _tick_body(spec: SimSpec, params: SimParams, backend: Optional[str], c: _Carry) -> _Carry:
+    t = c.t
+    # background-load resampling, once per link update period (paper Sec. 4)
+    key, sub = jax.random.split(c.key)
+    noise = jax.random.normal(sub, c.bg.shape, jnp.float32)
+    fresh = jnp.maximum(params.bg_mu + params.bg_sigma * noise, 0.0)
+    bg = jnp.where(t % spec.bg_period == 0, fresh, c.bg)
+
+    dep_done = jnp.where(spec.dep >= 0, c.done[jnp.maximum(spec.dep, 0)], True)
+    active = (~c.done) & (spec.release <= t) & dep_done
+    a = active.astype(jnp.float32)
+
+    xfer, proc_xfer, link_xfer = ops.grid_tick(
+        a,
+        c.remaining,
+        params.keep_frac,
+        bg,
+        spec.bandwidth,
+        spec.leg_proc,
+        spec.proc_link,
+        spec.leg_link,
+        backend=backend,
+    )
+
+    remaining = c.remaining - xfer
+    newly_done = active & (remaining <= 1e-6)
+    done = c.done | newly_done
+
+    # concurrency traffic accumulators (paper Eq. 1 regressors):
+    #   ConTh — traffic of the *other threads of the same process* while the
+    #           leg is active;
+    #   ConPr — traffic of *other campaign processes on the same link*.
+    own_proc_xfer = spec.leg_proc @ proc_xfer  # [T]
+    own_link_xfer = spec.leg_link @ link_xfer  # [T]
+    conth = c.conth + a * (own_proc_xfer - xfer)
+    conpr = c.conpr + a * (own_link_xfer - own_proc_xfer)
+
+    t_start = jnp.where(active & (~c.started), t, c.t_start)
+    started = c.started | active
+    t_end = jnp.where(newly_done, t + 1, c.t_end)
+
+    return _Carry(
+        t=t + 1,
+        remaining=remaining,
+        done=done,
+        started=started,
+        t_start=t_start,
+        t_end=t_end,
+        conth=conth,
+        conpr=conpr,
+        bg=bg,
+        key=key,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "leap"))
+def simulate(
+    spec: SimSpec,
+    params: SimParams,
+    key: jax.Array,
+    *,
+    backend: Optional[str] = None,
+    leap: bool = False,
+) -> SimResult:
+    """Run one stochastic simulation of the campaign.
+
+    Returns per-leg observations; legs that never finish within
+    ``spec.max_ticks`` have ``done=False`` and an undefined transfer time.
+    ``leap=True`` enables the exact event-leap acceleration (identical
+    results for deterministic background loads; statistically equivalent —
+    same per-event sampling — for stochastic ones).
+    """
+    n = spec.n_legs
+    born_done = (
+        jnp.zeros((n,), bool)
+        if params.enabled is None
+        else ~params.enabled.astype(bool)
+    )
+    init = _Carry(
+        t=jnp.zeros((), jnp.int32),
+        remaining=spec.size_mb,
+        done=born_done,
+        started=jnp.zeros((n,), bool),
+        t_start=jnp.zeros((n,), jnp.int32),
+        t_end=jnp.zeros((n,), jnp.int32),
+        conth=jnp.zeros((n,), jnp.float32),
+        conpr=jnp.zeros((n,), jnp.float32),
+        bg=jnp.zeros((spec.n_links,), jnp.float32),
+        key=key,
+    )
+
+    if leap:
+        body = functools.partial(_leap_body, spec, params, backend)
+    else:
+        body = functools.partial(_tick_body, spec, params, backend)
+
+    def cond(c: _Carry) -> jax.Array:
+        return (c.t < spec.max_ticks) & (~jnp.all(c.done))
+
+    final = jax.lax.while_loop(cond, body, init)
+    return SimResult(
+        transfer_time=(final.t_end - final.t_start).astype(jnp.float32),
+        size_mb=spec.size_mb,
+        conth_mb=final.conth,
+        conpr_mb=final.conpr,
+        done=final.done,
+        ticks=final.t,
+        profile=spec.profile,
+        start_tick=final.t_start.astype(jnp.float32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "leap"))
+def simulate_batch(
+    spec: SimSpec,
+    params: SimParams,
+    keys: jax.Array,  # [B, 2] PRNG keys
+    *,
+    backend: Optional[str] = None,
+    leap: bool = False,
+) -> SimResult:
+    """Vectorized batch of stochastic simulations.
+
+    ``params`` fields may carry a leading batch dim (one theta per sim) or be
+    unbatched (shared theta, e.g. the 16k validation runs of Section 5).
+    """
+    batched_params = params.keep_frac.ndim == 2
+    in_axes = (0 if batched_params else None, 0)
+    return jax.vmap(
+        lambda p, k: simulate(spec, p, k, backend=backend, leap=leap),
+        in_axes=in_axes,
+    )(params, keys)
+
+
+def make_params(
+    table: LegTable,
+    *,
+    overhead: Optional[float] = None,
+    bg_mu: Optional[float] = None,
+    bg_sigma: Optional[float] = None,
+    protocol: Optional[str] = None,
+) -> SimParams:
+    """Build :class:`SimParams` from a leg table, optionally overriding the
+    overhead of one protocol (or all legs) and the background-load moments of
+    every link — the knobs the paper calibrates (theta)."""
+    keep = table.keep_frac.astype(np.float32).copy()
+    if overhead is not None:
+        if protocol is None:
+            keep[:] = 1.0 - overhead
+        else:
+            pid = table.protocol_names.index(protocol)
+            keep[table.protocol_id == pid] = 1.0 - overhead
+    links = table.links
+    mu = links.bg_mu if bg_mu is None else np.full_like(links.bg_mu, bg_mu)
+    sigma = (
+        links.bg_sigma if bg_sigma is None else np.full_like(links.bg_sigma, bg_sigma)
+    )
+    return SimParams(
+        keep_frac=jnp.asarray(keep),
+        bg_mu=jnp.asarray(mu),
+        bg_sigma=jnp.asarray(sigma),
+    )

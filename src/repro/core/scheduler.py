@@ -1,0 +1,220 @@
+"""Beyond-paper: data-access-profile optimization on top of the simulator.
+
+The paper's stated future work is "evolutionary optimization of data access
+patterns in bags of jobs with the objective to minimize the joint data
+transfer time", with fitness evaluated on GDAPS. This module implements it:
+
+- Every file access lists *candidate* realizations (profile x replica source).
+- All candidates of all accesses are compiled into one static **super-table**
+  (so shapes stay fixed for jit/vmap), and an assignment enables exactly one
+  candidate per access via the engine's ``enabled`` mask.
+- A simple (mu + lambda) evolutionary strategy mutates assignments; fitness is
+  the simulated campaign makespan (optionally + mean transfer time), evaluated
+  for the whole population in one ``vmap``-ed batch of simulations.
+
+This is the piece that "reduces job wait times": it picks, per job, whichever
+combination of data-placement / stage-in / remote access avoids the currently
+bottlenecked links.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import SimParams, SimSpec, simulate
+from repro.core.topology import Grid
+from repro.core.workload import (
+    AccessProfileKind,
+    Campaign,
+    FileAccess,
+    Job,
+    LegTable,
+    Replica,
+    compile_campaign,
+)
+
+__all__ = ["CandidateAccess", "SuperTable", "build_super_table", "optimize_profiles"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidateAccess:
+    """One file access with its candidate realizations."""
+
+    job: int  # job index within the bag
+    candidates: Tuple[FileAccess, ...]
+
+
+class SuperTable(NamedTuple):
+    spec: SimSpec
+    table: LegTable
+    # candidate -> legs mapping (ragged, padded with -1): [n_access, n_cand, 2]
+    cand_legs: np.ndarray
+    n_access: int
+    n_cand: int
+    cands_per_access: np.ndarray  # [n_access] i64 actual candidate counts
+
+
+def build_super_table(
+    grid: Grid,
+    worker_nodes: Sequence[str],
+    accesses: Sequence[CandidateAccess],
+    *,
+    max_ticks: Optional[int] = None,
+) -> SuperTable:
+    """Compile the union of all candidates into one leg table.
+
+    Candidate k of access i maps to 1 (remote/stage-in) or 2 (placement)
+    legs; ``cand_legs[i, k]`` holds their leg ids (-1 padding).
+    """
+    jobs_accs: List[List[FileAccess]] = [[] for _ in range(max(a.job for a in accesses) + 1)]
+    # interleave all candidates as real accesses; record observation order
+    order: List[Tuple[int, int]] = []  # (access idx, candidate idx) per appended access
+    for i, acc in enumerate(accesses):
+        for k, cand in enumerate(acc.candidates):
+            jobs_accs[acc.job].append(cand)
+            order.append((i, k))
+    jobs = tuple(
+        Job(worker_node=worker_nodes[j], accesses=tuple(a), name=f"job{j}")
+        for j, a in enumerate(jobs_accs)
+    )
+    campaign = Campaign(jobs, name="super")
+    table = compile_campaign(grid, campaign)
+
+    n_access = len(accesses)
+    n_cand = max(len(a.candidates) for a in accesses)
+    cand_legs = np.full((n_access, n_cand, 2), -1, np.int64)
+    # obs ids were assigned in compile order: walk them in the same order
+    # placement candidates produce two observations (two legs)
+    legs_by_obs: List[List[int]] = [[] for _ in range(int(table.obs_id.max()) + 1)]
+    for leg, obs in enumerate(table.obs_id):
+        legs_by_obs[int(obs)].append(leg)
+    # compile_campaign iterates jobs then accesses in order; rebuild that walk
+    obs_ptr = 0
+    per_job_orders: List[List[Tuple[int, int]]] = [[] for _ in range(len(jobs_accs))]
+    ptr = 0
+    for i, acc in enumerate(accesses):
+        for k, _ in enumerate(acc.candidates):
+            per_job_orders[accesses[i].job].append((i, k))
+    walk: List[Tuple[int, int]] = []
+    for j in range(len(jobs_accs)):
+        walk.extend(per_job_orders[j])
+    for (i, k) in walk:
+        cand = accesses[i].candidates[k]
+        n_obs_for_cand = 2 if cand.profile is AccessProfileKind.DATA_PLACEMENT else 1
+        legs: List[int] = []
+        for _ in range(n_obs_for_cand):
+            legs.extend(legs_by_obs[obs_ptr])
+            obs_ptr += 1
+        for s, leg in enumerate(legs[:2]):
+            cand_legs[i, k, s] = leg
+    spec = SimSpec.from_table(table, max_ticks=max_ticks)
+    return SuperTable(
+        spec=spec,
+        table=table,
+        cand_legs=cand_legs,
+        n_access=n_access,
+        n_cand=n_cand,
+        cands_per_access=np.array([len(a.candidates) for a in accesses], np.int64),
+    )
+
+
+def _assignment_mask(st: SuperTable, assign: jax.Array) -> jax.Array:
+    """assign: [n_access] int -> enabled mask over legs."""
+    n_legs = st.table.n_legs
+    assign = assign % jnp.asarray(st.cands_per_access)  # ragged-safe
+    cand_legs = jnp.asarray(st.cand_legs)  # [A, K, 2]
+    chosen = jnp.take_along_axis(
+        cand_legs, assign[:, None, None].astype(jnp.int32), axis=1
+    )[:, 0]  # [A, 2]
+    flat = chosen.reshape(-1)
+    onehot = jnp.zeros((n_legs + 1,), bool).at[jnp.where(flat >= 0, flat, n_legs)].set(True)
+    return onehot[:n_legs]
+
+
+def _fitness(
+    st: SuperTable,
+    base_params: SimParams,
+    assign: jax.Array,
+    key: jax.Array,
+    makespan_weight: float = 1.0,
+    mean_weight: float = 0.1,
+) -> jax.Array:
+    mask = _assignment_mask(st, assign)
+    params = SimParams(
+        keep_frac=base_params.keep_frac,
+        bg_mu=base_params.bg_mu,
+        bg_sigma=base_params.bg_sigma,
+        enabled=mask,
+    )
+    res = simulate(st.spec, params, key)
+    m = mask.astype(jnp.float32)
+    t_end = res.start_tick + res.transfer_time
+    makespan = jnp.max(t_end * m)
+    mean_t = jnp.sum(res.transfer_time * m) / jnp.maximum(jnp.sum(m), 1.0)
+    # unfinished legs dominate the penalty
+    unfinished = jnp.sum((~res.done) & (m > 0))
+    return (
+        makespan_weight * makespan
+        + mean_weight * mean_t
+        + 1e6 * unfinished.astype(jnp.float32)
+    )
+
+
+def optimize_profiles(
+    st: SuperTable,
+    base_params: SimParams,
+    key: jax.Array,
+    *,
+    population: int = 32,
+    generations: int = 12,
+    elite: int = 8,
+    mutate_p: float = 0.15,
+    antithetic_sims: int = 1,
+) -> Tuple[np.ndarray, float, List[float]]:
+    """(mu + lambda) evolutionary search over candidate assignments.
+
+    Returns (best assignment [n_access], best fitness, per-generation best).
+    """
+    n_access, n_cand = st.n_access, st.n_cand
+    key, k0 = jax.random.split(key)
+    pop = jax.random.randint(k0, (population, n_access), 0, n_cand)
+
+    fitness_one = functools.partial(_fitness, st, base_params)
+
+    @jax.jit
+    def eval_pop(pop: jax.Array, key: jax.Array) -> jax.Array:
+        keys = jax.random.split(key, antithetic_sims)
+        def per_sim(k):
+            ks = jax.random.split(k, pop.shape[0])
+            return jax.vmap(fitness_one)(pop, ks)
+        return jnp.mean(jax.vmap(per_sim)(keys), axis=0)
+
+    @jax.jit
+    def next_gen(pop: jax.Array, fit: jax.Array, key: jax.Array) -> jax.Array:
+        order = jnp.argsort(fit)
+        elites = pop[order[:elite]]
+        k1, k2, k3 = jax.random.split(key, 3)
+        parents = elites[jax.random.randint(k1, (population - elite,), 0, elite)]
+        flip = jax.random.uniform(k2, parents.shape) < mutate_p
+        rand = jax.random.randint(k3, parents.shape, 0, n_cand)
+        children = jnp.where(flip, rand, parents)
+        return jnp.concatenate([elites, children], axis=0)
+
+    history: List[float] = []
+    best_fit = np.inf
+    best_assign = np.asarray(pop[0])
+    for g in range(generations):
+        key, ke, kn = jax.random.split(key, 3)
+        fit = eval_pop(pop, ke)
+        i = int(jnp.argmin(fit))
+        if float(fit[i]) < best_fit:
+            best_fit = float(fit[i])
+            best_assign = np.asarray(pop[i])
+        history.append(float(jnp.min(fit)))
+        pop = next_gen(pop, fit, kn)
+    return best_assign, best_fit, history

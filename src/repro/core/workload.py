@@ -1,0 +1,342 @@
+"""Workload model: replicas, access profiles, jobs, campaigns.
+
+A campaign compiles into a dense **leg table**. A *leg* is one point-to-point
+transfer over one link:
+
+- ``remote`` access       -> 1 leg  (remote SE -> worker node, 1 thread of the
+                                     job's streaming process on that link)
+- ``stage-in``            -> 1 leg  (local SE -> worker node, own process)
+- ``data-placement``      -> 2 legs (remote SE -> local SE placement leg with
+                                     its own process, then a dependent
+                                     stage-in leg local SE -> worker node)
+
+Process semantics follow the paper exactly: when employing data-placement or
+stage-in, *each file is transferred by an individual process*; a remote-access
+job runs **one streaming process per (job, link)** whose concurrently active
+legs are its *threads*.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.topology import Grid, LinkTable
+
+__all__ = [
+    "AccessProfileKind",
+    "Replica",
+    "FileAccess",
+    "Job",
+    "Campaign",
+    "LegTable",
+    "compile_campaign",
+    "wlcg_production_workload",
+    "ProfileTag",
+]
+
+
+class AccessProfileKind(enum.Enum):
+    DATA_PLACEMENT = "data-placement"
+    STAGE_IN = "stage-in"
+    REMOTE = "remote"
+
+
+class ProfileTag:
+    """Integer tags for per-leg profile labels in the compiled table."""
+
+    PLACEMENT = 0  # remote SE -> local SE (gsiftp-style, own process)
+    STAGE_IN = 1  # local SE -> WN scratch (xrdcp-style, own process)
+    REMOTE = 2  # remote SE -> WN stream (webdav-style, thread of job process)
+
+
+@dataclasses.dataclass(frozen=True)
+class Replica:
+    """A realization of a file persisted at a storage element."""
+
+    size_mb: float
+    storage_element: str
+
+    def __post_init__(self) -> None:
+        if self.size_mb <= 0:
+            raise ValueError(f"replica size must be positive: {self.size_mb}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FileAccess:
+    """One input-file access of a job with a chosen access profile."""
+
+    replica: Replica
+    profile: AccessProfileKind
+    protocol: str
+    release_tick: int = 0
+    # for DATA_PLACEMENT: which local SE receives the replica and which
+    # protocol stages it into the worker node afterwards.
+    local_storage_element: Optional[str] = None
+    stagein_protocol: str = "xrdcp"
+
+
+@dataclasses.dataclass(frozen=True)
+class Job:
+    """A computational job pinned to a worker node with assigned replicas."""
+
+    worker_node: str
+    accesses: Tuple[FileAccess, ...]
+    name: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class Campaign:
+    jobs: Tuple[Job, ...]
+    name: str = "campaign"
+
+
+@dataclasses.dataclass
+class LegTable:
+    """Dense arrays describing every transfer leg of a campaign.
+
+    All arrays have length ``n_legs`` unless stated otherwise. One-hot
+    incidence matrices are provided for the MXU-friendly segment reductions
+    used by the tick engine / ``grid_tick`` kernel.
+    """
+
+    link_id: np.ndarray  # [T] i32
+    proc_id: np.ndarray  # [T] i32 (dense process numbering)
+    size_mb: np.ndarray  # [T] f32
+    release: np.ndarray  # [T] i32 eligible tick
+    dep: np.ndarray  # [T] i32 prerequisite leg id or -1
+    keep_frac: np.ndarray  # [T] f32 = 1 - protocol overhead
+    protocol_id: np.ndarray  # [T] i32 (index into protocol_names)
+    profile: np.ndarray  # [T] i32 ProfileTag
+    job_id: np.ndarray  # [T] i32
+    obs_id: np.ndarray  # [T] i32 observation (file access) id
+    protocol_names: List[str]
+    links: LinkTable
+    n_procs: int
+
+    @property
+    def n_legs(self) -> int:
+        return int(self.link_id.shape[0])
+
+    @property
+    def n_links(self) -> int:
+        return self.links.n_links
+
+    # one-hot incidence matrices (float32) -------------------------------
+    def leg_proc_onehot(self) -> np.ndarray:  # [T, P]
+        m = np.zeros((self.n_legs, self.n_procs), np.float32)
+        m[np.arange(self.n_legs), self.proc_id] = 1.0
+        return m
+
+    def proc_link_onehot(self) -> np.ndarray:  # [P, L]
+        m = np.zeros((self.n_procs, self.n_links), np.float32)
+        # every process lives on exactly one link by construction
+        m[self.proc_id, self.link_id] = 1.0
+        return m
+
+    def leg_link_onehot(self) -> np.ndarray:  # [T, L]
+        m = np.zeros((self.n_legs, self.n_links), np.float32)
+        m[np.arange(self.n_legs), self.link_id] = 1.0
+        return m
+
+    def max_ticks_upper_bound(self, min_share_mb: float = 0.05) -> int:
+        """A safe cap on simulation length: every leg would finish even if it
+        only ever received ``min_share_mb`` per tick, run serially."""
+        total = float(self.size_mb.sum())
+        return int(total / min_share_mb) + int(self.release.max()) + 16
+
+
+def compile_campaign(grid: Grid, campaign: Campaign) -> LegTable:
+    """Compile a campaign against a grid into the dense leg table."""
+    link_table = grid.link_table()
+    link_index = {name: i for i, name in enumerate(link_table.names)}
+    proto_names = sorted(grid.protocols.keys())
+    proto_index = {n: i for i, n in enumerate(proto_names)}
+
+    link_id: List[int] = []
+    proc_id: List[int] = []
+    size_mb: List[float] = []
+    release: List[int] = []
+    dep: List[int] = []
+    keep: List[float] = []
+    proto_id: List[int] = []
+    profile: List[int] = []
+    job_id: List[int] = []
+    obs_id: List[int] = []
+
+    n_procs = 0
+    n_obs = 0
+    # remote-access streaming processes are shared per (job, link)
+    for j, job in enumerate(campaign.jobs):
+        stream_proc: Dict[int, int] = {}
+        wn = job.worker_node
+        for acc in job.accesses:
+            rep = acc.replica
+            proto = grid.protocols[acc.protocol]
+            if acc.profile is AccessProfileKind.REMOTE:
+                lid = link_index[(rep.storage_element, wn)]
+                if lid not in stream_proc:
+                    stream_proc[lid] = n_procs
+                    n_procs += 1
+                link_id.append(lid)
+                proc_id.append(stream_proc[lid])
+                size_mb.append(rep.size_mb)
+                release.append(acc.release_tick)
+                dep.append(-1)
+                keep.append(1.0 - proto.overhead)
+                proto_id.append(proto_index[acc.protocol])
+                profile.append(ProfileTag.REMOTE)
+                job_id.append(j)
+                obs_id.append(n_obs)
+                n_obs += 1
+            elif acc.profile is AccessProfileKind.STAGE_IN:
+                lid = link_index[(rep.storage_element, wn)]
+                link_id.append(lid)
+                proc_id.append(n_procs)
+                n_procs += 1
+                size_mb.append(rep.size_mb)
+                release.append(acc.release_tick)
+                dep.append(-1)
+                keep.append(1.0 - proto.overhead)
+                proto_id.append(proto_index[acc.protocol])
+                profile.append(ProfileTag.STAGE_IN)
+                job_id.append(j)
+                obs_id.append(n_obs)
+                n_obs += 1
+            elif acc.profile is AccessProfileKind.DATA_PLACEMENT:
+                local_se = acc.local_storage_element
+                if local_se is None:
+                    locals_ = grid.local_storage_elements(wn)
+                    if not locals_:
+                        raise ValueError(
+                            f"no local storage element for worker node {wn!r}"
+                        )
+                    local_se = locals_[0]
+                # leg 1: remote SE -> local SE, own process
+                lid1 = link_index[(rep.storage_element, local_se)]
+                placement_leg = len(link_id)
+                link_id.append(lid1)
+                proc_id.append(n_procs)
+                n_procs += 1
+                size_mb.append(rep.size_mb)
+                release.append(acc.release_tick)
+                dep.append(-1)
+                keep.append(1.0 - proto.overhead)
+                proto_id.append(proto_index[acc.protocol])
+                profile.append(ProfileTag.PLACEMENT)
+                job_id.append(j)
+                obs_id.append(n_obs)
+                n_obs += 1
+                # leg 2: local SE -> WN, own process, depends on leg 1
+                sproto = grid.protocols[acc.stagein_protocol]
+                lid2 = link_index[(local_se, wn)]
+                link_id.append(lid2)
+                proc_id.append(n_procs)
+                n_procs += 1
+                size_mb.append(rep.size_mb)
+                release.append(acc.release_tick)
+                dep.append(placement_leg)
+                keep.append(1.0 - sproto.overhead)
+                proto_id.append(proto_index[acc.stagein_protocol])
+                profile.append(ProfileTag.STAGE_IN)
+                job_id.append(j)
+                obs_id.append(n_obs)
+                n_obs += 1
+            else:  # pragma: no cover - enum exhaustive
+                raise ValueError(f"unknown profile {acc.profile}")
+
+    if not link_id:
+        raise ValueError("campaign compiles to an empty leg table")
+
+    return LegTable(
+        link_id=np.array(link_id, np.int32),
+        proc_id=np.array(proc_id, np.int32),
+        size_mb=np.array(size_mb, np.float32),
+        release=np.array(release, np.int32),
+        dep=np.array(dep, np.int32),
+        keep_frac=np.array(keep, np.float32),
+        protocol_id=np.array(proto_id, np.int32),
+        profile=np.array(profile, np.int32),
+        job_id=np.array(job_id, np.int32),
+        obs_id=np.array(obs_id, np.int32),
+        protocol_names=proto_names,
+        links=link_table,
+        n_procs=n_procs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The paper's production workload (Section 5)
+# ---------------------------------------------------------------------------
+
+def wlcg_production_workload(
+    *,
+    n_waves: int = 26,
+    wave_period_ticks: int = 900,
+    max_jobs: int = 12,
+    max_threads: int = 4,
+    min_size_mb: float = 300.0,
+    max_size_mb: float = 3000.0,
+    n_observations: int = 106,
+    link_bandwidth: float = 1250.0,  # 10,000 Mbps estimate from the paper
+    bg_update_period: int = 60,
+    seed: int = 0,
+) -> Tuple[Grid, Campaign]:
+    """Reconstruct the WLCG production workload of Section 5.
+
+    1-12 concurrent jobs on one CERN worker node initiate remote (WebDAV)
+    accesses to ``GRIF-LPNHE_SCRATCHDISK`` once per 15 minutes during
+    28.04.2018 00:00-06:15 (26 waves); each job streams up to 4 concurrent
+    files of 300MB-3GB. Sampling stops at ``n_observations`` file accesses
+    (the paper derives 106 observations).
+    """
+    rng = np.random.RandomState(seed)
+    grid = Grid()
+    grid.add_data_center("CERN")
+    grid.add_data_center("GRIF-LPNHE")
+    grid.add_storage_element("GRIF-LPNHE_SCRATCHDISK", "GRIF-LPNHE")
+    grid.add_storage_element("CERN-PROD_SCRATCHDISK", "CERN")
+    for j in range(max_jobs):
+        grid.add_worker_node(f"cern-wn{j:02d}", "CERN")
+    # one worker node hosts all jobs in the paper; jobs on the same node share
+    # the node's WAN link. We model the shared node link explicitly:
+    grid.add_link(
+        "GRIF-LPNHE_SCRATCHDISK",
+        "cern-wn00",
+        bandwidth=link_bandwidth,
+        bg_update_period=bg_update_period,
+    )
+
+    accesses_per_job: List[List[FileAccess]] = [[] for _ in range(max_jobs)]
+    n_obs = 0
+    for wave in range(n_waves):
+        if n_obs >= n_observations:
+            break
+        t0 = wave * wave_period_ticks
+        n_jobs = int(rng.randint(1, max_jobs + 1))
+        for j in range(n_jobs):
+            if n_obs >= n_observations:
+                break
+            n_threads = int(rng.randint(1, max_threads + 1))
+            for _ in range(n_threads):
+                if n_obs >= n_observations:
+                    break
+                size = float(rng.uniform(min_size_mb, max_size_mb))
+                accesses_per_job[j].append(
+                    FileAccess(
+                        replica=Replica(size, "GRIF-LPNHE_SCRATCHDISK"),
+                        profile=AccessProfileKind.REMOTE,
+                        protocol="webdav",
+                        release_tick=t0,
+                    )
+                )
+                n_obs += 1
+
+    jobs = tuple(
+        Job(worker_node="cern-wn00", accesses=tuple(accs), name=f"job{j}")
+        for j, accs in enumerate(accesses_per_job)
+        if accs
+    )
+    return grid, Campaign(jobs=jobs, name="wlcg-prod-20180428")

@@ -1,0 +1,1 @@
+"""Data substrate: synthetic token pipeline + grid-simulated data access."""

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the performance-critical compute layers.
+
+Layout per the repo convention: ``<name>.py`` holds the ``pl.pallas_call`` +
+``BlockSpec`` implementation, :mod:`repro.kernels.ops` the jit dispatch
+wrappers, and :mod:`repro.kernels.ref` the pure-jnp oracles.
+"""
+from repro.kernels import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,154 @@
+"""KV-cache decode attention Pallas kernel (single new token per sequence).
+
+Decode is memory-bound: the kernel's job is to stream the KV cache through
+VMEM exactly once per step at full HBM bandwidth. Grid is
+``(batch * kv_heads, kv_blocks)`` with the kv dimension sequential; all
+``G = Hq/Hkv`` query heads of a KV group are processed together so the cache
+block is read once for the whole group (the GQA bandwidth win). Online
+softmax state (m, l, acc) lives in VMEM scratch.
+
+Valid lengths are per-sequence (`lengths[B]`); masked positions contribute
+nothing, matching ``repro.kernels.ref.decode_attention``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention_pallas"]
+
+_LANE = 128
+_SUB = 8
+_NEG = -1e30
+
+
+def _pad_axis(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    target = -(-size // mult) * mult
+    if target == size:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - size)
+    return jnp.pad(x, pad)
+
+
+def _decode_kernel(
+    len_ref,  # [1, LANE] i32 (valid length broadcast)
+    q_ref,  # [1, 1, Gp, D]
+    k_ref,  # [1, 1, blk_s, D]
+    v_ref,  # [1, 1, blk_s, D]
+    o_ref,  # [1, 1, Gp, D]
+    m_scr,  # [Gp, LANE]
+    l_scr,  # [Gp, LANE]
+    acc_scr,  # [Gp, D]
+    *,
+    scale: float,
+    blk_s: int,
+    n_s: int,
+):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # [Gp, D]
+    k = k_ref[0, 0].astype(jnp.float32)  # [blk_s, D]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [Gp, blk_s]
+    length = len_ref[0, 0]
+    pos = si * blk_s + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < length, s, _NEG)
+
+    m_prev = m_scr[:, :1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(m_new > _NEG / 2, p, 0.0)
+    l_scr[...] = jnp.broadcast_to(
+        l_scr[:, :1] * alpha + jnp.sum(p, axis=1, keepdims=True), l_scr.shape
+    )
+    acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+
+    @pl.when(si == n_s - 1)
+    def _flush():
+        l = l_scr[:, :1]
+        o_ref[0, 0] = jnp.where(
+            l > 0, acc_scr[...] / jnp.maximum(l, 1e-30), 0.0
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "interpret", "blk_s")
+)
+def decode_attention_pallas(
+    q: jax.Array,  # [B, Hq, D]
+    k_cache: jax.Array,  # [B, S, Hkv, D]
+    v_cache: jax.Array,  # [B, S, Hkv, D]
+    lengths: jax.Array,  # [B] i32
+    *,
+    scale: Optional[float] = None,
+    interpret: bool = False,
+    blk_s: int = 512,
+) -> jax.Array:
+    B, Hq, D = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    dtype = q.dtype
+
+    # group query heads by kv head: [B, Hkv, G, D]
+    qg = q.reshape(B, Hkv, G, D)
+    qg = _pad_axis(_pad_axis(qg, 2, _SUB), 3, _LANE)
+    Gp, Dp = qg.shape[2], qg.shape[3]
+    kt = _pad_axis(_pad_axis(k_cache.transpose(0, 2, 1, 3), 2, blk_s), 3, _LANE)
+    vt = _pad_axis(_pad_axis(v_cache.transpose(0, 2, 1, 3), 2, blk_s), 3, _LANE)
+    Sp = kt.shape[2]
+    n_s = Sp // blk_s
+    lens = jnp.broadcast_to(lengths.astype(jnp.int32)[:, None], (B, _LANE))
+
+    grid = (B * Hkv, n_s)
+    kernel = functools.partial(_decode_kernel, scale=scale, blk_s=blk_s, n_s=n_s)
+    try:
+        compiler_params = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        )
+    except TypeError:  # pragma: no cover
+        compiler_params = None
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, _LANE), lambda i, j, H=Hkv: (i // H, 0)),
+            pl.BlockSpec((1, 1, Gp, Dp), lambda i, j, H=Hkv: (i // H, i % H, 0, 0)),
+            pl.BlockSpec((1, 1, blk_s, Dp), lambda i, j, H=Hkv: (i // H, i % H, j, 0)),
+            pl.BlockSpec((1, 1, blk_s, Dp), lambda i, j, H=Hkv: (i // H, i % H, j, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, Gp, Dp), lambda i, j, H=Hkv: (i // H, i % H, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, Gp, Dp), dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Gp, _LANE), jnp.float32),
+            pltpu.VMEM((Gp, _LANE), jnp.float32),
+            pltpu.VMEM((Gp, Dp), jnp.float32),
+        ],
+        interpret=interpret,
+        **({"compiler_params": compiler_params} if compiler_params else {}),
+    )(lens, qg, kt, vt)
+    return out[:, :, :G, :D].reshape(B, Hq, D)

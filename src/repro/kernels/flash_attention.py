@@ -1,0 +1,634 @@
+"""Flash attention (forward) as a Pallas TPU kernel.
+
+Blockwise online-softmax attention with causal masking, GQA and optional
+sliding windows. The grid is ``(batch*q_heads, q_blocks, kv_blocks)`` with the
+kv dimension sequential ("arbitrary"), carrying the running max / normalizer /
+accumulator in VMEM scratch — the canonical TPU flash schedule: HBM traffic is
+O(S) per head instead of the O(S^2) score matrix.
+
+The backward pass is a chunked pure-jnp recompute wired through
+``jax.custom_vjp`` (q-block scan keeps peak memory O(S * block)); on TPU the
+forward kernel therefore composes with training. The oracle is
+``repro.kernels.ref.flash_attention``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+_LANE = 128
+_NEG = -1e30
+
+
+def _pad_axis(x: jax.Array, axis: int, mult: int, value: float = 0.0) -> jax.Array:
+    size = x.shape[axis]
+    target = -(-size // mult) * mult
+    if target == size:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - size)
+    return jnp.pad(x, pad, constant_values=value)
+
+
+def _fwd_kernel(
+    q_ref,  # [1, 1, blk_q, D]
+    k_ref,  # [1, 1, blk_k, D]
+    v_ref,  # [1, 1, blk_k, D]
+    o_ref,  # [1, 1, blk_q, D]
+    lse_ref,  # [1, 1, blk_q]
+    m_scr,  # [blk_q, LANE]
+    l_scr,  # [blk_q, LANE]
+    acc_scr,  # [blk_q, D]
+    *,
+    scale: float,
+    causal: bool,
+    window: Optional[int],
+    q_offset: int,
+    blk_q: int,
+    blk_k: int,
+    n_k: int,
+    kv_len: int,
+):
+    ki = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # [blk_q, D]
+    k = k_ref[0, 0].astype(jnp.float32)  # [blk_k, D]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [blk_q, blk_k]
+
+    q_pos = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0) + q_offset
+    k_pos = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+    mask = k_pos < kv_len  # kv padding
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_scr[:, :1]  # [blk_q, 1]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)
+    # fully-masked-so-far rows: m_new == _NEG -> p = exp(0) = 1 would corrupt
+    # the normalizer; zero them explicitly.
+    p = jnp.where(m_new > _NEG / 2, p, 0.0)
+
+    l_new = l_scr[:, :1] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_new = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+    acc_scr[...] = acc_new
+
+    @pl.when(ki == n_k - 1)
+    def _flush():
+        l = l_scr[:, :1]
+        o_ref[0, 0] = jnp.where(l > 0, acc_scr[...] / jnp.maximum(l, 1e-30), 0.0).astype(
+            o_ref.dtype
+        )
+        # log-sum-exp residual for the flash backward; +inf on dead rows so
+        # the recomputed p = exp(s - lse) is exactly 0 there
+        lse = m_scr[:, 0] + jnp.log(jnp.maximum(l_scr[:, 0], 1e-30))
+        lse_ref[0, 0] = jnp.where(l_scr[:, 0] > 0, lse, jnp.inf)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "scale", "q_offset", "interpret", "blk_q", "blk_k",
+    ),
+)
+def _flash_fwd(
+    q: jax.Array,  # [B, Sq, Hq, D]
+    k: jax.Array,  # [B, Skv, Hkv, D]
+    v: jax.Array,
+    *,
+    causal: bool,
+    window: Optional[int],
+    scale: Optional[float],
+    q_offset: int,
+    interpret: bool,
+    blk_q: int,
+    blk_k: int,
+) -> jax.Array:
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    rep = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    dtype = q.dtype
+
+    # layout: [B, H, S, D], pad S and D
+    qt = _pad_axis(_pad_axis(q.transpose(0, 2, 1, 3), 2, blk_q), 3, _LANE)
+    kt = _pad_axis(_pad_axis(k.transpose(0, 2, 1, 3), 2, blk_k), 3, _LANE)
+    vt = _pad_axis(_pad_axis(v.transpose(0, 2, 1, 3), 2, blk_k), 3, _LANE)
+    Sqp, Dp = qt.shape[2], qt.shape[3]
+    Skvp = kt.shape[2]
+    n_q = Sqp // blk_q
+    n_k = Skvp // blk_k
+
+    grid = (B * Hq, n_q, n_k)
+    kernel = functools.partial(
+        _fwd_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        q_offset=q_offset,
+        blk_q=blk_q,
+        blk_k=blk_k,
+        n_k=n_k,
+        kv_len=Skv,
+    )
+    try:
+        compiler_params = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        )
+    except TypeError:  # pragma: no cover - older pallas API
+        compiler_params = None
+
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, blk_q, Dp), lambda i, j, kk, H=Hq: (i // H, i % H, j, 0)),
+            pl.BlockSpec(
+                (1, 1, blk_k, Dp),
+                lambda i, j, kk, H=Hq, r=rep: (i // H, (i % H) // r, kk, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, blk_k, Dp),
+                lambda i, j, kk, H=Hq, r=rep: (i // H, (i % H) // r, kk, 0),
+            ),
+        ],
+        out_specs=(
+            pl.BlockSpec(
+                (1, 1, blk_q, Dp), lambda i, j, kk, H=Hq: (i // H, i % H, j, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, blk_q), lambda i, j, kk, H=Hq: (i // H, i % H, j)
+            ),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, Hq, Sqp, Dp), dtype),
+            jax.ShapeDtypeStruct((B, Hq, Sqp), jnp.float32),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, _LANE), jnp.float32),
+            pltpu.VMEM((blk_q, _LANE), jnp.float32),
+            pltpu.VMEM((blk_q, Dp), jnp.float32),
+        ],
+        interpret=interpret,
+        **({"compiler_params": compiler_params} if compiler_params else {}),
+    )(qt, kt, vt)
+    return out[:, :, :Sq, :D].transpose(0, 2, 1, 3), lse[:, :, :Sq]
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp: chunked jnp backward (recompute), so the Pallas forward trains
+# ---------------------------------------------------------------------------
+
+def _bwd_chunked(q, k, v, dout, *, causal, window, scale, q_offset,
+                 blk: int = 512, grouped: bool = False):
+    """Standard attention backward with q-block chunking (O(S*blk) memory).
+
+    ``grouped=True``: GQA-aware — no K/V replication; dk/dv come out of the
+    grouped einsums already summed over the query-head group."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    rep = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    if grouped:
+        kf = k.astype(jnp.float32)
+        vf = v.astype(jnp.float32)
+    else:
+        kf = jnp.repeat(k.astype(jnp.float32), rep, axis=2)
+        vf = jnp.repeat(v.astype(jnp.float32), rep, axis=2)
+    k_pos = jnp.arange(Skv)[None, :]
+
+    n_blk = -(-Sq // blk)
+    qp = _pad_axis(q.astype(jnp.float32), 1, blk)
+    doutp = _pad_axis(dout.astype(jnp.float32), 1, blk)
+    if grouped:
+        qp = qp.reshape(B, -1, Hkv, rep, D)
+        doutp = doutp.reshape(B, -1, Hkv, rep, D)
+
+    def body(carry, i):
+        dk_acc, dv_acc = carry
+        qb = jax.lax.dynamic_slice_in_dim(qp, i * blk, blk, 1) * scale
+        dob = jax.lax.dynamic_slice_in_dim(doutp, i * blk, blk, 1)
+        q_pos = i * blk + jnp.arange(blk)[:, None] + q_offset
+        mask = jnp.ones((blk, Skv), bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        if grouped:
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kf)
+            s = jnp.where(mask[None, None, None], s, _NEG)
+            p = jax.nn.softmax(s, axis=-1)
+            p = jnp.where(jnp.isnan(p), 0.0, p)
+            dv_b = jnp.einsum("bhgqk,bqhgd->bkhd", p, dob)
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", dob, vf)
+            ds = p * (dp - jnp.sum(p * dp, axis=-1, keepdims=True))
+            dq_b = jnp.einsum("bhgqk,bkhd->bqhgd", ds, kf) * scale
+            dk_b = jnp.einsum("bhgqk,bqhgd->bkhd", ds, qb)
+        else:
+            s = jnp.einsum("bqhd,bkhd->bhqk", qb, kf)
+            s = jnp.where(mask[None, None], s, _NEG)
+            p = jax.nn.softmax(s, axis=-1)
+            p = jnp.where(jnp.isnan(p), 0.0, p)
+            dv_b = jnp.einsum("bhqk,bqhd->bkhd", p, dob)
+            dp = jnp.einsum("bqhd,bkhd->bhqk", dob, vf)
+            ds = p * (dp - jnp.sum(p * dp, axis=-1, keepdims=True))
+            dq_b = jnp.einsum("bhqk,bkhd->bqhd", ds, kf) * scale
+            dk_b = jnp.einsum("bhqk,bqhd->bkhd", ds, qb)
+        return (dk_acc + dk_b, dv_acc + dv_b), dq_b
+
+    kv_heads = Hkv if grouped else Hq
+    init = (
+        jnp.zeros((B, Skv, kv_heads, D), jnp.float32),
+        jnp.zeros((B, Skv, kv_heads, D), jnp.float32),
+    )
+    (dk_full, dv_full), dq_blocks = jax.lax.scan(body, init, jnp.arange(n_blk))
+    # dq_blocks: [n_blk, B, blk, ...] -> [B, Sq, Hq, D]
+    dq = jnp.moveaxis(dq_blocks, 0, 1).reshape(B, n_blk * blk, Hq, D)[:, :Sq]
+    if grouped:
+        dk, dv = dk_full, dv_full
+    else:
+        # fold GQA head replication back
+        dk = dk_full.reshape(B, Skv, Hkv, rep, D).sum(3)
+        dv = dv_full.reshape(B, Skv, Hkv, rep, D).sum(3)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pallas backward kernels: dq (grid over q blocks, kv sequential) and dk/dv
+# (grid over kv blocks, q sequential). Probabilities are recomputed from the
+# forward's log-sum-exp, the standard flash backward. dk/dv are produced per
+# query head and group-summed outside (GQA).
+# ---------------------------------------------------------------------------
+def _bwd_dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, acc_scr,
+    *, scale, causal, window, q_offset, blk_q, blk_k, n_k, kv_len,
+):
+    ki = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0][:, None]  # [blk_q, 1]
+    delta = delta_ref[0, 0][:, None]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    q_pos = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0) + q_offset
+    k_pos = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+    mask = k_pos < kv_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    p = jnp.where(mask, jnp.exp(s - lse), 0.0)
+    dp = jax.lax.dot_general(
+        do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    ds = p * (dp - delta)
+    acc_scr[...] += jax.lax.dot_general(
+        ds, k, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ki == n_k - 1)
+    def _flush():
+        dq_ref[0, 0] = (acc_scr[...] * scale).astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref,
+    dk_scr, dv_scr,
+    *, scale, causal, window, q_offset, blk_q, blk_k, n_q, kv_len,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(1)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    do = do_ref[0, 0].astype(jnp.float32)
+    lse = lse_ref[0, 0][:, None]
+    delta = delta_ref[0, 0][:, None]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [blk_q, blk_k]
+    q_pos = qi * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0) + q_offset
+    k_pos = ki * blk_k + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+    mask = k_pos < kv_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    p = jnp.where(mask, jnp.exp(s - lse), 0.0)
+    dp = jax.lax.dot_general(
+        do, v, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    ds = p * (dp - delta)
+    # dv += p^T do ; dk += ds^T q
+    dv_scr[...] += jax.lax.dot_general(
+        p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    dk_scr[...] += jax.lax.dot_general(
+        ds, q, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(qi == n_q - 1)
+    def _flush():
+        dk_ref[0, 0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0, 0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "q_offset", "interpret",
+                     "blk_q", "blk_k"),
+)
+def flash_attention_bwd_pallas(
+    q: jax.Array,  # [B, Sq, Hq, D]
+    k: jax.Array,  # [B, Skv, Hkv, D]
+    v: jax.Array,
+    out: jax.Array,  # [B, Sq, Hq, D] forward output
+    lse: jax.Array,  # [B, Hq, Sq] forward log-sum-exp
+    dout: jax.Array,  # [B, Sq, Hq, D]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    interpret: bool = False,
+    blk_q: int = 128,
+    blk_k: int = 128,
+):
+    """Flash backward: (dq, dk, dv) via two Pallas kernels."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    rep = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+
+    delta = jnp.einsum(
+        "bqhd,bqhd->bhq", dout.astype(jnp.float32), out.astype(jnp.float32)
+    )  # [B, Hq, Sq]
+
+    qt = _pad_axis(_pad_axis(q.transpose(0, 2, 1, 3), 2, blk_q), 3, _LANE)
+    dot = _pad_axis(_pad_axis(dout.transpose(0, 2, 1, 3), 2, blk_q), 3, _LANE)
+    kt = _pad_axis(_pad_axis(k.transpose(0, 2, 1, 3), 2, blk_k), 3, _LANE)
+    vt = _pad_axis(_pad_axis(v.transpose(0, 2, 1, 3), 2, blk_k), 3, _LANE)
+    # pad lse with +inf so padded q rows produce p = exp(-inf) = 0
+    lse_p = _pad_axis(lse, 2, blk_q, value=jnp.inf) if lse.shape[2] % blk_q else lse
+    delta_p = _pad_axis(delta, 2, blk_q)
+    Sqp, Dp = qt.shape[2], qt.shape[3]
+    Skvp = kt.shape[2]
+    n_q, n_k = Sqp // blk_q, Skvp // blk_k
+
+    try:
+        cp = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        )
+    except TypeError:  # pragma: no cover
+        cp = None
+    cp_kw = {"compiler_params": cp} if cp else {}
+
+    q_spec = pl.BlockSpec((1, 1, blk_q, Dp), lambda i, j, kk, H=Hq: (i // H, i % H, j, 0))
+    kv_spec = pl.BlockSpec(
+        (1, 1, blk_k, Dp), lambda i, j, kk, H=Hq, r=rep: (i // H, (i % H) // r, kk, 0)
+    )
+    row_spec = pl.BlockSpec((1, 1, blk_q), lambda i, j, kk, H=Hq: (i // H, i % H, j))
+
+    dq = pl.pallas_call(
+        functools.partial(
+            _bwd_dq_kernel, scale=scale, causal=causal, window=window,
+            q_offset=q_offset, blk_q=blk_q, blk_k=blk_k, n_k=n_k, kv_len=Skv,
+        ),
+        grid=(B * Hq, n_q, n_k),
+        in_specs=[q_spec, kv_spec, kv_spec, q_spec, row_spec, row_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sqp, Dp), q.dtype),
+        scratch_shapes=[pltpu.VMEM((blk_q, Dp), jnp.float32)],
+        interpret=interpret,
+        **cp_kw,
+    )(qt, kt, vt, dot, lse_p, delta_p)
+
+    # dk/dv per query head (grid swaps the roles; q is the sequential dim)
+    q_spec2 = pl.BlockSpec((1, 1, blk_q, Dp), lambda i, j, kk, H=Hq: (i // H, i % H, kk, 0))
+    kv_spec2 = pl.BlockSpec(
+        (1, 1, blk_k, Dp), lambda i, j, kk, H=Hq, r=rep: (i // H, (i % H) // r, j, 0)
+    )
+    kv_out_spec = pl.BlockSpec(
+        (1, 1, blk_k, Dp), lambda i, j, kk, H=Hq: (i // H, i % H, j, 0)
+    )
+    row_spec2 = pl.BlockSpec((1, 1, blk_q), lambda i, j, kk, H=Hq: (i // H, i % H, kk))
+    dk_h, dv_h = pl.pallas_call(
+        functools.partial(
+            _bwd_dkv_kernel, scale=scale, causal=causal, window=window,
+            q_offset=q_offset, blk_q=blk_q, blk_k=blk_k, n_q=n_q, kv_len=Skv,
+        ),
+        grid=(B * Hq, n_k, n_q),
+        in_specs=[q_spec2, kv_spec2, kv_spec2, q_spec2, row_spec2, row_spec2],
+        out_specs=(kv_out_spec, kv_out_spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, Hq, Skvp, Dp), k.dtype),
+            jax.ShapeDtypeStruct((B, Hq, Skvp, Dp), v.dtype),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((blk_k, Dp), jnp.float32),
+            pltpu.VMEM((blk_k, Dp), jnp.float32),
+        ],
+        interpret=interpret,
+        **cp_kw,
+    )(qt, kt, vt, dot, lse_p, delta_p)
+
+    dq = dq[:, :, :Sq, :D].transpose(0, 2, 1, 3)
+    # group-sum the per-query-head dk/dv back to KV heads
+    dk = dk_h[:, :, :Skv, :D].reshape(B, Hkv, rep, Skv, D).sum(2).transpose(0, 2, 1, 3)
+    dv = dv_h[:, :, :Skv, :D].reshape(B, Hkv, rep, Skv, D).sum(2).transpose(0, 2, 1, 3)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# chunked XLA path: the flash algorithm in pure jnp (the CPU/dry-run stand-in
+# for the Pallas kernel — O(S * blk) memory, no S^2 materialization)
+# ---------------------------------------------------------------------------
+def _fwd_chunked(q, k, v, *, causal, window, scale, q_offset, blk: int = 512,
+                 grouped: bool = False):
+    """Chunked flash forward. ``grouped=True`` is the GQA-aware variant: no
+    K/V head replication — queries are reshaped to [B, S, Hkv, G, D] and the
+    score einsum contracts against the raw KV heads (a §Perf lever: removes
+    the rep-x memory traffic and the head-resharding all-to-alls)."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    rep = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    dtype = q.dtype
+    qf = q.astype(jnp.float32) * scale
+    if grouped:
+        qf = qf.reshape(B, Sq, Hkv, rep, D)
+        kf = k.astype(jnp.float32)
+        vf = v.astype(jnp.float32)
+    else:
+        kf = jnp.repeat(k.astype(jnp.float32), rep, axis=2)
+        vf = jnp.repeat(v.astype(jnp.float32), rep, axis=2)
+    kp = _pad_axis(kf, 1, blk)
+    vp = _pad_axis(vf, 1, blk)
+    n_blk = kp.shape[1] // blk
+    q_pos = jnp.arange(Sq)[:, None] + q_offset  # [Sq, 1]
+
+    def body(carry, i):
+        m, l, acc = carry
+        kb = jax.lax.dynamic_slice_in_dim(kp, i * blk, blk, 1)
+        vb = jax.lax.dynamic_slice_in_dim(vp, i * blk, blk, 1)
+        if grouped:
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kb)  # [B,Hkv,G,Sq,blk]
+        else:
+            s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb)  # [B, H, Sq, blk]
+        k_pos = i * blk + jnp.arange(blk)[None, :]
+        mask = k_pos < Skv
+        if causal:
+            mask = mask & (k_pos <= q_pos)
+        if window is not None:
+            mask = mask & (k_pos > q_pos - window)
+        bmask = mask[None, None, None] if grouped else mask[None, None]
+        s = jnp.where(bmask, s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where((m_new > _NEG / 2)[..., None], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        if grouped:
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vb)
+        else:
+            pv = jnp.einsum("bhqk,bkhd->bhqd", p, vb)
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    hshape = (B, Hkv, rep, Sq) if grouped else (B, Hq, Sq)
+    m0 = jnp.full(hshape, _NEG, jnp.float32)
+    l0 = jnp.zeros(hshape, jnp.float32)
+    acc0 = jnp.zeros(hshape + (D,), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0), jnp.arange(n_blk))
+    out = jnp.where(
+        l[..., None] > 0, acc / jnp.maximum(l[..., None], 1e-30), 0.0
+    )
+    if grouped:
+        out = out.reshape(B, Hq, Sq, D)
+    return out.transpose(0, 2, 1, 3).astype(dtype)  # [B, Sq, Hq, D]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention_xla(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    grouped: bool = False,
+) -> jax.Array:
+    return _fwd_chunked(
+        q, k, v, causal=causal, window=window, scale=scale, q_offset=q_offset,
+        grouped=grouped,
+    )
+
+
+def _xla_vjp_fwd(q, k, v, causal, window, scale, q_offset, grouped):
+    out = _fwd_chunked(
+        q, k, v, causal=causal, window=window, scale=scale, q_offset=q_offset,
+        grouped=grouped,
+    )
+    return out, (q, k, v)
+
+
+def _xla_vjp_bwd(causal, window, scale, q_offset, grouped, res, dout):
+    q, k, v = res
+    return _bwd_chunked(
+        q, k, v, dout, causal=causal, window=window, scale=scale,
+        q_offset=q_offset, blk=128, grouped=grouped,
+    )
+
+
+flash_attention_xla.defvjp(_xla_vjp_fwd, _xla_vjp_bwd)
+
+
+@functools.partial(
+    jax.custom_vjp,
+    nondiff_argnums=(3, 4, 5, 6, 7, 8, 9),
+)
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    interpret: bool = False,
+    blk_q: int = 128,
+    blk_k: int = 128,
+) -> jax.Array:
+    out, _ = _flash_fwd(
+        q, k, v, causal=causal, window=window, scale=scale,
+        q_offset=q_offset, interpret=interpret, blk_q=blk_q, blk_k=blk_k,
+    )
+    return out
+
+
+def _vjp_fwd(q, k, v, causal, window, scale, q_offset, interpret, blk_q, blk_k):
+    out, lse = _flash_fwd(
+        q, k, v, causal=causal, window=window, scale=scale,
+        q_offset=q_offset, interpret=interpret, blk_q=blk_q, blk_k=blk_k,
+    )
+    return out, (q, k, v, out, lse)
+
+
+def _vjp_bwd(causal, window, scale, q_offset, interpret, blk_q, blk_k, res, dout):
+    q, k, v, out, lse = res
+    # fully-Pallas backward (dq + dk/dv kernels)
+    return flash_attention_bwd_pallas(
+        q, k, v, out, lse, dout, causal=causal, window=window, scale=scale,
+        q_offset=q_offset, interpret=interpret, blk_q=blk_q, blk_k=blk_k,
+    )
+
+
+flash_attention_pallas.defvjp(_vjp_fwd, _vjp_bwd)

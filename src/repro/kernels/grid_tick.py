@@ -1,0 +1,172 @@
+"""Pallas TPU kernel for the GDAPS fair-share transfer tick.
+
+The tick is three one-hot segment matmuls plus elementwise math (see
+``repro.kernels.ref.grid_tick``). For the calibration workload the batch of
+concurrent simulations ``B`` is huge (10^4-10^7 across the mesh) while the
+per-campaign dimensions are small (legs T ~ 10^2-10^3, procs P <= T, links L
+~ 10^0-10^2), so the kernel tiles over B and keeps the full incidence
+matrices resident in VMEM — every matmul then runs on the MXU with no HBM
+round-trips between the fused stages.
+
+Padding contract (enforced by the wrapper): T/P/L are zero-padded to lane
+multiples; padded legs are inactive and padded links have zero bandwidth,
+which the fair-share math maps to exactly zero transfer, so padding is
+semantically inert.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["grid_tick_pallas"]
+
+_LANE = 128
+_SUBLANE = 8
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    target = -(-size // mult) * mult
+    if target == size:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - size)
+    return jnp.pad(x, pad)
+
+
+def _tick_kernel(
+    active_ref,  # [Bb, T]
+    remaining_ref,  # [Bb, T]
+    bg_ref,  # [Bb, L]
+    keep_ref,  # [1, T]
+    bw_ref,  # [1, L]
+    m_tp_ref,  # [T, P]
+    m_pl_ref,  # [P, L]
+    m_tl_ref,  # [T, L]
+    xfer_ref,  # [Bb, T] out
+    proc_ref,  # [Bb, P] out
+    link_ref,  # [Bb, L] out
+):
+    f32 = jnp.float32
+    active = active_ref[...].astype(f32)
+    remaining = remaining_ref[...].astype(f32)
+    m_tp = m_tp_ref[...]
+    m_pl = m_pl_ref[...]
+    m_tl = m_tl_ref[...]
+
+    # threads per process: [Bb, P]
+    threads = jax.lax.dot_general(
+        active, m_tp, (((1,), (0,)), ((), ())), preferred_element_type=f32
+    )
+    proc_active = (threads > 0).astype(f32)
+    # campaign processes per link: [Bb, L]
+    campaign = jax.lax.dot_general(
+        proc_active, m_pl, (((1,), (0,)), ((), ())), preferred_element_type=f32
+    )
+    denom = jnp.maximum(campaign + jnp.maximum(bg_ref[...].astype(f32), 0.0), 1.0)
+    per_proc = bw_ref[...].astype(f32) / denom  # [Bb, L]
+    # gather to legs: one-hot matmuls against the transposed incidences
+    per_proc_leg = jax.lax.dot_general(
+        per_proc, m_tl, (((1,), (1,)), ((), ())), preferred_element_type=f32
+    )  # [Bb, T]
+    threads_leg = jnp.maximum(
+        jax.lax.dot_general(
+            threads, m_tp, (((1,), (1,)), ((), ())), preferred_element_type=f32
+        ),
+        1.0,
+    )  # [Bb, T]
+    chunk = active * keep_ref[...].astype(f32) * per_proc_leg / threads_leg
+    xfer = jnp.minimum(remaining, chunk)
+    xfer_ref[...] = xfer
+    proc_ref[...] = jax.lax.dot_general(
+        xfer, m_tp, (((1,), (0,)), ((), ())), preferred_element_type=f32
+    )
+    link_ref[...] = jax.lax.dot_general(
+        xfer, m_tl, (((1,), (0,)), ((), ())), preferred_element_type=f32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_b"))
+def grid_tick_pallas(
+    active: jax.Array,  # [T] or [B, T]
+    remaining: jax.Array,
+    keep_frac: jax.Array,  # [T]
+    bg_load: jax.Array,  # [L] or [B, L]
+    bandwidth: jax.Array,  # [L]
+    leg_proc: jax.Array,  # [T, P]
+    proc_link: jax.Array,  # [P, L]
+    leg_link: jax.Array,  # [T, L]
+    *,
+    interpret: bool = False,
+    block_b: int = 256,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    unbatched = active.ndim == 1
+    if unbatched:
+        active = active[None]
+        remaining = remaining[None]
+        bg_load = bg_load[None]
+    B, T = active.shape
+    P = leg_proc.shape[1]
+    L = proc_link.shape[1]
+
+    # zero-pad every axis to hardware-friendly multiples
+    active_p = _pad_to(_pad_to(active, 1, _LANE), 0, _SUBLANE)
+    remaining_p = _pad_to(_pad_to(remaining, 1, _LANE), 0, _SUBLANE)
+    bg_p = _pad_to(_pad_to(bg_load, 1, _LANE), 0, _SUBLANE)
+    keep_p = _pad_to(keep_frac[None, :], 1, _LANE)
+    bw_p = _pad_to(bandwidth[None, :], 1, _LANE)
+    m_tp = _pad_to(_pad_to(leg_proc, 0, _LANE), 1, _LANE)
+    m_pl = _pad_to(_pad_to(proc_link, 0, _LANE), 1, _LANE)
+    m_tl = _pad_to(_pad_to(leg_link, 0, _LANE), 1, _LANE)
+    Bp, Tp = active_p.shape
+    Pp, Lp = m_pl.shape
+
+    bb = min(block_b, Bp)
+    # block the batch; broadcast the campaign constants to every block
+    grid = (Bp // bb,) if Bp % bb == 0 else (-(-Bp // bb),)
+    active_p = _pad_to(active_p, 0, bb)
+    remaining_p = _pad_to(remaining_p, 0, bb)
+    bg_p = _pad_to(bg_p, 0, bb)
+    Bp = active_p.shape[0]
+    grid = (Bp // bb,)
+
+    batch_spec = lambda w: pl.BlockSpec((bb, w), lambda i: (i, 0))
+    const_spec = lambda h, w: pl.BlockSpec((h, w), lambda i: (0, 0))
+
+    out_shape = (
+        jax.ShapeDtypeStruct((Bp, Tp), jnp.float32),
+        jax.ShapeDtypeStruct((Bp, Pp), jnp.float32),
+        jax.ShapeDtypeStruct((Bp, Lp), jnp.float32),
+    )
+    xfer, proc_xfer, link_xfer = pl.pallas_call(
+        _tick_kernel,
+        grid=grid,
+        in_specs=[
+            batch_spec(Tp),
+            batch_spec(Tp),
+            batch_spec(Lp),
+            const_spec(1, Tp),
+            const_spec(1, Lp),
+            const_spec(Tp, Pp),
+            const_spec(Pp, Lp),
+            const_spec(Tp, Lp),
+        ],
+        out_specs=(
+            pl.BlockSpec((bb, Tp), lambda i: (i, 0)),
+            pl.BlockSpec((bb, Pp), lambda i: (i, 0)),
+            pl.BlockSpec((bb, Lp), lambda i: (i, 0)),
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(active_p, remaining_p, bg_p, keep_p, bw_p, m_tp, m_pl, m_tl)
+
+    xfer = xfer[:B, :T]
+    proc_xfer = proc_xfer[:B, :P]
+    link_xfer = link_xfer[:B, :L]
+    if unbatched:
+        return xfer[0], proc_xfer[0], link_xfer[0]
+    return xfer, proc_xfer, link_xfer

@@ -1,0 +1,303 @@
+"""Chunkwise-parallel mLSTM (xLSTM matrix-memory cell) Pallas kernel.
+
+The mLSTM recurrence with exponential input gates and sigmoid forget gates
+admits a chunkwise evaluation: within a chunk all positions are computed in
+parallel (matmuls on the MXU), and a recurrent matrix state
+``C [D, D]``, normalizer ``n [D]`` and log-space stabilizer ``m`` carry
+information between chunks. This gives O(S * c) work per head at O(c^2)
+parallel block size — the sub-quadratic path used by the xlstm-350m and
+hymba long-context configs.
+
+Grid: ``(batch * heads, n_chunks)`` with the chunk dimension sequential;
+state lives in VMEM scratch. Oracle: ``repro.kernels.ref.mlstm_chunk`` (the
+fully-parallel stabilized form); equality is exact in exact arithmetic and
+validated to fp32 tolerance in the tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["mlstm_chunk_pallas"]
+
+_LANE = 128
+_SUB = 8
+_NEG = -1e30
+
+
+def _pad_axis(x: jax.Array, axis: int, mult: int, value: float = 0.0) -> jax.Array:
+    size = x.shape[axis]
+    target = -(-size // mult) * mult
+    if target == size:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, target - size)
+    return jnp.pad(x, pad, constant_values=value)
+
+
+def _mlstm_kernel(
+    q_ref,  # [1, 1, c, Dk]
+    k_ref,  # [1, 1, c, Dk]
+    v_ref,  # [1, 1, c, Dv]
+    i_ref,  # [1, 1, c_pad_rows, LANE] gates replicated across lanes
+    f_ref,  # [1, 1, c_pad_rows, LANE]
+    o_ref,  # [1, 1, c, Dv]
+    c_scr,  # [Dk, Dv]
+    n_scr,  # [SUB, Dk] (row 0 live)
+    m_scr,  # [SUB, LANE] (element [0,0] live)
+    *,
+    chunk: int,
+    eps: float,
+    normalize: bool,
+):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        c_scr[...] = jnp.zeros_like(c_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+        m_scr[...] = jnp.full_like(m_scr, _NEG if normalize else 0.0)
+
+    f32 = jnp.float32
+    q = q_ref[0, 0].astype(f32)  # [c, Dk] (pre-scaled by wrapper)
+    k = k_ref[0, 0].astype(f32)
+    v = v_ref[0, 0].astype(f32)
+    li = i_ref[0, 0, :, :1].astype(f32)  # [c, 1] input-gate pre-activation
+    fg = f_ref[0, 0, :, :1].astype(f32)
+    lf = jax.nn.log_sigmoid(fg) if normalize else fg  # [c, 1]
+
+    F = jnp.cumsum(lf, axis=0)  # [c, 1] inclusive cumulative log-forget
+    f_end = F[chunk - 1, 0]  # scalar: total chunk decay
+
+    # intra-chunk decay matrix: D[j, s] = F[j] - F[s] + li[s], s <= j
+    dmat = F - F.T + li.T  # [c, c]
+    causal = (
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    )
+    dmat = jnp.where(causal, dmat, _NEG)
+
+    m_prev = m_scr[0, 0]
+    if normalize:
+        max_intra = jnp.max(dmat, axis=1, keepdims=True)  # [c, 1]
+        m_row = jnp.maximum(max_intra, F + m_prev)  # [c, 1] per-row stabilizer
+    else:
+        m_row = jnp.zeros((chunk, 1), f32)
+
+    s_intra = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=f32
+    ) * jnp.exp(dmat - m_row)  # [c, c]
+
+    inter_scale = jnp.exp(F + m_prev - m_row)  # [c, 1]
+    qc = jax.lax.dot_general(
+        q, c_scr[...], (((1,), (0,)), ((), ())), preferred_element_type=f32
+    )  # [c, Dv]
+    num = jax.lax.dot_general(
+        s_intra, v, (((1,), (0,)), ((), ())), preferred_element_type=f32
+    ) + inter_scale * qc
+    if normalize:
+        qn = jax.lax.dot_general(
+            q, n_scr[:1].T, (((1,), (0,)), ((), ())), preferred_element_type=f32
+        )  # [c, 1]
+        denom_sum = jnp.sum(s_intra, axis=1, keepdims=True) + inter_scale * qn
+        norm = jnp.maximum(jnp.abs(denom_sum), jnp.exp(-m_row)) + eps
+        o_ref[0, 0] = (num / norm).astype(o_ref.dtype)
+    else:
+        o_ref[0, 0] = num.astype(o_ref.dtype)
+
+    # ---- state update ----
+    w = f_end - F + li  # [c, 1] decay of each position to chunk end
+    if normalize:
+        m_new = jnp.maximum(m_prev + f_end, jnp.max(w))
+    else:
+        m_new = jnp.zeros((), f32)
+    decay = jnp.exp(m_prev + f_end - m_new)
+    kw = k * jnp.exp(w - m_new)  # [c, Dk]
+    c_scr[...] = decay * c_scr[...] + jax.lax.dot_general(
+        kw, v, (((0,), (0,)), ((), ())), preferred_element_type=f32
+    )
+    n_new = decay * n_scr[:1] + jnp.sum(kw, axis=0, keepdims=True)  # [1, Dk]
+    n_scr[...] = jnp.broadcast_to(n_new, n_scr.shape)
+    m_scr[...] = jnp.full_like(m_scr, m_new)
+
+
+# ---------------------------------------------------------------------------
+# chunked XLA path: the same chunkwise recurrence in pure jnp (CPU / dry-run
+# stand-in; differentiable through the chunk scan)
+# ---------------------------------------------------------------------------
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "eps", "normalize", "scale")
+)
+def mlstm_chunk_xla(
+    q: jax.Array,  # [B, S, H, Dk]
+    k: jax.Array,
+    v: jax.Array,  # [B, S, H, Dv]
+    i_gate: jax.Array,  # [B, S, H]
+    f_gate: jax.Array,  # [B, S, H]
+    *,
+    chunk: int = 128,
+    eps: float = 1e-6,
+    normalize: bool = True,
+    scale=None,
+) -> jax.Array:
+    B, S, H, Dk = q.shape
+    Dv = v.shape[-1]
+    dtype = q.dtype
+    if scale is None:
+        scale = Dk ** -0.5 if normalize else 1.0
+    Sp = -(-S // chunk) * chunk
+    pad = Sp - S
+
+    def padt(x, value=0.0):
+        return jnp.pad(x, ((0, 0), (0, pad), (0, 0)) + ((0, 0),) * (x.ndim - 3),
+                       constant_values=value) if pad else x
+
+    # [B, H, n, c, D] chunked layout
+    def chunked(x):
+        return padt(x).transpose(0, 2, 1, 3).reshape(B, H, Sp // chunk, chunk, -1)
+
+    qf = chunked(q.astype(jnp.float32) * scale)
+    kf = chunked(k.astype(jnp.float32))
+    vf = chunked(v.astype(jnp.float32))
+    fg = f_gate.astype(jnp.float32)
+    lf_full = jax.nn.log_sigmoid(fg) if normalize else fg
+    lf = jnp.pad(lf_full, ((0, 0), (0, pad), (0, 0)),
+                 constant_values=0.0) if pad else lf_full
+    li_full = i_gate.astype(jnp.float32)
+    li = jnp.pad(li_full, ((0, 0), (0, pad), (0, 0)),
+                 constant_values=_NEG) if pad else li_full
+    lf_c = lf.transpose(0, 2, 1).reshape(B, H, Sp // chunk, chunk)
+    li_c = li.transpose(0, 2, 1).reshape(B, H, Sp // chunk, chunk)
+
+    causal = (
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    )
+
+    def body(carry, xs):
+        C, n, m = carry  # [B,H,Dk,Dv], [B,H,Dk], [B,H]
+        qc, kc, vc, lfc, lic = xs  # [B,H,c,D*], [B,H,c]
+        F = jnp.cumsum(lfc, axis=-1)  # [B,H,c]
+        f_end = F[..., -1]  # [B,H]
+        dmat = F[..., :, None] - F[..., None, :] + lic[..., None, :]  # [B,H,c,c]
+        dmat = jnp.where(causal, dmat, _NEG)
+        if normalize:
+            max_intra = jnp.max(dmat, axis=-1)  # [B,H,c]
+            m_row = jnp.maximum(max_intra, F + m[..., None])
+        else:
+            m_row = jnp.zeros_like(F)
+        s_intra = jnp.einsum("bhcd,bhed->bhce", qc, kc) * jnp.exp(dmat - m_row[..., None])
+        inter = jnp.exp(F + m[..., None] - m_row)  # [B,H,c]
+        num = jnp.einsum("bhce,bhed->bhcd", s_intra, vc) + inter[..., None] * jnp.einsum(
+            "bhcd,bhdv->bhcv", qc, C
+        )
+        if normalize:
+            qn = jnp.einsum("bhcd,bhd->bhc", qc, n)
+            denom = s_intra.sum(-1) + inter * qn
+            norm = jnp.maximum(jnp.abs(denom), jnp.exp(-m_row)) + eps
+            out = num / norm[..., None]
+        else:
+            out = num
+        # state update
+        w = f_end[..., None] - F + lic  # [B,H,c]
+        if normalize:
+            m_new = jnp.maximum(m + f_end, jnp.max(w, axis=-1))
+        else:
+            m_new = jnp.zeros_like(m)
+        decay = jnp.exp(m + f_end - m_new)
+        kw = kc * jnp.exp(w - m_new[..., None])[..., None]
+        C_new = decay[..., None, None] * C + jnp.einsum("bhcd,bhcv->bhdv", kw, vc)
+        n_new = decay[..., None] * n + kw.sum(-2)
+        return (C_new, n_new, m_new), out
+
+    C0 = jnp.zeros((B, H, Dk, Dv), jnp.float32)
+    n0 = jnp.zeros((B, H, Dk), jnp.float32)
+    m0 = jnp.full((B, H), _NEG if normalize else 0.0, jnp.float32)
+    xs = (
+        jnp.moveaxis(qf, 2, 0), jnp.moveaxis(kf, 2, 0), jnp.moveaxis(vf, 2, 0),
+        jnp.moveaxis(lf_c, 2, 0), jnp.moveaxis(li_c, 2, 0),
+    )
+    _, outs = jax.lax.scan(body, (C0, n0, m0), xs)
+    # outs: [n, B, H, c, Dv] -> [B, S, H, Dv]
+    out = jnp.moveaxis(outs, 0, 2).reshape(B, H, Sp, Dv)[:, :, :S]
+    return out.transpose(0, 2, 1, 3).astype(dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "eps", "interpret", "normalize", "scale")
+)
+def mlstm_chunk_pallas(
+    q: jax.Array,  # [B, S, H, Dk]
+    k: jax.Array,
+    v: jax.Array,  # [B, S, H, Dv]
+    i_gate: jax.Array,  # [B, S, H]
+    f_gate: jax.Array,  # [B, S, H]
+    *,
+    chunk: int = 128,
+    eps: float = 1e-6,
+    interpret: bool = False,
+    normalize: bool = True,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, S, H, Dk = q.shape
+    Dv = v.shape[-1]
+    dtype = q.dtype
+    if scale is None:
+        scale = Dk ** -0.5 if normalize else 1.0
+
+    qt = _pad_axis(_pad_axis(q.transpose(0, 2, 1, 3) * scale, 2, chunk), 3, _LANE)
+    kt = _pad_axis(_pad_axis(k.transpose(0, 2, 1, 3), 2, chunk), 3, _LANE)
+    vt = _pad_axis(_pad_axis(v.transpose(0, 2, 1, 3), 2, chunk), 3, _LANE)
+    Sp, Dkp = qt.shape[2], qt.shape[3]
+    Dvp = vt.shape[3]
+    n_chunks = Sp // chunk
+
+    # gates: [B, H, S] -> [B, H, Sp, LANE]; padded tail gets i = -inf (no
+    # contribution) and f = +inf / 0 (no decay distortion).
+    f_pad = 30.0 if normalize else 0.0
+    ig = _pad_axis(i_gate.transpose(0, 2, 1), 2, chunk, value=_NEG)
+    fg = _pad_axis(f_gate.transpose(0, 2, 1), 2, chunk, value=f_pad)
+    ig = jnp.broadcast_to(ig[..., None], (B, H, Sp, 1))
+    fg = jnp.broadcast_to(fg[..., None], (B, H, Sp, 1))
+    ig = _pad_axis(ig, 3, _LANE)
+    fg = _pad_axis(fg, 3, _LANE)
+
+    grid = (B * H, n_chunks)
+    kernel = functools.partial(
+        _mlstm_kernel, chunk=chunk, eps=eps, normalize=normalize
+    )
+    try:
+        compiler_params = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        )
+    except TypeError:  # pragma: no cover
+        compiler_params = None
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, Dkp), lambda i, j, H=H: (i // H, i % H, j, 0)),
+            pl.BlockSpec((1, 1, chunk, Dkp), lambda i, j, H=H: (i // H, i % H, j, 0)),
+            pl.BlockSpec((1, 1, chunk, Dvp), lambda i, j, H=H: (i // H, i % H, j, 0)),
+            pl.BlockSpec((1, 1, chunk, _LANE), lambda i, j, H=H: (i // H, i % H, j, 0)),
+            pl.BlockSpec((1, 1, chunk, _LANE), lambda i, j, H=H: (i // H, i % H, j, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, chunk, Dvp), lambda i, j, H=H: (i // H, i % H, j, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sp, Dvp), dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Dkp, Dvp), jnp.float32),
+            pltpu.VMEM((_SUB, Dkp), jnp.float32),
+            pltpu.VMEM((_SUB, _LANE), jnp.float32),
+        ],
+        interpret=interpret,
+        **({"compiler_params": compiler_params} if compiler_params else {}),
+    )(qt, kt, vt, ig, fg)
+    return out[:, :, :S, :Dv].transpose(0, 2, 1, 3)

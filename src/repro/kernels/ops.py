@@ -1,0 +1,186 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+Backend selection:
+
+- ``"pallas"``            — real Pallas lowering (TPU target).
+- ``"pallas_interpret"``  — Pallas with ``interpret=True`` (CPU validation).
+- ``"xla"``               — the pure-jnp reference path (:mod:`repro.kernels.ref`).
+- ``"auto"``              — ``"pallas"`` on TPU, ``"xla"`` elsewhere.
+
+The CPU container cannot lower Pallas natively, so the 512-device dry-run and
+the smoke tests run the XLA path; kernel correctness is established separately
+by the interpret-mode sweeps in ``tests/test_kernels_*.py``.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+__all__ = [
+    "default_backend",
+    "grid_tick",
+    "flash_attention",
+    "decode_attention",
+    "mlstm_chunk",
+    "selu_mlp",
+]
+
+_VALID = ("auto", "xla", "pallas", "pallas_interpret")
+
+
+@functools.lru_cache(maxsize=1)
+def _platform() -> str:
+    return jax.devices()[0].platform
+
+
+def default_backend() -> str:
+    env = os.environ.get("REPRO_KERNEL_BACKEND", "auto")
+    if env not in _VALID:
+        raise ValueError(f"REPRO_KERNEL_BACKEND must be one of {_VALID}: {env}")
+    return env
+
+
+def _resolve(backend: Optional[str]) -> str:
+    backend = backend or default_backend()
+    if backend == "auto":
+        return "pallas" if _platform() == "tpu" else "xla"
+    return backend
+
+
+def grid_tick(
+    active: jax.Array,
+    remaining: jax.Array,
+    keep_frac: jax.Array,
+    bg_load: jax.Array,
+    bandwidth: jax.Array,
+    leg_proc: jax.Array,
+    proc_link: jax.Array,
+    leg_link: jax.Array,
+    *,
+    backend: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    b = _resolve(backend)
+    if b == "xla":
+        return ref.grid_tick(
+            active, remaining, keep_frac, bg_load, bandwidth,
+            leg_proc, proc_link, leg_link,
+        )
+    from repro.kernels import grid_tick as _k
+
+    return _k.grid_tick_pallas(
+        active, remaining, keep_frac, bg_load, bandwidth,
+        leg_proc, proc_link, leg_link,
+        interpret=(b == "pallas_interpret"),
+    )
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    q_offset: int = 0,
+    backend: Optional[str] = None,
+    grouped: bool = False,
+) -> jax.Array:
+    b = _resolve(backend)
+    if b == "xla":
+        from repro.kernels import flash_attention as _k
+
+        # the chunked flash algorithm in pure jnp: O(S*blk) memory — the
+        # honest CPU/dry-run stand-in for the Pallas kernel. Tiny sequences
+        # use the quadratic oracle directly (cheaper than the scan).
+        if q.shape[1] * k.shape[1] <= 256 * 256 and not grouped:
+            return ref.flash_attention(
+                q, k, v, causal=causal, window=window, scale=scale,
+                q_offset=q_offset,
+            )
+        return _k.flash_attention_xla(
+            q, k, v, causal, window, scale, q_offset, grouped
+        )
+    from repro.kernels import flash_attention as _k
+
+    # positional call: custom_vjp nondiff args may not be passed by keyword
+    return _k.flash_attention_pallas(
+        q, k, v, causal, window, scale, q_offset, b == "pallas_interpret"
+    )
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    *,
+    scale: Optional[float] = None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    b = _resolve(backend)
+    if b == "xla":
+        return ref.decode_attention(q, k_cache, v_cache, lengths, scale=scale)
+    from repro.kernels import decode_attention as _k
+
+    return _k.decode_attention_pallas(
+        q, k_cache, v_cache, lengths, scale=scale,
+        interpret=(b == "pallas_interpret"),
+    )
+
+
+def mlstm_chunk(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    i_gate: jax.Array,
+    f_gate: jax.Array,
+    *,
+    chunk: int = 128,
+    normalize: bool = True,
+    scale: Optional[float] = None,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    b = _resolve(backend)
+    if b == "xla":
+        from repro.kernels import mlstm_chunk as _k
+
+        # chunked recurrence in pure jnp for anything beyond toy lengths
+        # (the fully-parallel oracle is O(S^2) in memory)
+        if q.shape[1] <= 256:
+            return ref.mlstm_chunk(
+                q, k, v, i_gate, f_gate, normalize=normalize, scale=scale
+            )
+        return _k.mlstm_chunk_xla(
+            q, k, v, i_gate, f_gate, chunk=chunk, normalize=normalize,
+            scale=scale,
+        )
+    from repro.kernels import mlstm_chunk as _k
+
+    return _k.mlstm_chunk_pallas(
+        q, k, v, i_gate, f_gate, chunk=chunk, normalize=normalize, scale=scale,
+        interpret=(b == "pallas_interpret"),
+    )
+
+
+def selu_mlp(
+    x: jax.Array,
+    weights: Tuple[jax.Array, ...],
+    biases: Tuple[jax.Array, ...],
+    *,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    b = _resolve(backend)
+    if b == "xla":
+        return ref.selu_mlp(x, weights, biases)
+    from repro.kernels import selu_mlp as _k
+
+    return _k.selu_mlp_pallas(
+        x, weights, biases, interpret=(b == "pallas_interpret")
+    )

@@ -1,0 +1,202 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth: kernels are validated against
+these in ``interpret=True`` mode over shape/dtype sweeps (see tests), and the
+XLA dispatch path in :mod:`repro.kernels.ops` executes these directly on
+backends without Pallas support (CPU dry-run).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "grid_tick",
+    "flash_attention",
+    "decode_attention",
+    "mlstm_chunk",
+    "selu_mlp",
+]
+
+
+# ---------------------------------------------------------------------------
+# grid_tick: GDAPS fair-share transfer tick (paper Section 4)
+# ---------------------------------------------------------------------------
+def grid_tick(
+    active: jax.Array,  # [T] f32 in {0,1}
+    remaining: jax.Array,  # [T] f32 MB
+    keep_frac: jax.Array,  # [T] f32 = 1 - protocol overhead
+    bg_load: jax.Array,  # [L] f32 background processes (>=0)
+    bandwidth: jax.Array,  # [L] f32 MB/tick
+    leg_proc: jax.Array,  # [T, P] f32 one-hot
+    proc_link: jax.Array,  # [P, L] f32 one-hot
+    leg_link: jax.Array,  # [T, L] f32 one-hot
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One simulation tick of the GDAPS transfer mechanism.
+
+    chunk = (link.bandwidth / (background_load + campaign_load)) / n_threads
+    chunk -= chunk * protocol.overhead
+
+    Returns ``(xfer[T], proc_xfer[P], link_xfer[L])`` — MB moved this tick per
+    leg / per process / per link (campaign traffic only).
+    """
+    f32 = jnp.float32
+    active = active.astype(f32)
+    threads_per_proc = active @ leg_proc  # [P]
+    proc_is_active = (threads_per_proc > 0).astype(f32)
+    campaign_load = proc_is_active @ proc_link  # [L]
+    denom = jnp.maximum(campaign_load + jnp.maximum(bg_load, 0.0), 1.0)
+    per_proc_bw = bandwidth / denom  # [L]
+    # gather link/process quantities back to legs (one-hot matvecs)
+    per_proc_bw_leg = leg_link @ per_proc_bw  # [T]
+    threads_leg = jnp.maximum(leg_proc @ threads_per_proc, 1.0)  # [T]
+    chunk = active * keep_frac * per_proc_bw_leg / threads_leg
+    xfer = jnp.minimum(remaining, chunk)
+    proc_xfer = xfer @ leg_proc  # [P]
+    link_xfer = xfer @ leg_link  # [L]
+    return xfer, proc_xfer, link_xfer
+
+
+# ---------------------------------------------------------------------------
+# flash_attention: causal/GQA/sliding-window attention (training & prefill)
+# ---------------------------------------------------------------------------
+def flash_attention(
+    q: jax.Array,  # [B, Sq, Hq, D]
+    k: jax.Array,  # [B, Skv, Hkv, D]
+    v: jax.Array,  # [B, Skv, Hkv, D]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,  # sliding window size (None = full)
+    scale: Optional[float] = None,
+    q_offset: int = 0,  # absolute position of q[0] (for prefill continuation)
+) -> jax.Array:
+    """Reference multi-head attention with GQA and optional sliding window."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    rep = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    dtype = q.dtype
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    kf = jnp.repeat(kf, rep, axis=2)  # [B, Skv, Hq, D]
+    vf = jnp.repeat(vf, rep, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    q_pos = jnp.arange(Sq)[:, None] + q_offset
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # fully-masked rows (can happen with window=0 edge cases) -> zeros
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention: one-token query against a long KV cache (serving)
+# ---------------------------------------------------------------------------
+def decode_attention(
+    q: jax.Array,  # [B, Hq, D] single new token per sequence
+    k_cache: jax.Array,  # [B, S, Hkv, D]
+    v_cache: jax.Array,  # [B, S, Hkv, D]
+    lengths: jax.Array,  # [B] i32 valid cache lengths
+    *,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Reference KV-cache decode attention (GQA), masking positions >= length."""
+    B, Hq, D = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    rep = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    dtype = q.dtype
+    qf = q.astype(jnp.float32) * scale
+    kf = jnp.repeat(k_cache.astype(jnp.float32), rep, axis=2)
+    vf = jnp.repeat(v_cache.astype(jnp.float32), rep, axis=2)
+    logits = jnp.einsum("bhd,bshd->bhs", qf, kf)
+    mask = jnp.arange(S)[None, :] < lengths[:, None]  # [B, S]
+    logits = jnp.where(mask[:, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+    out = jnp.einsum("bhs,bshd->bhd", probs, vf)
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# mlstm_chunk: chunkwise-parallel mLSTM (xLSTM) / gated linear attention
+# ---------------------------------------------------------------------------
+def mlstm_chunk(
+    q: jax.Array,  # [B, S, H, Dk]
+    k: jax.Array,  # [B, S, H, Dk]
+    v: jax.Array,  # [B, S, H, Dv]
+    i_gate: jax.Array,  # [B, S, H] input-gate pre-activations
+    f_gate: jax.Array,  # [B, S, H] forget-gate pre-activations
+    *,
+    eps: float = 1e-6,
+    normalize: bool = True,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Reference mLSTM (matrix-memory LSTM) in its fully-parallel form.
+
+    ``normalize=True`` follows xLSTM (arXiv:2405.04517): stabilized
+    exponential input gates, *sigmoid* forget gates in log space, and the
+    max(|.|, exp(-m)) normalizer. ``normalize=False`` is the mamba-2 SSD
+    variant: ``f_gate`` is the raw log-decay (<= 0), ``i_gate`` the raw
+    log-injection, no stabilizer shift and no normalizer — the two memories
+    are the same chunkwise recurrence (see DESIGN.md).
+    """
+    B, S, H, Dk = q.shape
+    dtype = q.dtype
+    if scale is None:
+        scale = Dk ** -0.5 if normalize else 1.0
+    qf = q.astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    fg = f_gate.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(fg) if normalize else fg
+    logi = i_gate.astype(jnp.float32)
+    # cumulative log forget: F[t] = sum_{u<=t} logf[u]
+    F = jnp.cumsum(logf, axis=1)
+    # D_ts = F[t] - F[s] + logi[s] for s <= t  (decay from s to t)
+    dmat = F[:, :, None, :] - F[:, None, :, :] + logi[:, None, :, :]  # [B,S,S,H]
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    dmat = jnp.where(causal[None, :, :, None], dmat, -jnp.inf)
+    if normalize:
+        # stabilizer m[t] = max_s D_ts
+        m = jnp.max(dmat, axis=2, keepdims=True)  # [B,S,1,H]
+    else:
+        m = jnp.zeros_like(dmat[:, :, :1, :])
+    dexp = jnp.exp(dmat - m)  # [B,S,S,H]
+    scores = jnp.einsum("bthd,bshd->btsh", qf, kf) * dexp
+    out = jnp.einsum("btsh,bshd->bthd", scores, vf)
+    if normalize:
+        norm = jnp.maximum(jnp.abs(scores.sum(axis=2)), jnp.exp(-m[:, :, 0, :])) + eps
+        out = out / norm[..., None]
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# selu_mlp: fused SELU MLP forward (SBI classifier, 4 hidden layers x 128)
+# ---------------------------------------------------------------------------
+def selu_mlp(
+    x: jax.Array,  # [N, F_in]
+    weights: Tuple[jax.Array, ...],  # list of [F_i, F_{i+1}]
+    biases: Tuple[jax.Array, ...],  # list of [F_{i+1}]
+) -> jax.Array:
+    """Reference MLP with SELU nonlinearities on all but the last layer."""
+    h = x.astype(jnp.float32)
+    n = len(weights)
+    for i, (w, b) in enumerate(zip(weights, biases)):
+        h = h @ w.astype(jnp.float32) + b.astype(jnp.float32)
+        if i < n - 1:
+            h = jax.nn.selu(h)
+    return h.astype(x.dtype)

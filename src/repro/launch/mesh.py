@@ -1,0 +1,34 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so that importing this module never
+touches jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any import.
+
+Topology: one TPU v5e pod = 256 chips arranged (data=16, model=16); the
+multi-pod mesh adds a leading pure-DP ``pod`` axis across the DCI.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "HW"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over the locally available devices (tests / examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+class HW:
+    """TPU v5e roofline constants (per assignment)."""
+
+    PEAK_FLOPS_BF16 = 197e12  # FLOP/s per chip
+    HBM_BW = 819e9  # bytes/s per chip
+    ICI_BW = 50e9  # bytes/s per link (~per chip, one direction)
+    HBM_BYTES = 16 * 1024**3  # 16 GiB per chip

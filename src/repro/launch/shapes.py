@@ -1,0 +1,87 @@
+"""Assigned input shapes and per-(arch x shape) input_specs.
+
+``input_specs`` returns weak-type-correct ShapeDtypeStruct stand-ins for
+every model input — shardable, no device allocation — the dry-run lowers
+against these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.train.optimizer import AdamWConfig
+
+__all__ = ["SHAPES", "ShapeSpec", "input_specs", "cell_is_legal", "skip_reason"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def cell_is_legal(cfg: ModelConfig, shape: ShapeSpec) -> bool:
+    if shape.name == "long_500k":
+        return cfg.supports_long_context
+    return True
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> Optional[str]:
+    if cell_is_legal(cfg, shape):
+        return None
+    return (
+        "pure full-attention stack: a 512k-token KV cache on every layer is "
+        "the quadratic regime the shape excludes (DESIGN.md §4)"
+    )
+
+
+def _sds(shape: Tuple[int, ...], dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs_for(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the data batch of a train/prefill step."""
+    B, S = shape.global_batch, shape.seq_len
+    act_dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+    batch: Dict[str, Any] = {"tokens": _sds((B, S), jnp.int32)}
+    if cfg.frontend:
+        batch["frontend_embeds"] = _sds(
+            (B, cfg.frontend_tokens, cfg.frontend_dim), act_dt
+        )
+    return batch
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, opt_cfg: Optional[AdamWConfig] = None):
+    """All abstract inputs for the step lowered by the dry-run.
+
+    - train:   (train_state, batch)
+    - prefill: (params, cache, batch)
+    - decode:  (params, cache, tokens[B])
+    """
+    opt_cfg = opt_cfg or AdamWConfig(lr=1e-4)
+    params = jax.eval_shape(lambda k: M.init_params(k, cfg), jax.random.PRNGKey(0))
+    if shape.kind == "train":
+        state = jax.eval_shape(lambda p: M.init_train_state(p, opt_cfg), params)
+        return state, batch_specs_for(cfg, shape)
+    cache = jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len)
+    )
+    if shape.kind == "prefill":
+        return params, cache, batch_specs_for(cfg, shape)
+    tokens = _sds((shape.global_batch,), jnp.int32)
+    return params, cache, tokens

@@ -1,0 +1,6 @@
+"""Composable LM architecture zoo (dense / MoE / SSM / xLSTM / hybrid /
+enc-dec / VLM-audio-stub backbones) used as the computational campaigns of
+the framework and as the dry-run / roofline subjects."""
+from repro.models.config import ModelConfig
+
+__all__ = ["ModelConfig"]

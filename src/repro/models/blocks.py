@@ -1,0 +1,597 @@
+"""Layer blocks: GQA attention (full/sliding), gated MLP, MoE with
+capacity-based dispatch, mamba-style SSD heads, xLSTM mLSTM/sLSTM cells,
+hymba parallel attn+SSM — each with init / full-sequence forward / decode.
+
+Conventions:
+- params are nested dicts of arrays; initializers mirror the apply structure;
+- full-sequence forwards take ``x [B, S, d]`` and absolute ``positions
+  [B, S]``; decode steps take ``x [B, d]``, a cache dict and scalar ``pos``;
+- compute dtype is the config dtype (bf16 by default), accumulation fp32;
+- the SSD <-> mLSTM unification: mamba-2-style selective SSM heads are the
+  ``normalize=False`` variant of the chunkwise mLSTM cell, so both share the
+  ``mlstm_chunk`` kernel (see DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.common import apply_rope, dense_init, rms_norm, rope
+from repro.models.config import BlockKind, ModelConfig
+
+PyTree = Dict[str, Any]
+
+
+def _dt(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+def _theta(cfg: ModelConfig, window) -> float:
+    """Sliding-window layers may use their own RoPE base (gemma3: local
+    layers 10k, global layers 1M)."""
+    if window is not None and cfg.rope_theta_local is not None:
+        return cfg.rope_theta_local
+    return cfg.rope_theta
+
+
+# ===========================================================================
+# attention
+# ===========================================================================
+def init_attention(key: jax.Array, cfg: ModelConfig, *, cross: bool = False) -> PyTree:
+    d, hd, H, Hkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, H * hd), dt),
+        "wk": dense_init(ks[1], (d, Hkv * hd), dt),
+        "wv": dense_init(ks[2], (d, Hkv * hd), dt),
+        "wo": dense_init(ks[3], (H * hd, d), dt),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((Hkv * hd,), dt)
+        p["bv"] = jnp.zeros((Hkv * hd,), dt)
+    return p
+
+
+def _qkv(p: PyTree, x: jax.Array, cfg: ModelConfig):
+    B, S, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return (
+        q.reshape(B, S, H, hd),
+        k.reshape(B, S, Hkv, hd),
+        v.reshape(B, S, Hkv, hd),
+    )
+
+
+def attention_forward(
+    p: PyTree,
+    x: jax.Array,  # [B, S, d]
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,  # [B, S]
+    causal: bool = True,
+    window: Optional[int] = None,
+    backend: Optional[str] = None,
+    rope_tables: Optional[Tuple[jax.Array, jax.Array]] = None,
+) -> jax.Array:
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    if rope_tables is None:
+        cos, sin = rope(positions, cfg.hd, _theta(cfg, window))
+    else:  # "hoist_rope": tables computed once per step (§Perf)
+        cos, sin = rope_tables[window is not None and cfg.rope_theta_local is not None]
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    out = ops.flash_attention(
+        q, k, v, causal=causal, window=window, backend=backend,
+        grouped=cfg.opt("gqa_grouped"),
+    )  # [B, S, H, hd]
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def cross_attention_forward(
+    p: PyTree,
+    x: jax.Array,  # [B, S, d] decoder stream
+    enc_kv: Tuple[jax.Array, jax.Array],  # precomputed K, V [B, Se, Hkv, hd]
+    cfg: ModelConfig,
+    *,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k, v = enc_kv
+    out = ops.flash_attention(q, k, v, causal=False, backend=backend)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def encode_cross_kv(p: PyTree, enc_out: jax.Array, cfg: ModelConfig):
+    B, Se, _ = enc_out.shape
+    k = (enc_out @ p["wk"]).reshape(B, Se, cfg.n_kv_heads, cfg.hd)
+    v = (enc_out @ p["wv"]).reshape(B, Se, cfg.n_kv_heads, cfg.hd)
+    return k, v
+
+
+def init_attention_cache(
+    cfg: ModelConfig, batch: int, max_len: int, *, window: Optional[int] = None
+) -> PyTree:
+    """Ring-buffer KV cache: sliding-window layers allocate only the window
+    (keys stored post-RoPE, so slot order is irrelevant to the softmax)."""
+    size = min(max_len, window) if window else max_len
+    dt = _dt(cfg)
+    return {
+        "k": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.hd), dt),
+        "v": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.hd), dt),
+    }
+
+
+def attention_decode(
+    p: PyTree,
+    x: jax.Array,  # [B, d] one token
+    cache: PyTree,
+    cfg: ModelConfig,
+    *,
+    pos: jax.Array,  # [] current position
+    window: Optional[int] = None,
+    backend: Optional[str] = None,
+) -> Tuple[jax.Array, PyTree]:
+    B, d = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q, k, v = _qkv(p, x[:, None, :], cfg)  # S = 1
+    posb = jnp.broadcast_to(pos, (B, 1))
+    cos, sin = rope(posb, hd, _theta(cfg, window))
+    q = apply_rope(q, cos, sin)[:, 0]  # [B, H, hd]
+    k = apply_rope(k, cos, sin)[:, 0]  # [B, Hkv, hd]
+    v = v[:, 0]
+
+    size = cache["k"].shape[1]
+    slot = pos % size  # ring-buffer slot (post-RoPE keys: order-free)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k[:, None], slot, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v[:, None], slot, 1)
+    valid = jnp.minimum(pos + 1, size)
+    lengths = jnp.full((B,), valid, jnp.int32)
+    out = ops.decode_attention(q, k_cache, v_cache, lengths, backend=backend)
+    y = out.reshape(B, -1) @ p["wo"]
+    return y, {"k": k_cache, "v": v_cache}
+
+
+# ===========================================================================
+# gated MLP
+# ===========================================================================
+def init_mlp(key: jax.Array, cfg: ModelConfig, d_ff: Optional[int] = None) -> PyTree:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d, ff), dt),
+        "w_up": dense_init(ks[1], (d, ff), dt),
+        "w_down": dense_init(ks[2], (ff, d), dt),
+    }
+
+
+def mlp_forward(p: PyTree, x: jax.Array) -> jax.Array:
+    return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+# ===========================================================================
+# mixture of experts (capacity-based dispatch; EP-shardable einsums)
+# ===========================================================================
+def init_moe(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    d = cfg.d_model
+    E = cfg.n_experts
+    ffe = cfg.d_ff_expert or cfg.d_ff
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 6)
+    p = {
+        "router": dense_init(ks[0], (d, E), jnp.float32),
+        "w_gate": dense_init(ks[1], (E, d, ffe), dt, fan_in=d),
+        "w_up": dense_init(ks[2], (E, d, ffe), dt, fan_in=d),
+        "w_down": dense_init(ks[3], (E, ffe, d), dt, fan_in=ffe),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=cfg.n_shared_experts * ffe)
+        p["shared_gate"] = dense_init(ks[5], (d, 1), dt)
+    return p
+
+
+def _moe_route(p: PyTree, x: jax.Array, cfg: ModelConfig):
+    """Shared router math: softmax top-k with renormalized gates."""
+    E, k = cfg.n_experts, cfg.n_experts_active
+    logits = x.astype(jnp.float32) @ p["router"]  # [B, S, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)  # [B, S, k]
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux
+    choice_oh = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # [B, S, k, E]
+    density = jnp.mean(choice_oh.sum(2), axis=(0, 1))
+    aux = E * jnp.sum(density * jnp.mean(probs, axis=(0, 1)))
+    return gate_vals, idx, choice_oh, aux
+
+
+def _experts_apply(p: PyTree, expert_in: jax.Array) -> jax.Array:
+    """[.., E, C, d] -> [.., E, C, d] gated-MLP per expert."""
+    h = jax.nn.silu(jnp.einsum("becd,edf->becf", expert_in, p["w_gate"])) * jnp.einsum(
+        "becd,edf->becf", expert_in, p["w_up"]
+    )
+    return jnp.einsum("becf,efd->becd", h, p["w_down"])
+
+
+def moe_forward(
+    p: PyTree,
+    x: jax.Array,  # [B, S, d]
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, jax.Array]:
+    """Top-k routed experts with per-sequence-group capacity.
+
+    Two dispatch lowerings (cfg.moe_dispatch):
+    - ``"onehot"``: GShard-style dense one-hot dispatch/combine einsums —
+      robust EP-shardable baseline, but the dispatch matmuls cost
+      O(S * E * C * d) FLOPs (~= the expert FLOPs at qwen3 scale).
+    - ``"sort"``: argsort-based dispatch — scatter/gather data movement, no
+      dispatch FLOPs; the beyond-paper optimization measured in §Perf.
+    Returns (output, aux_loss).
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.n_experts_active
+    dtype = x.dtype
+    gate_vals, idx, choice_oh, aux = _moe_route(p, x, cfg)
+    capacity = int(max(1, round(S * k * cfg.moe_capacity_factor / E)))
+
+    if cfg.moe_dispatch == "sort":
+        out = _moe_sort_dispatch(p, x, gate_vals, idx, capacity, cfg)
+    else:
+        # position of each (token, choice) in its expert queue, per group
+        flat_oh = choice_oh.reshape(B, S * k, E)
+        pos = jnp.einsum(
+            "bte,bte->bt", jnp.cumsum(flat_oh, axis=1) - flat_oh, flat_oh
+        )  # [B, S*k]
+        keep = (pos < capacity).astype(jnp.float32)
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), capacity, dtype=jnp.float32)
+        disp = jnp.einsum(
+            "bte,btc->btec", flat_oh * keep[..., None], pos_oh
+        ).reshape(B, S, k, E, capacity).sum(2)  # [B, S, E, C]
+        comb = disp * (gate_vals[..., None, None] * choice_oh[..., None]).sum(2)
+        expert_in = jnp.einsum("bsec,bsd->becd", disp.astype(dtype), x)
+        expert_out = _experts_apply(p, expert_in)
+        out = jnp.einsum("bsec,becd->bsd", comb.astype(dtype), expert_out)
+
+    if "shared" in p:
+        shared = mlp_forward(p["shared"], x) * jax.nn.sigmoid(x @ p["shared_gate"])
+        out = out + shared
+    return out, aux
+
+
+def _moe_sort_dispatch(
+    p: PyTree,
+    x: jax.Array,  # [B, S, d]
+    gate_vals: jax.Array,  # [B, S, k]
+    idx: jax.Array,  # [B, S, k]
+    capacity: int,
+    cfg: ModelConfig,
+) -> jax.Array:
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.n_experts_active
+    dtype = x.dtype
+    Tk = S * k
+    eids = idx.reshape(B, Tk)
+    gates = gate_vals.reshape(B, Tk)
+    order = jnp.argsort(eids, axis=1, stable=True)  # [B, Tk]
+    sorted_eid = jnp.take_along_axis(eids, order, axis=1)
+    # rank within each expert segment
+    firsts = jax.vmap(lambda a: jnp.searchsorted(a, a, side="left"))(sorted_eid)
+    rank = jnp.arange(Tk)[None, :] - firsts  # [B, Tk]
+    keep = rank < capacity
+    tok = order // k  # source token of each sorted choice
+    tok_vecs = jnp.take_along_axis(x, tok[..., None], axis=1)  # [B, Tk, d]
+
+    # scatter into per-group expert buffers [B, E, C, d] (drop on overflow)
+    e_idx = jnp.where(keep, sorted_eid, E)  # out-of-range -> dropped
+    c_idx = jnp.where(keep, rank, capacity)
+
+    def scatter_one(buf, e, c, vecs):
+        return buf.at[e, c].set(vecs, mode="drop")
+
+    buf0 = jnp.zeros((B, E, capacity, d), dtype)
+    expert_in = jax.vmap(scatter_one)(buf0, e_idx, c_idx, tok_vecs)
+    expert_out = _experts_apply(p, expert_in)
+
+    def gather_one(buf, e, c):
+        return buf.at[e, c].get(mode="fill", fill_value=0)
+
+    back = jax.vmap(gather_one)(expert_out, e_idx, c_idx)  # [B, Tk, d]
+    sorted_gates = jnp.take_along_axis(gates, order, axis=1)
+    back = back * (sorted_gates * keep)[..., None].astype(dtype)
+
+    def scatter_add_one(out, t, vecs):
+        return out.at[t].add(vecs, mode="drop")
+
+    out0 = jnp.zeros((B, S, d), dtype)
+    return jax.vmap(scatter_add_one)(out0, tok, back)
+
+
+# ===========================================================================
+# SSD / mLSTM linear-memory heads (shared math; normalize=True -> mLSTM)
+# ===========================================================================
+def init_mlstm(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    H = cfg.n_heads
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * di), dt),
+        "wq": dense_init(ks[1], (di, di), dt),
+        "wk": dense_init(ks[2], (di, di), dt),
+        "wv": dense_init(ks[3], (di, di), dt),
+        "w_igate": dense_init(ks[4], (di, H), jnp.float32),
+        "w_fgate": dense_init(ks[5], (di, H), jnp.float32),
+        "b_fgate": jnp.full((H,), 3.0, jnp.float32),  # open-forget init
+        "w_out": dense_init(ks[6], (di, d), dt),
+        "gn_scale": jnp.zeros((di,), jnp.float32),
+    }
+
+
+def mlstm_forward(
+    p: PyTree,
+    x: jax.Array,  # [B, S, d]
+    cfg: ModelConfig,
+    *,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    B, S, d = x.shape
+    di = cfg.ssm_expand * d
+    H = cfg.n_heads
+    dh = di // H
+    h = x @ p["w_in"]
+    xc, z = jnp.split(h, 2, axis=-1)  # [B, S, di] each
+    q = (xc @ p["wq"]).reshape(B, S, H, dh)
+    k = (xc @ p["wk"]).reshape(B, S, H, dh)
+    v = (xc @ p["wv"]).reshape(B, S, H, dh)
+    ig = xc.astype(jnp.float32) @ p["w_igate"]  # [B, S, H]
+    fg = xc.astype(jnp.float32) @ p["w_fgate"] + p["b_fgate"]
+    y = ops.mlstm_chunk(q, k, v, ig, fg, backend=backend)  # [B, S, H, dh]
+    y = y.reshape(B, S, di)
+    y = rms_norm(y, p["gn_scale"], cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    return y @ p["w_out"]
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> PyTree:
+    di = cfg.ssm_expand * cfg.d_model
+    H = cfg.n_heads
+    dh = di // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+def _linear_cell_step(q, k, v, li, lf, cache, *, normalize: bool, eps: float = 1e-6):
+    """One recurrent step of the stabilized matrix-memory cell.
+
+    q,k,v: [B, H, dh]; li, lf: [B, H] gate pre-activations.
+    """
+    C, n, m = cache["C"], cache["n"], cache["m"]
+    lfs = jax.nn.log_sigmoid(lf)
+    if normalize:
+        m_new = jnp.maximum(lfs + m, li)
+    else:
+        m_new = jnp.zeros_like(m)
+        lfs = lf  # SSD passes log-decay directly
+    decay = jnp.exp(lfs + m - m_new)[..., None, None]
+    inject = jnp.exp(li - m_new)[..., None, None]
+    qf, kf, vf = (a.astype(jnp.float32) for a in (q, k, v))
+    C_new = decay * C + inject * kf[..., :, None] * vf[..., None, :]
+    n_new = decay[..., 0] * n + inject[..., 0] * kf
+    num = jnp.einsum("bhd,bhdv->bhv", qf, C_new)
+    if normalize:
+        dot = jnp.einsum("bhd,bhd->bh", qf, n_new)
+        norm = jnp.maximum(jnp.abs(dot), jnp.exp(-m_new)) + eps
+        out = num / norm[..., None]
+    else:
+        out = num
+    return out, {"C": C_new, "n": n_new, "m": m_new}
+
+
+def mlstm_decode(
+    p: PyTree,
+    x: jax.Array,  # [B, d]
+    cache: PyTree,
+    cfg: ModelConfig,
+) -> Tuple[jax.Array, PyTree]:
+    B, d = x.shape
+    di = cfg.ssm_expand * d
+    H = cfg.n_heads
+    dh = di // H
+    h = x @ p["w_in"]
+    xc, z = jnp.split(h, 2, axis=-1)
+    q = (xc @ p["wq"]).reshape(B, H, dh) * (dh ** -0.5)
+    k = (xc @ p["wk"]).reshape(B, H, dh)
+    v = (xc @ p["wv"]).reshape(B, H, dh)
+    li = xc.astype(jnp.float32) @ p["w_igate"]
+    lf = xc.astype(jnp.float32) @ p["w_fgate"] + p["b_fgate"]
+    y, new_cache = _linear_cell_step(q, k, v, li, lf, cache, normalize=True)
+    y = y.reshape(B, di).astype(x.dtype)
+    y = rms_norm(y, p["gn_scale"], cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    return y @ p["w_out"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# mamba-style SSD heads (hymba's SSM half): normalize=False linear cell
+# ---------------------------------------------------------------------------
+def init_mamba(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    H = cfg.n_heads
+    N = cfg.ssm_state
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": dense_init(ks[0], (d, 2 * di), dt),
+        "w_B": dense_init(ks[1], (di, H * N), dt),  # k-role
+        "w_C": dense_init(ks[2], (di, H * N), dt),  # q-role
+        "w_dt": dense_init(ks[3], (di, H), jnp.float32),
+        "b_dt": jnp.full((H,), -2.0, jnp.float32),
+        "a_log": jnp.zeros((H,), jnp.float32),  # per-head decay rate
+        "w_out": dense_init(ks[5], (di, d), dt),
+        "gn_scale": jnp.zeros((di,), jnp.float32),
+    }
+
+
+def _mamba_gates(p: PyTree, xc: jax.Array, H: int):
+    """dt/decay pre-activations from mamba parameterization -> SSD gates.
+
+    a_t = exp(-dt_t * exp(a_log)) per head; injection strength log(dt).
+    """
+    dt_raw = xc.astype(jnp.float32) @ p["w_dt"] + p["b_dt"]  # [..., H]
+    dt = jax.nn.softplus(dt_raw)
+    log_decay = -dt * jnp.exp(p["a_log"])  # <= 0
+    log_inject = jnp.log(dt + 1e-9)
+    return log_decay, log_inject
+
+
+def mamba_forward(
+    p: PyTree,
+    x: jax.Array,  # [B, S, d]
+    cfg: ModelConfig,
+    *,
+    backend: Optional[str] = None,
+) -> jax.Array:
+    B, S, d = x.shape
+    di = cfg.ssm_expand * d
+    H, N = cfg.n_heads, cfg.ssm_state
+    dh = di // H
+    h = x @ p["w_in"]
+    xc, z = jnp.split(h, 2, axis=-1)
+    Bv = (xc @ p["w_B"]).reshape(B, S, H, N)  # k-role
+    Cv = (xc @ p["w_C"]).reshape(B, S, H, N)  # q-role
+    vv = xc.reshape(B, S, H, dh)  # v-role
+    log_decay, log_inject = _mamba_gates(p, xc, H)  # [B, S, H]
+    # SSD == mlstm_chunk with normalize=False: f_gate is raw log-decay,
+    # i_gate raw log-injection, unit scale, no normalizer (see kernels.ref).
+    y = ops.mlstm_chunk(
+        Cv, Bv, vv, log_inject, log_decay,
+        backend=backend, normalize=False, scale=1.0,
+    )  # [B, S, H, dh]
+    y = y.reshape(B, S, di)
+    y = rms_norm(y, p["gn_scale"], cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    return y @ p["w_out"]
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int) -> PyTree:
+    di = cfg.ssm_expand * cfg.d_model
+    H, N = cfg.n_heads, cfg.ssm_state
+    dh = di // H
+    return {
+        "C": jnp.zeros((batch, H, N, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, N), jnp.float32),
+        "m": jnp.zeros((batch, H), jnp.float32),
+    }
+
+
+def mamba_decode(
+    p: PyTree, x: jax.Array, cache: PyTree, cfg: ModelConfig
+) -> Tuple[jax.Array, PyTree]:
+    B, d = x.shape
+    di = cfg.ssm_expand * d
+    H, N = cfg.n_heads, cfg.ssm_state
+    dh = di // H
+    h = x @ p["w_in"]
+    xc, z = jnp.split(h, 2, axis=-1)
+    Bv = (xc @ p["w_B"]).reshape(B, H, N)
+    Cv = (xc @ p["w_C"]).reshape(B, H, N)
+    vv = xc.reshape(B, H, dh)
+    log_decay, log_inject = _mamba_gates(p, xc, H)
+    y, new_cache = _linear_cell_step(
+        Cv, Bv, vv, log_inject, log_decay, cache, normalize=False
+    )
+    y = y.reshape(B, di).astype(x.dtype)
+    y = rms_norm(y, p["gn_scale"], cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    return y @ p["w_out"], new_cache
+
+
+# ===========================================================================
+# sLSTM (scalar-memory, truly recurrent)
+# ===========================================================================
+def init_slstm(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_gates": dense_init(ks[0], (d, 4 * d), dt),  # i, f, z, o
+        "r_gates": dense_init(ks[1], (H, dh, 4 * dh), jnp.float32, fan_in=dh),
+        "b_gates": jnp.zeros((4 * d,), jnp.float32),
+        "w_out": dense_init(ks[2], (d, d), dt),
+        "gn_scale": jnp.zeros((d,), jnp.float32),
+    }
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> PyTree:
+    d = cfg.d_model
+    return {
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+    }
+
+
+def _slstm_cell(p: PyTree, gates_x: jax.Array, cache: PyTree, H: int):
+    """gates_x: [B, 4d] input contribution; recurrence is block-diagonal."""
+    B = gates_x.shape[0]
+    d = cache["h"].shape[-1]
+    dh = d // H
+    h_prev = cache["h"].reshape(B, H, dh)
+    rec = jnp.einsum("bhd,hdg->bhg", h_prev, p["r_gates"]).reshape(B, 4 * d)
+    pre = gates_x.astype(jnp.float32) + rec + p["b_gates"]
+    it, ft, zt, ot = jnp.split(pre, 4, axis=-1)  # [B, d] each
+    m_new = jnp.maximum(ft + cache["m"], it)  # exp forget-gate stabilizer
+    i_g = jnp.exp(it - m_new)
+    f_g = jnp.exp(ft + cache["m"] - m_new)
+    c_new = f_g * cache["c"] + i_g * jnp.tanh(zt)
+    n_new = f_g * cache["n"] + i_g
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+    return h_new, {"h": h_new, "c": c_new, "n": n_new, "m": m_new}
+
+
+def slstm_forward(p: PyTree, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    B, S, d = x.shape
+    gates_x = x @ p["w_gates"]  # [B, S, 4d]
+    cache0 = init_slstm_cache(cfg, B)
+
+    def step(cache, gx):
+        h, cache = _slstm_cell(p, gx, cache, cfg.n_heads)
+        return cache, h
+
+    _, hs = jax.lax.scan(step, cache0, jnp.moveaxis(gates_x, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)  # [B, S, d]
+    y = rms_norm(y, p["gn_scale"], cfg.norm_eps)
+    return y @ p["w_out"]
+
+
+def slstm_decode(
+    p: PyTree, x: jax.Array, cache: PyTree, cfg: ModelConfig
+) -> Tuple[jax.Array, PyTree]:
+    gx = x @ p["w_gates"]
+    h, new_cache = _slstm_cell(p, gx, cache, cfg.n_heads)
+    y = rms_norm(h.astype(x.dtype), p["gn_scale"], cfg.norm_eps)
+    return y @ p["w_out"], new_cache

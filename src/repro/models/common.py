@@ -1,0 +1,152 @@
+"""Shared model building blocks: norms, RoPE, init helpers, logical sharding
+annotations.
+
+Parameters are nested dicts of arrays. Each initializer has a twin
+``*_spec`` path in :mod:`repro.parallel.sharding` that assigns PartitionSpecs
+by tree path, so the same structure drives init, checkpointing, and pjit.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Dtypes",
+    "rms_norm",
+    "rope",
+    "apply_rope",
+    "dense_init",
+    "zeros_init",
+    "cross_entropy_loss",
+    "shard_hint",
+]
+
+PyTree = Any
+
+
+class Dtypes:
+    @staticmethod
+    def of(name: str):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+@functools.lru_cache(maxsize=32)
+def _rope_freqs(hd: int, theta: float) -> Tuple[Tuple[float, ...], ...]:
+    import numpy as np
+
+    inv = 1.0 / (theta ** (np.arange(0, hd, 2) / hd))
+    return tuple(map(tuple, [inv]))
+
+
+def rope(positions: jax.Array, hd: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables for positions: returns ([..., hd/2] cos, sin)."""
+    import numpy as np
+
+    inv = jnp.asarray(
+        1.0 / (theta ** (np.arange(0, hd, 2, dtype=np.float32) / hd)), jnp.float32
+    )
+    ang = positions.astype(jnp.float32)[..., None] * inv  # [..., hd/2]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [..., S, H, hd]; cos/sin: [..., S, hd/2] (broadcast over heads)."""
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    x1, x2 = jnp.split(xf, 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(dtype)
+
+
+def dense_init(key: jax.Array, shape: Tuple[int, ...], dtype, fan_in: Optional[int] = None) -> jax.Array:
+    fan_in = fan_in if fan_in is not None else shape[0]
+    return (jax.random.normal(key, shape, jnp.float32) * fan_in ** -0.5).astype(dtype)
+
+
+def zeros_init(shape: Tuple[int, ...], dtype) -> jax.Array:
+    return jnp.zeros(shape, dtype)
+
+
+def cross_entropy_loss(
+    logits: jax.Array,  # [B, S, V] (any float dtype; upcast internally)
+    targets: jax.Array,  # [B, S] i32
+    mask: Optional[jax.Array] = None,  # [B, S]
+) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)
+
+
+def shard_hint(x: jax.Array, spec) -> jax.Array:
+    """with_sharding_constraint that is a no-op outside a mesh context."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+def tp_boundary(x: jax.Array) -> jax.Array:
+    """Pin the tensor-parallel partial-sum resolution point ("bf16_boundary"
+    §Perf lever): constrain the last (feature) dim replicated while leaving
+    batch/seq dims unconstrained, so GSPMD inserts the TP all-reduce HERE —
+    in the value's own (bf16) dtype — instead of hoisting it past the fp32
+    upcast inside the next norm.
+
+    Measured outcome (EXPERIMENTS.md §Perf): REFUTED — leaving batch dims
+    unconstrained lets GSPMD pick batch-replicated layouts and the pin adds
+    resharding instead of removing it. Kept for the record; use
+    :func:`act_pin` instead."""
+    from jax.sharding import PartitionSpec as P
+
+    U = P.UNCONSTRAINED
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, P(*([U] * (x.ndim - 1)), None)
+        )
+    except (ValueError, RuntimeError, KeyError):
+        return x
+
+
+def act_pin(x: jax.Array) -> jax.Array:
+    """Pin block-boundary activations to the Megatron layout: batch sharded
+    over the data axes, sequence/feature replicated across model ("act_pin"
+    §Perf lever — stops GSPMD from drifting into batch-replicated,
+    model-sharded activation layouts whose resolution all-reduces dominate
+    the collective term)."""
+    from jax.sharding import PartitionSpec as P
+
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            # legacy `with mesh:` context (the dry-run path)
+            from jax._src import mesh as mesh_lib
+
+            mesh = mesh_lib.thread_resources.env.physical_mesh
+        if mesh is None or not mesh.axis_names:
+            return x
+        dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        if not dp:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, P(dp, *([None] * (x.ndim - 1)))
+        )
+    except (ValueError, RuntimeError, KeyError, AttributeError, ImportError):
+        return x

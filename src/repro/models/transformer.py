@@ -1,0 +1,660 @@
+"""Transformer stack assembly: pattern-cycled blocks, scan-over-layers with
+remat, encoder-decoder wiring, frontend stubs, and the decode path.
+
+Layer parameters are stacked ``[n_units, ...]`` and scanned (keeps HLO size
+O(pattern) instead of O(layers) — essential for the 512-device dry-run
+compile times); a tail stack covers ``n_layers % pattern_len`` layers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as _ops
+from repro.models import blocks as B
+from repro.models.common import act_pin, apply_rope, dense_init, rms_norm, rope, tp_boundary
+from repro.models.config import BlockKind, ModelConfig
+
+PyTree = Dict[str, Any]
+
+__all__ = [
+    "init_params",
+    "forward",
+    "init_cache",
+    "decode_step",
+    "prefill",
+]
+
+
+# ===========================================================================
+# init
+# ===========================================================================
+def _init_block(key: jax.Array, cfg: ModelConfig, kind: str, *, cross: bool) -> PyTree:
+    ks = jax.random.split(key, 6)
+    dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+    p: PyTree = {"norm1": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if kind in (BlockKind.ATTN, BlockKind.ATTN_LOCAL, BlockKind.MOE,
+                BlockKind.HYMBA, BlockKind.HYMBA_LOCAL):
+        p["attn"] = B.init_attention(ks[0], cfg)
+        if kind in (BlockKind.HYMBA, BlockKind.HYMBA_LOCAL):
+            p["mamba"] = B.init_mamba(ks[1], cfg)
+        p["norm2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        if kind == BlockKind.MOE:
+            p["moe"] = B.init_moe(ks[2], cfg)
+        else:
+            p["mlp"] = B.init_mlp(ks[2], cfg)
+    elif kind == BlockKind.MAMBA:
+        p["mamba"] = B.init_mamba(ks[0], cfg)
+        p["norm2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["mlp"] = B.init_mlp(ks[1], cfg)
+    elif kind == BlockKind.MLSTM:
+        p["mlstm"] = B.init_mlstm(ks[0], cfg)
+    elif kind == BlockKind.SLSTM:
+        p["slstm"] = B.init_slstm(ks[0], cfg)
+    else:  # pragma: no cover
+        raise ValueError(kind)
+    if cross:
+        p["cross"] = B.init_attention(ks[4], cfg, cross=True)
+        p["norm_cross"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return p
+
+
+def _init_stack(
+    key: jax.Array, cfg: ModelConfig, pattern: Tuple[str, ...],
+    n_units: int, tail: Tuple[str, ...], *, cross: bool,
+) -> PyTree:
+    def unit(k: jax.Array) -> PyTree:
+        ks = jax.random.split(k, len(pattern))
+        return {
+            f"b{i}": _init_block(ks[i], cfg, kind, cross=cross)
+            for i, kind in enumerate(pattern)
+        }
+
+    out: PyTree = {}
+    if n_units:
+        keys = jax.random.split(key, n_units + 1)
+        out["units"] = jax.vmap(unit)(keys[:n_units])
+        tail_key = keys[-1]
+    else:
+        out["units"] = {}
+        tail_key = key
+    if tail:
+        tks = jax.random.split(tail_key, len(tail))
+        out["tail"] = {
+            f"t{i}": _init_block(tks[i], cfg, kind, cross=cross)
+            for i, kind in enumerate(tail)
+        }
+    return out
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> PyTree:
+    dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+    ks = jax.random.split(key, 6)
+    p: PyTree = {
+        "embed": dense_init(ks[0], (cfg.vocab_size, cfg.d_model), dt, fan_in=cfg.d_model),
+        "final_norm": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(ks[1], (cfg.d_model, cfg.vocab_size), dt)
+    if cfg.frontend:
+        p["frontend_proj"] = dense_init(ks[2], (cfg.frontend_dim, cfg.d_model), dt)
+    p["decoder"] = _init_stack(
+        ks[3], cfg, cfg.block_pattern, cfg.n_units, cfg.tail_blocks,
+        cross=cfg.is_encdec,
+    )
+    if cfg.is_encdec:
+        # encoder: plain full-attention blocks, non-causal
+        enc_pattern = (BlockKind.ATTN,)
+        p["encoder"] = _init_stack(
+            ks[4], cfg, enc_pattern, cfg.encoder_layers, (), cross=False
+        )
+        p["enc_final_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return p
+
+
+# ===========================================================================
+# forward (full sequence: training / prefill)
+# ===========================================================================
+def _block_forward(
+    kind: str,
+    p: PyTree,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    causal: bool,
+    enc_out: Optional[jax.Array],
+    backend: Optional[str],
+    rope_tables=None,
+) -> Tuple[jax.Array, jax.Array]:
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.opt("act_pin"):
+        boundary = act_pin
+    elif cfg.opt("bf16_boundary"):
+        boundary = tp_boundary
+    else:
+        boundary = lambda y: y
+    window = cfg.window if kind in (BlockKind.ATTN_LOCAL, BlockKind.HYMBA_LOCAL) else None
+    if kind in (BlockKind.ATTN, BlockKind.ATTN_LOCAL, BlockKind.MOE,
+                BlockKind.HYMBA, BlockKind.HYMBA_LOCAL):
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        a = B.attention_forward(
+            p["attn"], h, cfg, positions=positions, causal=causal,
+            window=window, backend=backend, rope_tables=rope_tables,
+        )
+        if kind in (BlockKind.HYMBA, BlockKind.HYMBA_LOCAL):
+            a = 0.5 * (a + B.mamba_forward(p["mamba"], h, cfg, backend=backend))
+        x = x + boundary(a)
+        if "cross" in p and enc_out is not None:
+            hc = rms_norm(x, p["norm_cross"], cfg.norm_eps)
+            kv = B.encode_cross_kv(p["cross"], enc_out, cfg)
+            x = x + B.cross_attention_forward(p["cross"], hc, kv, cfg, backend=backend)
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if kind == BlockKind.MOE:
+            m, aux = B.moe_forward(p["moe"], h2, cfg)
+        else:
+            m = B.mlp_forward(p["mlp"], h2)
+        x = x + boundary(m)
+    elif kind == BlockKind.MAMBA:
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        x = x + boundary(B.mamba_forward(p["mamba"], h, cfg, backend=backend))
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + boundary(B.mlp_forward(p["mlp"], h2))
+    elif kind == BlockKind.MLSTM:
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        x = x + boundary(B.mlstm_forward(p["mlstm"], h, cfg, backend=backend))
+    elif kind == BlockKind.SLSTM:
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        x = x + boundary(B.slstm_forward(p["slstm"], h, cfg))
+    return x, aux
+
+
+def _stack_forward(
+    stack: PyTree,
+    x: jax.Array,
+    cfg: ModelConfig,
+    pattern: Tuple[str, ...],
+    tail: Tuple[str, ...],
+    *,
+    positions: jax.Array,
+    causal: bool,
+    enc_out: Optional[jax.Array],
+    backend: Optional[str],
+    rope_tables=None,
+) -> Tuple[jax.Array, jax.Array]:
+    def unit_body(carry, unit_params):
+        h, aux = carry
+        for i, kind in enumerate(pattern):
+            h, a = _block_forward(
+                kind, unit_params[f"b{i}"], h, cfg,
+                positions=positions, causal=causal, enc_out=enc_out,
+                backend=backend, rope_tables=rope_tables,
+            )
+            aux = aux + a
+        return (h, aux), None
+
+    body = jax.checkpoint(unit_body) if cfg.remat else unit_body
+    aux = jnp.zeros((), jnp.float32)
+    if stack["units"]:
+        n_units = jax.tree.leaves(stack["units"])[0].shape[0]
+        if cfg.scan_layers:
+            (x, aux), _ = jax.lax.scan(body, (x, aux), stack["units"])
+        else:  # unrolled: dry-run cost extrapolation / small stacks
+            for u in range(n_units):
+                unit = jax.tree.map(lambda a: a[u], stack["units"])
+                (x, aux), _ = body((x, aux), unit)
+    for i, kind in enumerate(tail):
+        x, a = _block_forward(
+            kind, stack["tail"][f"t{i}"], x, cfg,
+            positions=positions, causal=causal, enc_out=enc_out,
+            backend=backend, rope_tables=rope_tables,
+        )
+        aux = aux + a
+    return x, aux
+
+
+def embed_inputs(params: PyTree, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    """Token embeddings, with modality-stub embeddings prepended (VLM) or
+    used as the encoder stream (audio enc-dec)."""
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.frontend == "vision" and "frontend_embeds" in batch:
+        fe = batch["frontend_embeds"].astype(x.dtype) @ params["frontend_proj"]
+        x = jnp.concatenate([fe, x], axis=1)[:, : tokens.shape[1]]
+    return x
+
+
+def forward(
+    params: PyTree,
+    batch: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    *,
+    backend: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward -> (logits [B, S, V], aux_loss)."""
+    enc_out = None
+    if cfg.is_encdec:
+        fe = batch["frontend_embeds"]  # [B, Se, frontend_dim]
+        e = fe.astype(params["embed"].dtype) @ params["frontend_proj"]
+        epos = jnp.broadcast_to(jnp.arange(e.shape[1])[None], e.shape[:2])
+        e, _ = _stack_forward(
+            params["encoder"], e, cfg, (BlockKind.ATTN,), (),
+            positions=epos, causal=False, enc_out=None, backend=backend,
+        )
+        enc_out = rms_norm(e, params["enc_final_norm"], cfg.norm_eps)
+
+    x = embed_inputs(params, batch, cfg)
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None], x.shape[:2])
+    rope_tables = None
+    if cfg.opt("hoist_rope"):
+        # compute the position tables once per step instead of per layer
+        # (kills the per-layer sine/cos recompute + its model-axis gathers);
+        # key False = global-theta tables, True = local (sliding-window)
+        rope_tables = {
+            False: rope(pos, cfg.hd, cfg.rope_theta),
+            True: rope(pos, cfg.hd, cfg.rope_theta_local or cfg.rope_theta),
+        }
+    x, aux = _stack_forward(
+        params["decoder"], x, cfg, cfg.block_pattern, cfg.tail_blocks,
+        positions=pos, causal=True, enc_out=enc_out, backend=backend,
+        rope_tables=rope_tables,
+    )
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return logits, aux
+
+
+# ===========================================================================
+# decode
+# ===========================================================================
+def _init_block_cache(
+    cfg: ModelConfig, kind: str, batch: int, max_len: int, *, cross: bool
+) -> PyTree:
+    window = cfg.window if kind in (BlockKind.ATTN_LOCAL, BlockKind.HYMBA_LOCAL) else None
+    c: PyTree = {}
+    if kind in (BlockKind.ATTN, BlockKind.ATTN_LOCAL, BlockKind.MOE,
+                BlockKind.HYMBA, BlockKind.HYMBA_LOCAL):
+        c["kv"] = B.init_attention_cache(cfg, batch, max_len, window=window)
+        if kind in (BlockKind.HYMBA, BlockKind.HYMBA_LOCAL):
+            c["ssm"] = B.init_mamba_cache(cfg, batch)
+    elif kind == BlockKind.MAMBA:
+        c["ssm"] = B.init_mamba_cache(cfg, batch)
+    elif kind == BlockKind.MLSTM:
+        c["cell"] = B.init_mlstm_cache(cfg, batch)
+    elif kind == BlockKind.SLSTM:
+        c["cell"] = B.init_slstm_cache(cfg, batch)
+    if cross:
+        dt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+        se = cfg.frontend_tokens or max_len
+        c["cross_kv"] = {
+            "k": jnp.zeros((batch, se, cfg.n_kv_heads, cfg.hd), dt),
+            "v": jnp.zeros((batch, se, cfg.n_kv_heads, cfg.hd), dt),
+        }
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    cross = cfg.is_encdec
+
+    def unit_cache(_):
+        return {
+            f"b{i}": _init_block_cache(cfg, kind, batch, max_len, cross=cross)
+            for i, kind in enumerate(cfg.block_pattern)
+        }
+
+    cache: PyTree = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.n_units:
+        cache["units"] = jax.vmap(unit_cache)(jnp.arange(cfg.n_units))
+    else:
+        cache["units"] = {}
+    if cfg.tail_blocks:
+        cache["tail"] = {
+            f"t{i}": _init_block_cache(cfg, kind, batch, max_len, cross=cross)
+            for i, kind in enumerate(cfg.tail_blocks)
+        }
+    return cache
+
+
+def _block_decode(
+    kind: str,
+    p: PyTree,
+    x: jax.Array,  # [B, d]
+    c: PyTree,
+    cfg: ModelConfig,
+    *,
+    pos: jax.Array,
+    backend: Optional[str],
+) -> Tuple[jax.Array, PyTree]:
+    window = cfg.window if kind in (BlockKind.ATTN_LOCAL, BlockKind.HYMBA_LOCAL) else None
+    new_c = dict(c)
+    if kind in (BlockKind.ATTN, BlockKind.ATTN_LOCAL, BlockKind.MOE,
+                BlockKind.HYMBA, BlockKind.HYMBA_LOCAL):
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        a, new_c["kv"] = B.attention_decode(
+            p["attn"], h, c["kv"], cfg, pos=pos, window=window, backend=backend
+        )
+        if kind in (BlockKind.HYMBA, BlockKind.HYMBA_LOCAL):
+            s, new_c["ssm"] = B.mamba_decode(p["mamba"], h, c["ssm"], cfg)
+            a = 0.5 * (a + s)
+        x = x + a
+        if "cross" in p and "cross_kv" in c:
+            hc = rms_norm(x, p["norm_cross"], cfg.norm_eps)
+            kv = (c["cross_kv"]["k"], c["cross_kv"]["v"])
+            xc = B.cross_attention_forward(p["cross"], hc[:, None, :], kv, cfg,
+                                           backend=backend)[:, 0]
+            x = x + xc
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if kind == BlockKind.MOE:
+            m, _ = B.moe_forward(p["moe"], h2[:, None, :], cfg)
+            m = m[:, 0]
+        else:
+            m = B.mlp_forward(p["mlp"], h2)
+        x = x + m
+    elif kind == BlockKind.MAMBA:
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        s, new_c["ssm"] = B.mamba_decode(p["mamba"], h, c["ssm"], cfg)
+        x = x + s
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + B.mlp_forward(p["mlp"], h2)
+    elif kind == BlockKind.MLSTM:
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        s, new_c["cell"] = B.mlstm_decode(p["mlstm"], h, c["cell"], cfg)
+        x = x + s
+    elif kind == BlockKind.SLSTM:
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        s, new_c["cell"] = B.slstm_decode(p["slstm"], h, c["cell"], cfg)
+        x = x + s
+    return x, new_c
+
+
+def decode_step(
+    params: PyTree,
+    tokens: jax.Array,  # [B] i32 current tokens
+    cache: PyTree,
+    cfg: ModelConfig,
+    *,
+    backend: Optional[str] = None,
+) -> Tuple[jax.Array, PyTree]:
+    """One token of autoregressive decode -> (logits [B, V], new cache)."""
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tokens, axis=0)  # [B, d]
+
+    new_cache: PyTree = {"pos": pos + 1, "units": cache["units"]}
+
+    def unit_body(x, scanned):
+        unit_params, unit_cache = scanned
+        new_unit = {}
+        h = x
+        for i, kind in enumerate(cfg.block_pattern):
+            h, new_unit[f"b{i}"] = _block_decode(
+                kind, unit_params[f"b{i}"], h, unit_cache[f"b{i}"], cfg,
+                pos=pos, backend=backend,
+            )
+        return h, new_unit
+
+    if cfg.n_units:
+        if cfg.scan_layers:
+            x, new_units = jax.lax.scan(
+                unit_body, x, (params["decoder"]["units"], cache["units"])
+            )
+        else:
+            outs = []
+            for u in range(cfg.n_units):
+                pu = jax.tree.map(lambda a: a[u], params["decoder"]["units"])
+                cu = jax.tree.map(lambda a: a[u], cache["units"])
+                x, nu = unit_body(x, (pu, cu))
+                outs.append(nu)
+            new_units = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        new_cache["units"] = new_units
+    if cfg.tail_blocks:
+        new_cache["tail"] = {}
+        for i, kind in enumerate(cfg.tail_blocks):
+            x, nc = _block_decode(
+                kind, params["decoder"]["tail"][f"t{i}"], x, cache["tail"][f"t{i}"],
+                cfg, pos=pos, backend=backend,
+            )
+            new_cache["tail"][f"t{i}"] = nc
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    return logits, new_cache
+
+
+# ===========================================================================
+# prefill (full sequence forward + cache population)
+# ===========================================================================
+def prefill(
+    params: PyTree,
+    batch: Dict[str, jax.Array],
+    cfg: ModelConfig,
+    cache: PyTree,
+    *,
+    backend: Optional[str] = None,
+) -> Tuple[jax.Array, PyTree]:
+    """Run the full-sequence forward and (re)populate the KV/state caches.
+
+    Returns (last-position logits [B, V], cache). State-space blocks replay
+    their final state from the sequence; attention blocks bulk-write K/V.
+    """
+    tokens = batch["tokens"]
+    Bsz, S = tokens.shape
+    enc_out = None
+    if cfg.is_encdec:
+        fe = batch["frontend_embeds"]
+        e = fe.astype(params["embed"].dtype) @ params["frontend_proj"]
+        epos = jnp.broadcast_to(jnp.arange(e.shape[1])[None], e.shape[:2])
+        e, _ = _stack_forward(
+            params["encoder"], e, cfg, (BlockKind.ATTN,), (),
+            positions=epos, causal=False, enc_out=None, backend=backend,
+        )
+        enc_out = rms_norm(e, params["enc_final_norm"], cfg.norm_eps)
+
+    x = embed_inputs(params, batch, cfg)
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (Bsz, S))
+    rope_tables = (
+        {
+            False: rope(pos, cfg.hd, cfg.rope_theta),
+            True: rope(pos, cfg.hd, cfg.rope_theta_local or cfg.rope_theta),
+        }
+        if cfg.opt("hoist_rope") else None
+    )
+
+    def unit_body(carry, scanned):
+        h = carry
+        unit_params, unit_cache = scanned
+        new_unit = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            h, new_unit[f"b{i}"] = _block_prefill(
+                kind, unit_params[f"b{i}"], h, unit_cache[f"b{i}"], cfg,
+                positions=pos, enc_out=enc_out, backend=backend,
+                rope_tables=rope_tables,
+            )
+        return h, new_unit
+
+    new_cache: PyTree = {"pos": jnp.asarray(S, jnp.int32), "units": cache["units"]}
+    if cfg.n_units:
+        if cfg.scan_layers:
+            x, new_units = jax.lax.scan(
+                unit_body, x, (params["decoder"]["units"], cache["units"])
+            )
+        else:
+            outs = []
+            for u in range(cfg.n_units):
+                pu = jax.tree.map(lambda a: a[u], params["decoder"]["units"])
+                cu = jax.tree.map(lambda a: a[u], cache["units"])
+                x, nu = unit_body(x, (pu, cu))
+                outs.append(nu)
+            new_units = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        new_cache["units"] = new_units
+    if cfg.tail_blocks:
+        new_cache["tail"] = {}
+        for i, kind in enumerate(cfg.tail_blocks):
+            x, nc = _block_prefill(
+                kind, params["decoder"]["tail"][f"t{i}"], x,
+                cache["tail"][f"t{i}"], cfg,
+                positions=pos, enc_out=enc_out, backend=backend,
+                rope_tables=rope_tables,
+            )
+            new_cache["tail"][f"t{i}"] = nc
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x[:, -1] @ head
+    return logits, new_cache
+
+
+def _block_prefill(
+    kind: str,
+    p: PyTree,
+    x: jax.Array,  # [B, S, d]
+    c: PyTree,
+    cfg: ModelConfig,
+    *,
+    positions: jax.Array,
+    enc_out: Optional[jax.Array],
+    backend: Optional[str],
+    rope_tables=None,
+) -> Tuple[jax.Array, PyTree]:
+    window = cfg.window if kind in (BlockKind.ATTN_LOCAL, BlockKind.HYMBA_LOCAL) else None
+    new_c = dict(c)
+    Bsz, S, _ = x.shape
+    if kind in (BlockKind.ATTN, BlockKind.ATTN_LOCAL, BlockKind.MOE,
+                BlockKind.HYMBA, BlockKind.HYMBA_LOCAL):
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        q, k, v = B._qkv(p["attn"], h, cfg)
+        if rope_tables is None:
+            cos, sin = rope(positions, cfg.hd, B._theta(cfg, window))
+        else:
+            cos, sin = rope_tables[window is not None and cfg.rope_theta_local is not None]
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        out = _ops.flash_attention(
+            q, k, v, causal=True, window=window, backend=backend,
+            grouped=cfg.opt("gqa_grouped"),
+        )
+        a = out.reshape(Bsz, S, -1) @ p["attn"]["wo"]
+        # bulk-write KV into the (possibly ring) cache
+        size = c["kv"]["k"].shape[1]
+        if size >= S:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(c["kv"]["k"], k, 0, 1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(c["kv"]["v"], v, 0, 1)
+        else:
+            # ring: absolute slot = pos % size for the last `size` positions
+            tail_k = k[:, S - size:]
+            tail_v = v[:, S - size:]
+            slots = (jnp.arange(S - size, S)) % size
+            order = jnp.argsort(slots)
+            k_cache = tail_k[:, order]
+            v_cache = tail_v[:, order]
+        new_c["kv"] = {"k": k_cache, "v": v_cache}
+        if kind in (BlockKind.HYMBA, BlockKind.HYMBA_LOCAL):
+            s_out, new_c["ssm"] = _mamba_prefill(p["mamba"], h, c["ssm"], cfg, backend)
+            a = 0.5 * (a + s_out)
+        x = x + a
+        if "cross" in p and enc_out is not None:
+            hc = rms_norm(x, p["norm_cross"], cfg.norm_eps)
+            kv = B.encode_cross_kv(p["cross"], enc_out, cfg)
+            x = x + B.cross_attention_forward(p["cross"], hc, kv, cfg, backend=backend)
+            new_c["cross_kv"] = {"k": kv[0], "v": kv[1]}
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        if kind == BlockKind.MOE:
+            m, _ = B.moe_forward(p["moe"], h2, cfg)
+        else:
+            m = B.mlp_forward(p["mlp"], h2)
+        x = x + m
+    elif kind == BlockKind.MAMBA:
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        s_out, new_c["ssm"] = _mamba_prefill(p["mamba"], h, c["ssm"], cfg, backend)
+        x = x + s_out
+        h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + B.mlp_forward(p["mlp"], h2)
+    elif kind == BlockKind.MLSTM:
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        s_out, new_c["cell"] = _mlstm_prefill(p["mlstm"], h, c["cell"], cfg, backend)
+        x = x + s_out
+    elif kind == BlockKind.SLSTM:
+        h = rms_norm(x, p["norm1"], cfg.norm_eps)
+        s_out, new_c["cell"] = _slstm_prefill(p["slstm"], h, cfg)
+        x = x + s_out
+    return x, new_c
+
+
+def _final_linear_state(q_unused, k, v, li, lf, *, normalize: bool):
+    """Closed-form final (C, n, m) after a full sequence of the linear cell."""
+    lfs = jax.nn.log_sigmoid(lf) if normalize else lf  # [B, S, H]
+    F = jnp.cumsum(lfs, axis=1)
+    f_end = F[:, -1:]  # [B, 1, H]
+    w = f_end - F + li  # [B, S, H] decay of each position to sequence end
+    if normalize:
+        m = jnp.max(w, axis=1)  # [B, H]
+        wexp = jnp.exp(w - m[:, None])
+    else:
+        m = jnp.zeros(w.shape[:1] + w.shape[2:], jnp.float32)
+        wexp = jnp.exp(w)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C = jnp.einsum("bsh,bshd,bshe->bhde", wexp, kf, vf)
+    n = jnp.einsum("bsh,bshd->bhd", wexp, kf)
+    return {"C": C, "n": n, "m": m}
+
+
+def _mlstm_prefill(p, x, cache, cfg: ModelConfig, backend):
+    Bsz, S, d = x.shape
+    di = cfg.ssm_expand * d
+    H = cfg.n_heads
+    dh = di // H
+    h = x @ p["w_in"]
+    xc, z = jnp.split(h, 2, axis=-1)
+    q = (xc @ p["wq"]).reshape(Bsz, S, H, dh)
+    k = (xc @ p["wk"]).reshape(Bsz, S, H, dh)
+    v = (xc @ p["wv"]).reshape(Bsz, S, H, dh)
+    ig = xc.astype(jnp.float32) @ p["w_igate"]
+    fg = xc.astype(jnp.float32) @ p["w_fgate"] + p["b_fgate"]
+    y = _ops.mlstm_chunk(q, k, v, ig, fg, backend=backend)
+    y = y.reshape(Bsz, S, di)
+    y = rms_norm(y, p["gn_scale"], cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    state = _final_linear_state(q, k, v, ig, fg, normalize=True)
+    return y @ p["w_out"], state
+
+
+def _mamba_prefill(p, x, cache, cfg: ModelConfig, backend):
+    Bsz, S, d = x.shape
+    di = cfg.ssm_expand * d
+    H, N = cfg.n_heads, cfg.ssm_state
+    dh = di // H
+    h = x @ p["w_in"]
+    xc, z = jnp.split(h, 2, axis=-1)
+    Bv = (xc @ p["w_B"]).reshape(Bsz, S, H, N)
+    Cv = (xc @ p["w_C"]).reshape(Bsz, S, H, N)
+    vv = xc.reshape(Bsz, S, H, dh)
+    log_decay, log_inject = B._mamba_gates(p, xc, H)
+    y = _ops.mlstm_chunk(
+        Cv, Bv, vv, log_inject, log_decay,
+        backend=backend, normalize=False, scale=1.0,
+    )
+    y = y.reshape(Bsz, S, di)
+    y = rms_norm(y, p["gn_scale"], cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    state = _final_linear_state(Cv, Bv, vv, log_inject, log_decay, normalize=False)
+    return y @ p["w_out"], state
+
+
+def _slstm_prefill(p, x, cfg: ModelConfig):
+    Bsz, S, d = x.shape
+    gates_x = x @ p["w_gates"]
+    cache0 = B.init_slstm_cache(cfg, Bsz)
+
+    def step(cache, gx):
+        h, cache = B._slstm_cell(p, gx, cache, cfg.n_heads)
+        return cache, h
+
+    final, hs = jax.lax.scan(step, cache0, jnp.moveaxis(gates_x, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    y = rms_norm(y, p["gn_scale"], cfg.norm_eps)
+    return y @ p["w_out"], final

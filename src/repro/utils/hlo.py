@@ -1,0 +1,104 @@
+"""Post-SPMD HLO analysis: collective traffic accounting for the roofline.
+
+Parses ``compiled.as_text()`` (optimized HLO, after GSPMD partitioning — the
+pre-partitioning ``lowered.as_text()`` does not contain the materialized
+collectives) and sums the bytes moved by every collective op.
+
+Accounting (per-device bytes on the wire, ring-algorithm estimates). In
+optimized HLO the operands are untyped ``%refs``, so everything derives from
+the RESULT type (always printed on the line):
+- all-gather:        result * (N-1)/N
+- reduce-scatter:    result * (N-1)          (operand = N x result)
+- all-reduce:        2 * result * (N-1)/N    (RS + AG; operand = result)
+- all-to-all:        result * (N-1)/N        (operand = result)
+- collective-permute: result                 (operand = result)
+
+N is taken from the op's replica_groups when parsable, else the mesh size.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Optional, Tuple
+
+__all__ = ["collective_bytes", "CollectiveStats", "DTYPE_BYTES"]
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+class CollectiveStats(dict):
+    @property
+    def total_bytes(self) -> float:
+        return sum(v["bytes"] for v in self.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(v["count"] for v in self.values())
+
+
+def _shapes_bytes(segment: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(segment):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [num_groups, group_size]
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return default
+
+
+def collective_bytes(hlo_text: str, mesh_size: int) -> CollectiveStats:
+    """Aggregate per-device collective traffic from optimized HLO text."""
+    stats: Dict[str, Dict[str, float]] = defaultdict(
+        lambda: {"bytes": 0.0, "count": 0}
+    )
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        _, _, rhs = line.partition("=")
+        m = _OP_RE.search(rhs)
+        if not m:
+            continue
+        if m.group(2) == "-done":
+            continue  # paired with -start; count once
+        kind = m.group(1)
+        # HLO text: %name = <result type> op(%operand_refs...), attrs
+        result_bytes = _shapes_bytes(rhs[: m.start()])
+        n = _group_size(line, mesh_size)
+        frac = (n - 1) / n if n > 1 else 0.0
+        if kind == "all-gather":
+            moved = result_bytes * frac
+        elif kind == "reduce-scatter":
+            moved = result_bytes * (n - 1)
+        elif kind == "all-reduce":
+            moved = 2.0 * result_bytes * frac
+        elif kind == "all-to-all":
+            moved = result_bytes * frac
+        else:  # collective-permute
+            moved = result_bytes
+        stats[kind]["bytes"] += moved
+        stats[kind]["count"] += 1
+    return CollectiveStats(stats)

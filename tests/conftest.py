@@ -1,0 +1,13 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))  # for `helpers` imports
+
+# Tests and benches see the single real CPU device; ONLY launch/dryrun.py
+# forces 512 virtual devices. Keep determinism + x64-off defaults explicit.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("REPRO_KERNEL_BACKEND", "auto")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_threefry_partitionable", True)

@@ -1,0 +1,85 @@
+"""Shared test fixtures: small grids/campaigns for the engine tests."""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.core.topology import Grid
+from repro.core.workload import (
+    AccessProfileKind,
+    Campaign,
+    FileAccess,
+    Job,
+    LegTable,
+    Replica,
+    compile_campaign,
+)
+
+
+def small_grid(
+    bw_se_se: float = 100.0,
+    bw_se_wn: float = 200.0,
+    bw_wan: float = 50.0,
+    bg=(0.0, 0.0),
+    period: int = 16,
+) -> Grid:
+    g = Grid()
+    g.add_data_center("A")
+    g.add_data_center("B")
+    g.add_storage_element("seA", "A")
+    g.add_storage_element("seB", "B")
+    g.add_worker_node("wn0", "B")
+    g.add_worker_node("wn1", "B")
+    g.add_link("seA", "seB", bw_se_se, bg[0], bg[1], period)
+    g.add_link("seB", "wn0", bw_se_wn, bg[0], bg[1], period)
+    g.add_link("seA", "wn0", bw_wan, bg[0], bg[1], period)
+    g.add_link("seB", "wn1", bw_se_wn, bg[0], bg[1], period)
+    g.add_link("seA", "wn1", bw_wan, bg[0], bg[1], period)
+    return g
+
+
+def mixed_campaign(seed: int = 0, n_jobs: int = 3, n_accesses: int = 4) -> Tuple[Grid, Campaign, LegTable]:
+    """Random mixed-profile campaign on the small grid."""
+    rng = np.random.RandomState(seed)
+    g = small_grid()
+    jobs: List[Job] = []
+    for j in range(n_jobs):
+        wn = f"wn{j % 2}"
+        accs: List[FileAccess] = []
+        for _ in range(n_accesses):
+            kind = rng.randint(3)
+            size = float(rng.uniform(20.0, 400.0))
+            release = int(rng.randint(0, 30))
+            if kind == 0:
+                accs.append(
+                    FileAccess(
+                        Replica(size, "seA"),
+                        AccessProfileKind.DATA_PLACEMENT,
+                        "gsiftp",
+                        release_tick=release,
+                        local_storage_element="seB",
+                    )
+                )
+            elif kind == 1:
+                accs.append(
+                    FileAccess(
+                        Replica(size, "seB"),
+                        AccessProfileKind.STAGE_IN,
+                        "xrdcp",
+                        release_tick=release,
+                    )
+                )
+            else:
+                accs.append(
+                    FileAccess(
+                        Replica(size, "seA"),
+                        AccessProfileKind.REMOTE,
+                        "webdav",
+                        release_tick=release,
+                    )
+                )
+        jobs.append(Job(wn, tuple(accs), name=f"j{j}"))
+    camp = Campaign(tuple(jobs))
+    table = compile_campaign(g, camp)
+    return g, camp, table

@@ -1,0 +1,250 @@
+"""Engine semantics: vectorized tick engine vs. plain-Python oracle, plus
+property-based invariants (hypothesis)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.engine import SimParams, SimSpec, make_params, simulate, simulate_batch
+from repro.core.refsim import reference_simulate
+from repro.core.workload import ProfileTag
+
+from helpers import mixed_campaign, small_grid
+
+
+def _run_both(table, keep=None, bg_mu=0.0, bg_sigma=0.0, max_ticks=4000):
+    params = make_params(table, bg_mu=bg_mu, bg_sigma=bg_sigma)
+    if keep is not None:
+        params = SimParams(
+            keep_frac=jnp.full_like(params.keep_frac, keep),
+            bg_mu=params.bg_mu,
+            bg_sigma=params.bg_sigma,
+        )
+    spec = SimSpec.from_table(table, max_ticks=max_ticks)
+    res = simulate(spec, params, jax.random.PRNGKey(0))
+    ref = reference_simulate(
+        table,
+        np.asarray(params.keep_frac),
+        np.asarray(params.bg_mu),
+        np.asarray(params.bg_sigma),
+        max_ticks,
+    )
+    return res, ref
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_engine_matches_reference_deterministic(seed):
+    """With sigma=0 the simulation is deterministic: the vectorized engine
+    must match the loop-based oracle tick for tick."""
+    _, _, table = mixed_campaign(seed=seed)
+    res, ref = _run_both(table, bg_mu=3.0, bg_sigma=0.0)
+    assert bool(np.all(np.asarray(res.done))) and bool(ref["done"].all())
+    np.testing.assert_allclose(
+        np.asarray(res.transfer_time), ref["transfer_time"], rtol=0, atol=0
+    )
+    np.testing.assert_allclose(np.asarray(res.conth_mb), ref["conth_mb"], rtol=2e-5, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(res.conpr_mb), ref["conpr_mb"], rtol=2e-5, atol=1e-3)
+    assert int(res.ticks) == int(ref["ticks"])
+
+
+def test_bytes_conserved():
+    """Every completed leg transfers exactly its file size (no more, no less):
+    total transferred = sum over ticks of chunks = size for done legs."""
+    _, _, table = mixed_campaign(seed=7)
+    spec = SimSpec.from_table(table, max_ticks=4000)
+    params = make_params(table, bg_mu=1.0, bg_sigma=0.5)
+    res = simulate(spec, params, jax.random.PRNGKey(3))
+    assert bool(np.all(np.asarray(res.done)))
+    # remaining is not exposed; completion itself asserts conservation since
+    # done requires remaining <= 1e-6 and xfer is clipped to remaining.
+
+
+def test_overhead_slows_transfers():
+    _, _, table = mixed_campaign(seed=1)
+    res_low, _ = _run_both(table, keep=1.0)
+    res_high, _ = _run_both(table, keep=0.7)
+    t_low = np.asarray(res_low.transfer_time)
+    t_high = np.asarray(res_high.transfer_time)
+    assert (t_high >= t_low - 1e-6).all()
+    assert t_high.sum() > t_low.sum()
+
+
+def test_background_load_slows_transfers():
+    _, _, table = mixed_campaign(seed=2)
+    res0, _ = _run_both(table, bg_mu=0.0)
+    res8, _ = _run_both(table, bg_mu=8.0)
+    assert np.asarray(res8.transfer_time).sum() > np.asarray(res0.transfer_time).sum()
+
+
+def test_placement_dependency_ordering():
+    """A placement access's stage-in leg may only start after the placement
+    leg finished."""
+    _, _, table = mixed_campaign(seed=4)
+    spec = SimSpec.from_table(table, max_ticks=4000)
+    res = simulate(spec, make_params(table), jax.random.PRNGKey(0))
+    start = np.asarray(res.start_tick)
+    end = start + np.asarray(res.transfer_time)
+    dep = table.dep
+    for i in range(table.n_legs):
+        if dep[i] >= 0:
+            assert start[i] >= end[dep[i]], (i, start[i], end[dep[i]])
+
+
+def test_simulate_batch_shapes_and_determinism():
+    _, _, table = mixed_campaign(seed=5)
+    spec = SimSpec.from_table(table, max_ticks=4000)
+    params = make_params(table, bg_mu=2.0, bg_sigma=1.0)
+    keys = jax.random.split(jax.random.PRNGKey(0), 4)
+    res = simulate_batch(spec, params, keys)
+    assert res.transfer_time.shape == (4, table.n_legs)
+    # same key -> same draw; different keys -> generally different
+    res_same = simulate_batch(spec, params, keys)
+    np.testing.assert_array_equal(
+        np.asarray(res.transfer_time), np.asarray(res_same.transfer_time)
+    )
+
+
+def test_enabled_mask_excludes_legs():
+    _, _, table = mixed_campaign(seed=6)
+    spec = SimSpec.from_table(table, max_ticks=4000)
+    base = make_params(table)
+    enabled = np.ones(table.n_legs, bool)
+    enabled[0] = False
+    # ensure nothing depends on leg 0 for this check
+    masked = SimParams(base.keep_frac, base.bg_mu, base.bg_sigma,
+                       jnp.asarray(enabled & (table.dep != 0)))
+    res = simulate(spec, masked, jax.random.PRNGKey(0))
+    assert float(res.transfer_time[0]) == 0.0
+    assert bool(res.done[0])  # born done
+
+
+# ---------------------------------------------------------------------------
+# property-based invariants
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    bw=st.floats(10.0, 500.0),
+    bg_mu=st.floats(0.0, 10.0),
+    keep=st.floats(0.5, 1.0),
+)
+def test_property_all_legs_complete_and_throughput_bounded(seed, bw, bg_mu, keep):
+    """Invariants: (1) every leg completes given enough ticks; (2) no leg
+    ever sustains more than the link bandwidth: T >= S * threads... at least
+    T >= S / bw (a single leg cannot beat the physical link)."""
+    rng = np.random.RandomState(seed)
+    g = small_grid(bw_se_se=bw, bw_se_wn=bw, bw_wan=bw)
+    from repro.core.workload import (
+        AccessProfileKind,
+        Campaign,
+        FileAccess,
+        Job,
+        Replica,
+        compile_campaign,
+    )
+
+    accs = []
+    for _ in range(int(rng.randint(1, 6))):
+        size = float(rng.uniform(5.0, 200.0))
+        accs.append(
+            FileAccess(
+                Replica(size, "seA"),
+                AccessProfileKind.REMOTE,
+                "webdav",
+                release_tick=int(rng.randint(0, 10)),
+            )
+        )
+    table = compile_campaign(g, Campaign((Job("wn0", tuple(accs)),)))
+    spec = SimSpec.from_table(table, max_ticks=100_000)
+    params = make_params(table, overhead=1.0 - keep, bg_mu=bg_mu, bg_sigma=0.0)
+    res = simulate(spec, params, jax.random.PRNGKey(seed))
+    assert bool(np.all(np.asarray(res.done)))
+    T = np.asarray(res.transfer_time)
+    S = np.asarray(res.size_mb)
+    # physical bound: a leg can move at most bw * keep MB per tick
+    min_T = S / (bw * keep)
+    assert (T >= np.floor(min_T) - 1e-3).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_property_monotone_in_size(seed):
+    """Two identical concurrent streams: the larger file never finishes
+    first (fair share is size-agnostic)."""
+    g = small_grid()
+    from repro.core.workload import (
+        AccessProfileKind,
+        Campaign,
+        FileAccess,
+        Job,
+        Replica,
+        compile_campaign,
+    )
+
+    rng = np.random.RandomState(seed)
+    s1 = float(rng.uniform(10, 100))
+    s2 = s1 + float(rng.uniform(1, 100))
+    accs = tuple(
+        FileAccess(Replica(s, "seA"), AccessProfileKind.REMOTE, "webdav")
+        for s in (s1, s2)
+    )
+    table = compile_campaign(g, Campaign((Job("wn0", accs),)))
+    spec = SimSpec.from_table(table, max_ticks=50_000)
+    res = simulate(spec, make_params(table), jax.random.PRNGKey(seed))
+    T = np.asarray(res.transfer_time)
+    assert T[1] >= T[0]
+
+
+def test_event_leap_is_exact():
+    """The event-leap engine must reproduce the tick engine exactly for
+    deterministic background loads (the semantics-preserving §Perf
+    optimization)."""
+    for seed in (0, 3, 7):
+        _, _, table = mixed_campaign(seed=seed)
+        spec = SimSpec.from_table(table, max_ticks=8000)
+        params = make_params(table, bg_mu=3.0, bg_sigma=0.0)
+        r0 = simulate(spec, params, jax.random.PRNGKey(0), leap=False)
+        r1 = simulate(spec, params, jax.random.PRNGKey(0), leap=True)
+        for f in ("transfer_time", "conth_mb", "conpr_mb", "start_tick"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(r0, f)), np.asarray(getattr(r1, f)),
+                rtol=1e-4, atol=1e-2, err_msg=f"{seed}/{f}",
+            )
+        assert bool(np.asarray(r1.done).all())
+
+
+def test_event_leap_handles_stochastic_bg():
+    """With sigma > 0 results are statistically equivalent: both engines
+    complete and produce comparable mean transfer times."""
+    _, _, table = mixed_campaign(seed=1)
+    spec = SimSpec.from_table(table, max_ticks=20_000)
+    params = make_params(table, bg_mu=5.0, bg_sigma=2.0)
+    keys = jax.random.split(jax.random.PRNGKey(0), 16)
+    r0 = simulate_batch(spec, params, keys, leap=False)
+    r1 = simulate_batch(spec, params, keys, leap=True)
+    assert bool(np.asarray(r0.done).all()) and bool(np.asarray(r1.done).all())
+    m0 = float(np.asarray(r0.transfer_time).mean())
+    m1 = float(np.asarray(r1.transfer_time).mean())
+    assert abs(m0 - m1) / m0 < 0.15, (m0, m1)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), bg_mu=st.floats(0.0, 20.0))
+def test_property_leap_equals_tick(seed, bg_mu):
+    """Property: for ANY random campaign with deterministic background load,
+    the event-leap engine reproduces the tick engine exactly."""
+    _, _, table = mixed_campaign(seed=seed % 100)
+    spec = SimSpec.from_table(table, max_ticks=20_000)
+    params = make_params(table, bg_mu=bg_mu, bg_sigma=0.0)
+    r0 = simulate(spec, params, jax.random.PRNGKey(seed), leap=False)
+    r1 = simulate(spec, params, jax.random.PRNGKey(seed), leap=True)
+    np.testing.assert_allclose(
+        np.asarray(r0.transfer_time), np.asarray(r1.transfer_time),
+        rtol=1e-4, atol=1e-2,
+    )
+    np.testing.assert_allclose(
+        np.asarray(r0.conth_mb), np.asarray(r1.conth_mb), rtol=1e-3, atol=0.5
+    )

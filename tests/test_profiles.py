@@ -1,0 +1,127 @@
+"""Section-3 experiment reproductions as tests: the simulated data must
+exhibit the paper's linear structure (Eqs. 2-4) and uni-directional links."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dataset import fit_profile, hourly_coefficients, observations
+from repro.core.engine import SimSpec, make_params, simulate
+from repro.core.profiles import (
+    bidirectional_probe,
+    placement_campaign,
+    stagein_campaign,
+)
+from repro.core.workload import ProfileTag, compile_campaign
+
+
+def _sim(grid, campaign, *, bg_mu=0.0, bg_sigma=0.0, seed=0, max_ticks=120_000):
+    table = compile_campaign(grid, campaign)
+    spec = SimSpec.from_table(table, max_ticks=max_ticks)
+    params = make_params(table, bg_mu=bg_mu, bg_sigma=bg_sigma)
+    res = simulate(spec, params, jax.random.PRNGKey(seed))
+    return table, res
+
+
+def test_placement_regression_recovers_linear_fit():
+    """Eq. 3 analogue: T ~ a*S + b*ConPr explains placement transfers with a
+    strong F statistic and positive coefficients."""
+    grid, camp = placement_campaign(n_waves=20, max_concurrent=8, seed=0)
+    table, res = _sim(grid, camp)
+    assert bool(np.all(np.asarray(res.done)))
+    ds = observations(res, ProfileTag.PLACEMENT)
+    fit = fit_profile(ds, ProfileTag.PLACEMENT)
+    a, b = np.asarray(fit.coef)
+    assert a > 0, "time must grow with file size"
+    assert b >= -1e-5, "time must not shrink with concurrent traffic"
+    assert float(fit.f_statistic) > 100.0
+    assert float(fit.r_squared) > 0.9
+
+
+def test_stagein_regression_recovers_linear_fit():
+    grid, camp = stagein_campaign(n_waves=16, max_jobs=8, seed=1)
+    table, res = _sim(grid, camp)
+    assert bool(np.all(np.asarray(res.done)))
+    ds = observations(res, ProfileTag.STAGE_IN)
+    fit = fit_profile(ds, ProfileTag.STAGE_IN)
+    a, b = np.asarray(fit.coef)
+    assert a > 0 and b >= -1e-5
+    assert float(fit.f_statistic) > 100.0
+
+
+def test_remote_regression_thread_term():
+    """Eq. 1 analogue on the production workload: all three terms present."""
+    from repro.core.workload import wlcg_production_workload
+
+    grid, camp = wlcg_production_workload(seed=0)
+    table, res = _sim(grid, camp, bg_mu=5.0, bg_sigma=2.0)
+    ds = observations(res, ProfileTag.REMOTE)
+    fit = fit_profile(ds, ProfileTag.REMOTE)
+    a, b, c = np.asarray(fit.coef)
+    assert a > 0
+    assert float(fit.f_statistic) > 50.0
+
+
+def test_unidirectional_links_fig3():
+    """Fig. 3: the two directions of an SE pair have independent throughput
+    characteristics — simulated hourly (a, b) series must differ clearly."""
+    grid, camp_ab, camp_ba = bidirectional_probe(n_waves=8, files_per_wave=6)
+    t_ab, r_ab = _sim(grid, camp_ab, bg_mu=4.0, bg_sigma=2.0, seed=2)
+    t_ba, r_ba = _sim(grid, camp_ba, bg_mu=30.0, bg_sigma=10.0, seed=3)
+    ab = hourly_coefficients(
+        r_ab, ProfileTag.PLACEMENT, start_ticks=r_ab.start_tick, n_partitions=8
+    )
+    ba = hourly_coefficients(
+        r_ba, ProfileTag.PLACEMENT, start_ticks=r_ba.start_tick, n_partitions=8
+    )
+    a_ab = np.nanmean(ab[:, 0])
+    a_ba = np.nanmean(ba[:, 0])
+    # the B->A direction is much slower (lower bandwidth, higher load)
+    assert a_ba > 2.0 * a_ab
+
+
+def test_profile_separation():
+    """Same file, three profiles: remote access over a slow WAN link is
+    slower than stage-in over the fast LAN link; placement end-to-end
+    (two hops) takes at least as long as its slowest hop."""
+    from helpers import small_grid
+    from repro.core.workload import (
+        AccessProfileKind,
+        Campaign,
+        FileAccess,
+        Job,
+        Replica,
+        compile_campaign,
+    )
+
+    g = small_grid(bw_se_se=100.0, bw_se_wn=200.0, bw_wan=25.0)
+    size = 100.0
+    jobs = (
+        Job(
+            "wn0",
+            (
+                FileAccess(
+                    Replica(size, "seA"),
+                    AccessProfileKind.REMOTE,
+                    "webdav",
+                ),
+            ),
+        ),
+        Job(
+            "wn1",
+            (
+                FileAccess(
+                    Replica(size, "seB"),
+                    AccessProfileKind.STAGE_IN,
+                    "xrdcp",
+                ),
+            ),
+        ),
+    )
+    table = compile_campaign(g, Campaign(jobs))
+    spec = SimSpec.from_table(table, max_ticks=10_000)
+    res = simulate(spec, make_params(table), jax.random.PRNGKey(0))
+    T = np.asarray(res.transfer_time)
+    prof = np.asarray(res.profile)
+    t_remote = T[prof == ProfileTag.REMOTE][0]
+    t_stagein = T[prof == ProfileTag.STAGE_IN][0]
+    assert t_remote > t_stagein

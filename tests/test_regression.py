@@ -1,0 +1,70 @@
+"""OLS / statistics unit tests."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.regression import (
+    coefficient_error,
+    fit_eq1,
+    fit_eq2,
+    ols_no_intercept,
+)
+
+
+def test_ols_recovers_exact_coefficients():
+    rng = np.random.RandomState(0)
+    X = rng.uniform(0.5, 2.0, size=(200, 3)).astype(np.float32)
+    beta = np.array([0.024, 0.049, 0.0012], np.float32)
+    y = X @ beta
+    fit = ols_no_intercept(jnp.asarray(X), jnp.asarray(y))
+    np.testing.assert_allclose(np.asarray(fit.coef), beta, rtol=1e-4)
+    assert float(fit.r_squared) > 0.9999
+
+
+def test_ols_respects_mask():
+    rng = np.random.RandomState(1)
+    X = rng.uniform(0.5, 2.0, size=(100, 2)).astype(np.float32)
+    beta = np.array([1.0, -0.5], np.float32)
+    y = X @ beta
+    # corrupt the masked-out half; fit must be unaffected
+    y_corrupt = y.copy()
+    y_corrupt[50:] += 100.0
+    w = np.zeros(100, np.float32)
+    w[:50] = 1.0
+    fit = ols_no_intercept(jnp.asarray(X), jnp.asarray(y_corrupt), jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(fit.coef), beta, rtol=1e-3)
+
+
+def test_fit_eq1_eq2_shapes():
+    n = 64
+    rng = np.random.RandomState(2)
+    T = jnp.asarray(rng.uniform(1, 10, n).astype(np.float32))
+    S = jnp.asarray(rng.uniform(100, 1000, n).astype(np.float32))
+    c1 = jnp.asarray(rng.uniform(0, 100, n).astype(np.float32))
+    c2 = jnp.asarray(rng.uniform(0, 100, n).astype(np.float32))
+    assert fit_eq1(T, S, c1, c2).coef.shape == (3,)
+    assert fit_eq2(T, S, c2).coef.shape == (2,)
+
+
+def test_coefficient_error_is_paper_eq6():
+    true = jnp.array([0.02385, 0.04886, 0.00117])
+    sim = jnp.array([0.02352, 0.049, 0.00114])
+    err = np.asarray(coefficient_error(true, sim))
+    # Table 1 row 1: 1.4%, 0.3%, 3.3% (rounded)
+    np.testing.assert_allclose(err, [0.0138, 0.0029, 0.0256], atol=2e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 10_000),
+    n=st.integers(10, 300),
+    noise=st.floats(0.0, 0.05),
+)
+def test_property_ols_consistency(seed, n, noise):
+    """With vanishing noise the estimator concentrates on the truth."""
+    rng = np.random.RandomState(seed)
+    X = rng.uniform(1.0, 3.0, size=(n, 2)).astype(np.float64)
+    beta = rng.uniform(0.5, 2.0, size=2)
+    y = X @ beta + noise * rng.standard_normal(n)
+    fit = ols_no_intercept(jnp.asarray(X, jnp.float32), jnp.asarray(y, jnp.float32))
+    np.testing.assert_allclose(np.asarray(fit.coef), beta, atol=max(10 * noise, 1e-3))

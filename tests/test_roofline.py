@@ -1,0 +1,89 @@
+"""Roofline machinery unit tests: HLO collective parsing + term math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.mesh import HW
+from repro.launch.roofline import matmul_param_count, model_flops, roofline_terms
+from repro.launch.shapes import SHAPES, cell_is_legal
+from repro.configs import get_config, list_archs
+from repro.utils.hlo import collective_bytes
+
+
+def test_collective_parser_counts_ops():
+    hlo = """
+  %ar = f32[128,256]{1,0} all-reduce(f32[128,256]{1,0} %x), replica_groups=[2,8]<=[16]
+  %ag = bf16[64,512]{1,0} all-gather(bf16[64,32]{1,0} %y), replica_groups={{0,1,2,3}}
+  %rs = f32[16,16]{1,0} reduce-scatter(f32[256,16]{1,0} %z), replica_groups=[1,16]<=[16]
+  %cp = f32[8,8]{1,0} collective-permute(f32[8,8]{1,0} %w)
+  %aa = f32[32,32]{1,0} all-to-all(f32[32,32]{1,0} %v), replica_groups=[4,4]<=[16]
+"""
+    stats = collective_bytes(hlo, 16)
+    assert stats.total_count == 5
+    # all-reduce: 2 * 128*256*4 * 7/8
+    ar = stats["all-reduce"]["bytes"]
+    np.testing.assert_allclose(ar, 2 * 128 * 256 * 4 * 7 / 8)
+    # all-gather: result 64*512*2 * 3/4
+    ag = stats["all-gather"]["bytes"]
+    np.testing.assert_allclose(ag, 64 * 512 * 2 * 3 / 4)
+    # collective-permute: full operand
+    np.testing.assert_allclose(stats["collective-permute"]["bytes"], 8 * 8 * 4)
+
+
+def test_collective_parser_skips_done_halves():
+    hlo = """
+  %s = f32[64]{0} all-gather-start(f32[4]{0} %x), replica_groups=[1,16]<=[16]
+  %d = f32[64]{0} all-gather-done(f32[64]{0} %s)
+"""
+    stats = collective_bytes(hlo, 16)
+    assert stats.total_count == 1
+
+
+def test_matmul_param_counts_are_sane():
+    """Exact eval_shape counts land near the architectures' nameplate sizes."""
+    expect_b = {
+        "qwen2.5-14b": (13.0, 16.0),
+        "tinyllama-1.1b": (0.9, 1.2),
+        "minitron-8b": (7.0, 10.5),  # assignment d_ff=16384 > hf config's
+        "gemma3-27b": (25.0, 29.5),
+        "internvl2-2b": (1.5, 2.3),  # backbone only (ViT is a stub)
+        "qwen3-moe-235b-a22b": (220.0, 245.0),
+        "hymba-1.5b": (1.2, 1.9),
+        "xlstm-350m": (0.3, 0.6),
+    }
+    for arch, (lo, hi) in expect_b.items():
+        n = matmul_param_count(arch)
+        cfg = get_config(arch)
+        total_b = (n + cfg.vocab_size * cfg.d_model) / 1e9
+        assert lo <= total_b <= hi, (arch, total_b)
+    # MoE active params: qwen3 is ~22B active of ~235B total
+    active = matmul_param_count("qwen3-moe-235b-a22b", active_only=True)
+    assert 15e9 < active < 30e9, active
+
+
+def test_model_flops_kinds():
+    f_train = model_flops("tinyllama-1.1b", "train_4k")
+    f_prefill = model_flops("tinyllama-1.1b", "prefill_32k")
+    f_decode = model_flops("tinyllama-1.1b", "decode_32k")
+    assert f_train > f_prefill > f_decode
+    # train: 6ND with N~1.05B matmul params, D=1M tokens
+    assert 5e15 < f_train < 8e15, f_train
+
+
+def test_roofline_terms_dominance():
+    rec = {
+        "arch": "tinyllama-1.1b", "shape": "train_4k", "n_devices": 256,
+        "flops_total": 5e13, "bytes_accessed_total": 1e12,
+        "collective_bytes_per_device": 5e11,
+    }
+    t = roofline_terms(rec)
+    assert t["compute_s"] == 5e13 / HW.PEAK_FLOPS_BF16
+    assert t["dominant"] in ("compute", "memory", "collective")
+    assert 0 < t["roofline_fraction"] <= 1.5
+    assert t["useful_ratio"] > 0
+
+
+def test_long_context_legality_matrix():
+    legal = {a for a in list_archs()
+             if cell_is_legal(get_config(a), SHAPES["long_500k"])}
+    assert legal == {"gemma3-27b", "hymba-1.5b", "xlstm-350m"}

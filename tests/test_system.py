@@ -1,0 +1,132 @@
+"""End-to-end behaviour tests for the paper's system: grid description ->
+simulation -> analysis -> calibration handoff -> profile optimization, plus
+the dry-run machinery on a small mesh (everything a user touches, wired
+together)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dataset import fit_profile, observations
+from repro.core.engine import SimSpec, make_params, simulate
+from repro.core.topology import Grid
+from repro.core.workload import (
+    AccessProfileKind,
+    Campaign,
+    FileAccess,
+    Job,
+    ProfileTag,
+    Replica,
+    compile_campaign,
+    wlcg_production_workload,
+)
+
+
+def _demo_grid():
+    g = Grid()
+    g.add_data_center("CERN")
+    g.add_data_center("GRIF")
+    g.add_storage_element("grif_se", "GRIF")
+    g.add_storage_element("cern_se", "CERN")
+    g.add_worker_node("wn", "CERN")
+    g.add_link("grif_se", "cern_se", 1250.0, bg_mu=5.0, bg_sigma=1.0)
+    g.add_link("grif_se", "wn", 1250.0, bg_mu=36.9, bg_sigma=14.4)
+    g.add_link("cern_se", "wn", 2500.0)
+    return g
+
+
+def test_three_profiles_end_to_end():
+    """One job exercising all three access profiles produces analyzable
+    observations for each, and profile-appropriate regressions fit."""
+    g = _demo_grid()
+    rng = np.random.RandomState(0)
+    accs = []
+    for i in range(9):
+        size = float(rng.uniform(300, 1500))
+        kind = [AccessProfileKind.REMOTE, AccessProfileKind.STAGE_IN,
+                AccessProfileKind.DATA_PLACEMENT][i % 3]
+        src = "cern_se" if kind is AccessProfileKind.STAGE_IN else "grif_se"
+        accs.append(FileAccess(
+            Replica(size, src), kind,
+            {0: "webdav", 1: "xrdcp", 2: "gsiftp"}[i % 3],
+            local_storage_element="cern_se",
+        ))
+    table = compile_campaign(g, Campaign((Job("wn", tuple(accs)),)))
+    # placement contributes 2 legs
+    assert table.n_legs == 3 + 3 + 3 * 2
+    spec = SimSpec.from_table(table, max_ticks=60_000)
+    res = simulate(spec, make_params(table), jax.random.PRNGKey(0), leap=True)
+    assert bool(np.asarray(res.done).all())
+    for tag in (ProfileTag.REMOTE, ProfileTag.STAGE_IN, ProfileTag.PLACEMENT):
+        ds = observations(res, tag)
+        assert int(ds.valid.sum()) >= 3
+        fit = fit_profile(ds, tag)
+        assert np.asarray(fit.coef)[0] > 0  # time grows with size
+
+
+def test_uni_directional_link_enforcement():
+    g = _demo_grid()
+    # reverse direction requires its own link
+    with pytest.raises(KeyError):
+        g.link("cern_se", "grif_se")
+    # WN -> SE links are rejected (data input only)
+    with pytest.raises(ValueError):
+        g.add_link("wn", "grif_se", 100.0)
+
+
+def test_production_workload_structure():
+    """The Section-5 workload reconstruction: 106 observations, <=12 jobs,
+    <=4 threads per wave, 300MB-3GB files, single WAN link."""
+    grid, camp = wlcg_production_workload(seed=0)
+    table = compile_campaign(grid, camp)
+    assert table.n_legs == 106
+    assert table.n_links == 1
+    assert len(camp.jobs) <= 12
+    assert (table.size_mb >= 300).all() and (table.size_mb <= 3000).all()
+    assert (table.profile == ProfileTag.REMOTE).all()
+    # threads share per-(job, link) processes
+    assert table.n_procs <= len(camp.jobs)
+
+
+def test_calibration_artifacts_shape():
+    """The calibration produces all artifacts the paper reports (posterior
+    samples, theta*, classifier) at a token scale."""
+    from repro.core.calibration import CalibrationConfig, calibrate
+
+    grid, camp = wlcg_production_workload(n_observations=24, seed=0)
+    table = compile_campaign(grid, camp)
+    spec = SimSpec.from_table(table, max_ticks=20_000)
+    cfg = CalibrationConfig(n_presim=256, epochs=3, batch_size=128,
+                            n_chains=2, n_mcmc=500, burn_in=100)
+    res = calibrate(spec, table, jnp.array([0.03, 0.03, 0.001]),
+                    jax.random.PRNGKey(0), cfg)
+    assert res.theta_star.shape == (3,)
+    assert res.theta_map.shape == (3,)
+    assert res.posterior_samples.shape[1] == 3
+    lo = jnp.array([0.0, 0.0, 0.0])
+    hi = jnp.array([0.1, 100.0, 100.0])
+    assert bool(((res.posterior_samples >= lo) & (res.posterior_samples <= hi)).all())
+    assert 0.0 < float(res.accept_rate) <= 1.0
+
+
+def test_sharding_rules_cover_every_param():
+    """Every parameter leaf of every architecture gets a PartitionSpec whose
+    rank does not exceed the leaf's (no rule falls through to a mis-ranked
+    spec)."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs import get_smoke_config, list_archs
+    from repro.models import model as M
+    from repro.parallel import sharding as SH
+
+    for arch in list_archs():
+        cfg = get_smoke_config(arch)
+        params = jax.eval_shape(lambda k, c=cfg: M.init_params(k, c),
+                                jax.random.PRNGKey(0))
+        specs = SH.tree_specs(params, ("pod", "data", "model"))
+        leaves_p, _ = jax.tree_util.tree_flatten(params)
+        leaves_s, _ = jax.tree_util.tree_flatten(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        assert len(leaves_p) == len(leaves_s)
+        for p, s in zip(leaves_p, leaves_s):
+            assert len(s) <= len(p.shape), (arch, p.shape, s)
