@@ -71,13 +71,17 @@ def build_super_table(
     Candidate k of access i maps to 1 (remote/stage-in) or 2 (placement)
     legs; ``cand_legs[i, k]`` holds their leg ids (-1 padding).
     """
-    jobs_accs: List[List[FileAccess]] = [[] for _ in range(max(a.job for a in accesses) + 1)]
-    # interleave all candidates as real accesses; record observation order
-    order: List[Tuple[int, int]] = []  # (access idx, candidate idx) per appended access
+    n_jobs = max(a.job for a in accesses) + 1
+    jobs_accs: List[List[FileAccess]] = [[] for _ in range(n_jobs)]
+    # interleave all candidates as real accesses, remembering per job which
+    # (access, candidate) each appended access came from — compile_campaign
+    # assigns observation ids by walking jobs in order, then each job's
+    # accesses in insertion order, so this per-job record *is* the obs order
+    per_job_pairs: List[List[Tuple[int, int]]] = [[] for _ in range(n_jobs)]
     for i, acc in enumerate(accesses):
         for k, cand in enumerate(acc.candidates):
             jobs_accs[acc.job].append(cand)
-            order.append((i, k))
+            per_job_pairs[acc.job].append((i, k))
     jobs = tuple(
         Job(worker_node=worker_nodes[j], accesses=tuple(a), name=f"job{j}")
         for j, a in enumerate(jobs_accs)
@@ -88,30 +92,25 @@ def build_super_table(
     n_access = len(accesses)
     n_cand = max(len(a.candidates) for a in accesses)
     cand_legs = np.full((n_access, n_cand, 2), -1, np.int64)
-    # obs ids were assigned in compile order: walk them in the same order
-    # placement candidates produce two observations (two legs)
+    # single pass over the compile-order obs walk: candidate (i, k) consumes
+    # one observation (remote / stage-in -> 1 leg) or two (placement -> the
+    # SE->SE leg then its dependent stage-in leg), each mapping to one leg
     legs_by_obs: List[List[int]] = [[] for _ in range(int(table.obs_id.max()) + 1)]
     for leg, obs in enumerate(table.obs_id):
         legs_by_obs[int(obs)].append(leg)
-    # compile_campaign iterates jobs then accesses in order; rebuild that walk
     obs_ptr = 0
-    per_job_orders: List[List[Tuple[int, int]]] = [[] for _ in range(len(jobs_accs))]
-    ptr = 0
-    for i, acc in enumerate(accesses):
-        for k, _ in enumerate(acc.candidates):
-            per_job_orders[accesses[i].job].append((i, k))
-    walk: List[Tuple[int, int]] = []
-    for j in range(len(jobs_accs)):
-        walk.extend(per_job_orders[j])
-    for (i, k) in walk:
-        cand = accesses[i].candidates[k]
-        n_obs_for_cand = 2 if cand.profile is AccessProfileKind.DATA_PLACEMENT else 1
-        legs: List[int] = []
-        for _ in range(n_obs_for_cand):
-            legs.extend(legs_by_obs[obs_ptr])
-            obs_ptr += 1
-        for s, leg in enumerate(legs[:2]):
-            cand_legs[i, k, s] = leg
+    for pairs in per_job_pairs:
+        for (i, k) in pairs:
+            cand = accesses[i].candidates[k]
+            n_obs_for_cand = (
+                2 if cand.profile is AccessProfileKind.DATA_PLACEMENT else 1
+            )
+            legs: List[int] = []
+            for _ in range(n_obs_for_cand):
+                legs.extend(legs_by_obs[obs_ptr])
+                obs_ptr += 1
+            for s, leg in enumerate(legs[:2]):
+                cand_legs[i, k, s] = leg
     spec = SimSpec.from_table(table, max_ticks=max_ticks)
     return SuperTable(
         spec=spec,

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import tpu_compiler_params
+
 __all__ = ["decode_attention_pallas"]
 
 _LANE = 128
@@ -123,12 +125,7 @@ def decode_attention_pallas(
 
     grid = (B * Hkv, n_s)
     kernel = functools.partial(_decode_kernel, scale=scale, blk_s=blk_s, n_s=n_s)
-    try:
-        compiler_params = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")
-        )
-    except TypeError:  # pragma: no cover
-        compiler_params = None
+    compiler_params = tpu_compiler_params(("parallel", "arbitrary"))
 
     out = pl.pallas_call(
         kernel,

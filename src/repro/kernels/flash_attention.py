@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import tpu_compiler_params
+
 __all__ = ["flash_attention_pallas"]
 
 _LANE = 128
@@ -158,12 +160,7 @@ def _flash_fwd(
         n_k=n_k,
         kv_len=Skv,
     )
-    try:
-        compiler_params = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
-        )
-    except TypeError:  # pragma: no cover - older pallas API
-        compiler_params = None
+    compiler_params = tpu_compiler_params(("parallel", "parallel", "arbitrary"))
 
     out, lse = pl.pallas_call(
         kernel,
@@ -421,12 +418,7 @@ def flash_attention_bwd_pallas(
     Skvp = kt.shape[2]
     n_q, n_k = Sqp // blk_q, Skvp // blk_k
 
-    try:
-        cp = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")
-        )
-    except TypeError:  # pragma: no cover
-        cp = None
+    cp = tpu_compiler_params(("parallel", "parallel", "arbitrary"))
     cp_kw = {"compiler_params": cp} if cp else {}
 
     q_spec = pl.BlockSpec((1, 1, blk_q, Dp), lambda i, j, kk, H=Hq: (i // H, i % H, j, 0))

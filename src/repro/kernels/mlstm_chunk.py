@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import tpu_compiler_params
+
 __all__ = ["mlstm_chunk_pallas"]
 
 _LANE = 128
@@ -271,12 +273,7 @@ def mlstm_chunk_pallas(
     kernel = functools.partial(
         _mlstm_kernel, chunk=chunk, eps=eps, normalize=normalize
     )
-    try:
-        compiler_params = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")
-        )
-    except TypeError:  # pragma: no cover
-        compiler_params = None
+    compiler_params = tpu_compiler_params(("parallel", "arbitrary"))
 
     out = pl.pallas_call(
         kernel,

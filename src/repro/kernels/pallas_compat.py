@@ -1,0 +1,28 @@
+"""Version-tolerant shims over the moving Pallas TPU API surface.
+
+The compiler-params class has been renamed across jax releases
+(``TPUCompilerParams`` -> ``CompilerParams``) and its constructor signature
+drifts; kernels only use it as an optional scheduling hint, so resolution
+failures degrade to "no hint" instead of an import/attribute error.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["tpu_compiler_params"]
+
+
+def tpu_compiler_params(dimension_semantics: Sequence[str]) -> Optional[object]:
+    """Best-effort ``compiler_params`` for ``pl.pallas_call`` (None if the
+    installed jax exposes neither spelling or rejects the arguments)."""
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None
+    )
+    if cls is None:
+        return None
+    try:
+        return cls(dimension_semantics=tuple(dimension_semantics))
+    except TypeError:
+        return None

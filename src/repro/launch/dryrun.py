@@ -33,8 +33,10 @@ from repro.utils.hlo import collective_bytes
 log = get_logger("dryrun")
 
 
-def _shardings(mesh, tree, spec_fn, **kw):
-    specs = SH.sanitize_specs(spec_fn(tree, mesh.axis_names, **kw), tree, mesh)
+def _shardings(mesh, tree, spec_fn, head_dim=None, **kw):
+    specs = SH.sanitize_specs(
+        spec_fn(tree, mesh.axis_names, **kw), tree, mesh, head_dim=head_dim
+    )
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), specs,
         is_leaf=lambda x: isinstance(x, P),
@@ -49,7 +51,7 @@ def _compile_cell(cfg, shape, mesh, opt_cfg, donate: bool, kv_strategy: str = "s
     with mesh:
         if shape.kind == "train":
             state_sds, batch_sds = input_specs(cfg, shape, opt_cfg)
-            state_sh = _shardings(mesh, state_sds, SH.tree_specs)
+            state_sh = _shardings(mesh, state_sds, SH.tree_specs, head_dim=cfg.hd)
             batch_sh = _shardings(mesh, batch_sds, SH.batch_specs)
             step = M.make_train_step(cfg, opt_cfg)
             jitted = jax.jit(
@@ -61,7 +63,7 @@ def _compile_cell(cfg, shape, mesh, opt_cfg, donate: bool, kv_strategy: str = "s
             lowered = jitted.lower(state_sds, batch_sds)
         elif shape.kind == "prefill":
             params_sds, cache_sds, batch_sds = input_specs(cfg, shape, opt_cfg)
-            params_sh = _shardings(mesh, params_sds, SH.tree_specs)
+            params_sh = _shardings(mesh, params_sds, SH.tree_specs, head_dim=cfg.hd)
             cache_sh = _shardings(mesh, cache_sds, SH.cache_specs,
                                   kv_strategy=kv_strategy)
             batch_sh = _shardings(mesh, batch_sds, SH.batch_specs)
@@ -80,7 +82,7 @@ def _compile_cell(cfg, shape, mesh, opt_cfg, donate: bool, kv_strategy: str = "s
             lowered = jitted.lower(params_sds, cache_sds, batch_sds)
         else:  # decode
             params_sds, cache_sds, tok_sds = input_specs(cfg, shape, opt_cfg)
-            params_sh = _shardings(mesh, params_sds, SH.tree_specs)
+            params_sh = _shardings(mesh, params_sds, SH.tree_specs, head_dim=cfg.hd)
             cache_sh = _shardings(mesh, cache_sds, SH.cache_specs,
                                   kv_strategy=kv_strategy)
             tok_spec = SH.sanitize_specs(

@@ -30,6 +30,24 @@ def bubble_fraction(n_stages: int, n_micro: int) -> float:
     return (n_stages - 1) / (n_micro + n_stages - 1)
 
 
+def _mark_varying(tree: PyTree, axis: str) -> PyTree:
+    """Mark ``tree`` device-varying along ``axis`` under whichever API the
+    installed jax provides (``pcast`` -> ``pvary`` -> nothing needed)."""
+    pcast = getattr(jax.lax, "pcast", None)
+    if pcast is not None:
+        try:
+            return pcast(tree, (axis,), to="varying")
+        except TypeError:
+            pass
+    pvary = getattr(jax.lax, "pvary", None)
+    if pvary is not None:
+        try:
+            return pvary(tree, (axis,))
+        except TypeError:
+            pass
+    return tree
+
+
 def pipeline_apply(
     mesh: Mesh,
     stage_fn: Callable[[PyTree, jax.Array], jax.Array],
@@ -78,13 +96,9 @@ def pipeline_apply(
 
         out0 = jnp.zeros((n_micro,) + mb, xs.dtype)
         inflight0 = jnp.zeros(mb, xs.dtype)
-        # mark the carries device-varying along the stage axis (shard_map vma)
-        try:
-            inflight0, out0 = jax.lax.pcast(
-                (inflight0, out0), (axis,), to="varying"
-            )
-        except (AttributeError, TypeError):  # older jax
-            inflight0, out0 = jax.lax.pvary((inflight0, out0), (axis,))
+        # mark the carries device-varying along the stage axis (shard_map vma;
+        # a no-op on jax versions predating the varying-manual-axes tracking)
+        inflight0, out0 = _mark_varying((inflight0, out0), axis)
         (_, outputs), _ = jax.lax.scan(tick, (inflight0, out0), jnp.arange(ticks))
         # only the last stage holds real outputs; broadcast via psum of the
         # masked buffer (all other stages contribute zeros)

@@ -191,15 +191,30 @@ def cache_specs(
     return jax.tree_util.tree_map_with_path(leaf, cache)
 
 
-def sanitize_specs(specs: PyTree, shapes: PyTree, mesh) -> PyTree:
+# projections whose trailing dim packs (heads * head_dim) and is reshaped to
+# [..., H, hd] downstream (followed by the RoPE half-rotation)
+_HEAD_PACKED = re.compile(r"\b[wb][qkv]$")
+
+
+def sanitize_specs(
+    specs: PyTree, shapes: PyTree, mesh, *, head_dim: Optional[int] = None
+) -> PyTree:
     """Drop sharding axes whose size does not divide the dim (jit input
-    shardings require exact divisibility, e.g. batch=1 decode)."""
+    shardings require exact divisibility, e.g. batch=1 decode).
+
+    ``head_dim`` additionally restricts the packed (heads * head_dim) trailing
+    dim of q/k/v projections to whole-head shards: mid-head shards are never
+    desirable (they force reshard traffic around the [B, S, H, hd] reshape)
+    and the rope rotate-half pattern on mid-head shards miscompiles on some
+    XLA versions, so whole-head granularity is enforced whenever the caller
+    knows the head dim."""
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
 
-    def fix(spec, sds):
+    def fix(path, spec, sds):
         if not isinstance(spec, P):
             return spec
         shape = tuple(getattr(sds, "shape", ()))
+        is_qkv = head_dim is not None and _HEAD_PACKED.search(_path_str(path))
         out = []
         for i, entry in enumerate(spec):
             if entry is None or i >= len(shape):
@@ -209,7 +224,12 @@ def sanitize_specs(specs: PyTree, shapes: PyTree, mesh) -> PyTree:
             n = 1
             for a in axes:
                 n *= sizes[a]
-            out.append(entry if shape[i] % n == 0 else None)
+            ok = shape[i] % n == 0
+            if ok and is_qkv and i == len(shape) - 1:
+                ok = (shape[i] // n) % head_dim == 0
+            out.append(entry if ok else None)
         return P(*out)
 
-    return jax.tree.map(fix, specs, shapes, is_leaf=lambda x: isinstance(x, P))
+    return jax.tree_util.tree_map_with_path(
+        fix, specs, shapes, is_leaf=lambda x: isinstance(x, P)
+    )

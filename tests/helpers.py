@@ -1,9 +1,43 @@
-"""Shared test fixtures: small grids/campaigns for the engine tests."""
+"""Shared test fixtures: small grids/campaigns for the engine tests, plus an
+optional-``hypothesis`` shim so property-based tests skip (rather than fail at
+collection) when the dependency is absent."""
 from __future__ import annotations
 
 from typing import List, Tuple
 
 import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # pragma: no cover - exercised in minimal envs
+    HAVE_HYPOTHESIS = False
+
+    class _StrategyStub:
+        """Any ``st.<strategy>(...)`` call returns an inert placeholder."""
+
+        def __getattr__(self, name):
+            return lambda *args, **kwargs: None
+
+    st = _StrategyStub()
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # zero-arg stand-in: pytest must not see the property arguments
+            # as fixtures, so the original signature is deliberately dropped
+            def skipper():
+                pytest.skip("hypothesis not installed")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            return skipper
+
+        return deco
 
 from repro.core.topology import Grid
 from repro.core.workload import (

@@ -47,7 +47,7 @@ def test_sharded_train_step_matches_single_device():
 
         mesh = jax.make_mesh((2, 4), ("data", "model"))
         ssh = jax.tree.map(lambda s: NamedSharding(mesh, s),
-                           SH.sanitize_specs(SH.tree_specs(state, mesh.axis_names), state, mesh),
+                           SH.sanitize_specs(SH.tree_specs(state, mesh.axis_names), state, mesh, head_dim=cfg.hd),
                            is_leaf=lambda x: isinstance(x, P))
         bsh = jax.tree.map(lambda s: NamedSharding(mesh, s),
                            SH.batch_specs(batch, mesh.axis_names),
@@ -111,7 +111,7 @@ def test_decode_step_sharded_kv_cache():
 
         mesh = jax.make_mesh((2, 4), ("data", "model"))
         psh = jax.tree.map(lambda s: NamedSharding(mesh, s),
-                           SH.sanitize_specs(SH.tree_specs(params, mesh.axis_names), params, mesh),
+                           SH.sanitize_specs(SH.tree_specs(params, mesh.axis_names), params, mesh, head_dim=cfg.hd),
                            is_leaf=lambda x: isinstance(x, P))
         csh = jax.tree.map(lambda s: NamedSharding(mesh, s),
                            SH.sanitize_specs(SH.cache_specs(cache, mesh.axis_names), cache, mesh),
@@ -163,7 +163,7 @@ def test_elastic_checkpoint_restore_across_mesh_sizes(tmp_path):
         mesh = jax.make_mesh((2, 4), ("data", "model"))
         template = M.init_train_state(M.init_params(jax.random.PRNGKey(0), cfg), opt)
         ssh = jax.tree.map(lambda s: NamedSharding(mesh, s),
-                           SH.sanitize_specs(SH.tree_specs(template, mesh.axis_names), template, mesh),
+                           SH.sanitize_specs(SH.tree_specs(template, mesh.axis_names), template, mesh, head_dim=cfg.hd),
                            is_leaf=lambda x: isinstance(x, P))
         restored, at = store.restore(template, shardings=ssh)
         assert at == 2

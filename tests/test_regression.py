@@ -1,7 +1,8 @@
 """OLS / statistics unit tests."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from helpers import given, settings, st
 
 from repro.core.regression import (
     coefficient_error,
