@@ -1,0 +1,163 @@
+"""ScenarioBank throughput harness: banked engine vs per-scenario Python loop.
+
+The loop baseline is what the pre-bank architecture forced on every consumer
+of scenario diversity: one ``simulate_batch`` dispatch per (grid, campaign)
+pair, each distinct campaign shape paying its own jit trace. The bank runs
+the identical fleet x replicas through one padded trace.
+
+    PYTHONPATH=src python benchmarks/bank_throughput.py \
+        [--scenarios 64] [--replicas 4] [--out BENCH_bank.json]
+
+Emits ``BENCH_bank.json`` with cold (trace included — the cost scenario
+diversity actually incurs) and warm (all traces cached) walls, scenarios/sec,
+simulated leg-ticks/sec, and the speedups future PRs must not regress.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenarios", type=int, default=64)
+    ap.add_argument("--replicas", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--max-ticks", type=int, default=20_000)
+    ap.add_argument("--leap", action=argparse.BooleanOptionalAction, default=True)
+    ap.add_argument("--out", default="BENCH_bank.json")
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+
+    from repro.core.engine import (
+        SimSpec,
+        bank_trace_count,
+        make_bank_params,
+        make_params,
+        simulate_bank,
+        simulate_batch,
+    )
+    from repro.core.scenarios import sample_scenarios
+    from repro.core.workload import compile_bank, compile_campaign
+
+    n, r = args.scenarios, args.replicas
+    pairs = sample_scenarios(n=n, seed=args.seed)
+    pairs2 = sample_scenarios(n=n, seed=args.seed + 7919)  # a fresh fleet
+    # shared pad floors so both fleets hit one bank trace
+    probe = [compile_campaign(g, c) for g, c in pairs + pairs2]
+    pads = dict(
+        pad_legs=max(t.n_legs for t in probe),
+        pad_procs=max(t.n_procs for t in probe),
+        pad_links=max(t.n_links for t in probe),
+    )
+    bank = compile_bank(pairs, max_ticks=args.max_ticks, **pads)
+    bank2 = compile_bank(pairs2, max_ticks=args.max_ticks, **pads)
+    keys = jax.random.split(jax.random.PRNGKey(args.seed), n * r).reshape(n, r, 2)
+
+    # ---- per-scenario Python loop (the pre-bank architecture) -------------
+    tables = bank.tables
+    specs = [
+        SimSpec.from_table(t, max_ticks=int(bank.max_ticks[i]))
+        for i, t in enumerate(tables)
+    ]
+    params_i = [make_params(t) for t in tables]
+
+    def run_loop():
+        ticks = []
+        for i in range(n):
+            res = simulate_batch(specs[i], params_i[i], keys[i], leap=args.leap)
+            ticks.append(np.asarray(res.ticks))
+        jax.block_until_ready(ticks)
+        return ticks
+
+    t0 = time.time()
+    loop_ticks = run_loop()  # pays one trace per distinct campaign shape
+    loop_cold = time.time() - t0
+    t0 = time.time()
+    run_loop()
+    loop_warm = time.time() - t0
+
+    # ---- banked engine ----------------------------------------------------
+    bparams = make_bank_params(bank)
+    traces0 = bank_trace_count()
+
+    def run_bank():
+        res = simulate_bank(bank, bparams, keys, leap=args.leap)
+        jax.block_until_ready(res)
+        return res
+
+    t0 = time.time()
+    bank_res = run_bank()
+    bank_cold = time.time() - t0
+    t0 = time.time()
+    run_bank()
+    bank_warm = time.time() - t0
+    bank_traces = bank_trace_count() - traces0
+
+    # ---- a FRESH fleet: the steady-state cost of scenario diversity -------
+    # every new fleet re-pays the loop's per-shape traces; the bank reuses
+    # its single padded trace
+    specs2 = [
+        SimSpec.from_table(t, max_ticks=int(bank2.max_ticks[i]))
+        for i, t in enumerate(bank2.tables)
+    ]
+    params2_i = [make_params(t) for t in bank2.tables]
+    t0 = time.time()
+    out = [
+        simulate_batch(specs2[i], params2_i[i], keys[i], leap=args.leap).ticks
+        for i in range(n)
+    ]
+    jax.block_until_ready(out)
+    loop_fresh = time.time() - t0
+    bparams2 = make_bank_params(bank2)
+    t0 = time.time()
+    jax.block_until_ready(simulate_bank(bank2, bparams2, keys, leap=args.leap))
+    bank_fresh = time.time() - t0
+    fresh_retraces = bank_trace_count() - traces0 - bank_traces
+
+    # simulated work: sum over (scenario, replica) of real legs x ticks run
+    legs = np.asarray(bank.n_legs, np.float64)
+    bank_ticks = np.asarray(bank_res.ticks, np.float64)  # [N, R]
+    work = float((legs[:, None] * bank_ticks).sum())
+
+    report = {
+        "n_scenarios": n,
+        "n_replicas": r,
+        "pad_legs": bank.pad_legs,
+        "pad_procs": bank.pad_procs,
+        "pad_links": bank.pad_links,
+        "leap": bool(args.leap),
+        "bank_traces": bank_traces,
+        "loop_cold_s": round(loop_cold, 3),
+        "loop_warm_s": round(loop_warm, 3),
+        "bank_cold_s": round(bank_cold, 3),
+        "bank_warm_s": round(bank_warm, 3),
+        "scenarios_per_sec_loop_cold": round(n / loop_cold, 2),
+        "scenarios_per_sec_bank_cold": round(n / bank_cold, 2),
+        "scenarios_per_sec_loop_warm": round(n / loop_warm, 2),
+        "scenarios_per_sec_bank_warm": round(n / bank_warm, 2),
+        "leg_ticks_per_sec_bank_warm": round(work / bank_warm, 0),
+        "leg_ticks_per_sec_loop_warm": round(work / loop_warm, 0),
+        "loop_fresh_fleet_s": round(loop_fresh, 3),
+        "bank_fresh_fleet_s": round(bank_fresh, 3),
+        "bank_fresh_fleet_retraces": fresh_retraces,
+        "speedup_cold": round(loop_cold / bank_cold, 2),
+        "speedup_warm": round(loop_warm / bank_warm, 2),
+        "speedup_fresh_fleet": round(loop_fresh / bank_fresh, 2),
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps(report, indent=2))
+    assert bank_traces == 1, f"bank retraced {bank_traces} times"
+    assert fresh_retraces == 0, "fresh fleet must reuse the bank trace"
+
+
+if __name__ == "__main__":
+    main()

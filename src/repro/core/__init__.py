@@ -1,1 +1,23 @@
-"""Core library: the GDAPS grid simulator + SBI calibration in JAX."""
+"""Core library: the GDAPS grid simulator + SBI calibration in JAX.
+
+Architecture (compile -> bank -> engine -> consumers):
+
+1. **Model** — :mod:`topology` (grids, links, protocols) and
+   :mod:`workload` (replicas, access profiles, jobs, campaigns) describe one
+   scenario; :mod:`profiles` and :mod:`scenarios` generate them (the paper's
+   Section-3/5 setups and the registry of heterogeneous scenario families).
+2. **Compile** — ``workload.compile_campaign`` lowers one campaign to a
+   dense :class:`~repro.core.workload.LegTable`;
+   ``workload.compile_bank`` pads and stacks many heterogeneous
+   ``(Grid, Campaign)`` pairs into a :class:`~repro.core.workload.ScenarioBank`
+   with semantically-inert padding and a per-scenario ``max_ticks`` mask.
+3. **Engine** — :mod:`engine` executes tables (``simulate`` /
+   ``simulate_batch``) and banks (``simulate_bank``: one jit trace per padded
+   shape, vmapped over (scenario, replica), sharded over the device mesh)
+   via the fair-share tick kernels in :mod:`repro.kernels`;
+   :mod:`refsim` is the loop-based oracle.
+4. **Consumers** — :mod:`calibration` (likelihood-free inference over theta
+   *and* scenario variants), :mod:`scheduler` (access-profile optimization;
+   population fitness is one banked batch), :mod:`dataset` /
+   :mod:`regression` (the paper's observation datasets and Eq. 1-2 fits).
+"""

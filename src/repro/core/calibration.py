@@ -26,9 +26,16 @@ import numpy as np
 from repro.core import mcmc as mcmc_lib
 from repro.core.classifier import ClassifierConfig, train_classifier
 from repro.core.dataset import observations
-from repro.core.engine import SimParams, SimResult, SimSpec, simulate
+from repro.core.engine import (
+    SimParams,
+    SimResult,
+    SimSpec,
+    bank_spec,
+    simulate,
+    simulate_bank,
+)
 from repro.core.regression import coefficient_error, fit_eq1
-from repro.core.workload import LegTable, ProfileTag
+from repro.core.workload import LegTable, ProfileTag, ScenarioBank
 from repro.utils import get_logger
 
 log = get_logger("calibration")
@@ -39,9 +46,12 @@ __all__ = [
     "CalibrationResult",
     "simulate_coefficients",
     "presimulate",
+    "presimulate_bank",
     "calibrate",
     "validate",
+    "validate_bank",
     "make_theta_mapper",
+    "make_bank_theta_mapper",
 ]
 
 
@@ -119,6 +129,44 @@ def make_theta_mapper(table: LegTable, protocol: str = "webdav"):
     return functools.partial(_theta_to_params, keep, mask, n_links)
 
 
+def _bank_theta_to_params(
+    keep: jax.Array,  # [N, T]
+    mask: jax.Array,  # [N, T]
+    link_valid: jax.Array,  # [N, L]
+    theta: jax.Array,  # [3]
+) -> SimParams:
+    """Bank-wide analogue of ``_theta_to_params``: one theta applied to every
+    scenario (padded links keep zero moments so their — already zero-bandwidth
+    — fair shares stay untouched)."""
+    overhead, mu, sigma = theta[0], theta[1], theta[2]
+    lv = link_valid.astype(jnp.float32)
+    return SimParams(
+        keep_frac=jnp.where(mask, 1.0 - overhead, keep),
+        bg_mu=mu * lv,
+        bg_sigma=sigma * lv,
+    )
+
+
+def make_bank_theta_mapper(bank: ScenarioBank, protocol: str = "webdav"):
+    """Returns ``f(theta) -> SimParams`` stacked over the whole bank, using
+    the bank's unified protocol namespace."""
+    pid = bank.protocol_names.index(protocol)
+    mask = jnp.asarray(bank.protocol_id == pid)
+    keep = jnp.asarray(bank.keep_frac)
+    link_valid = jnp.asarray(bank.link_valid)
+    return functools.partial(_bank_theta_to_params, keep, mask, link_valid)
+
+
+def _eq1_coefficients(res: SimResult) -> jax.Array:
+    """The paper's summary statistic: Eq.-1 OLS coefficients of the remote
+    observations of one simulation (padded bank legs carry ``profile=-1``
+    and are excluded by the profile filter)."""
+    ds = observations(res, ProfileTag.REMOTE)
+    return fit_eq1(
+        ds.transfer_time, ds.size_mb, ds.conth_mb, ds.conpr_mb, ds.valid
+    ).coef
+
+
 def simulate_coefficients(
     spec: SimSpec,
     params: SimParams,
@@ -138,12 +186,7 @@ def simulate_coefficients(
     """
 
     def one(k: jax.Array) -> jax.Array:
-        res = simulate(spec, params, k, backend=backend, leap=leap)
-        ds = observations(res, ProfileTag.REMOTE)
-        fit = fit_eq1(
-            ds.transfer_time, ds.size_mb, ds.conth_mb, ds.conpr_mb, ds.valid
-        )
-        return fit.coef
+        return _eq1_coefficients(simulate(spec, params, k, backend=backend, leap=leap))
 
     if n_replicates == 1:
         return one(key)
@@ -195,6 +238,120 @@ def presimulate(
     theta = jnp.concatenate(outs_t, axis=0)[:n]
     x = jnp.concatenate(outs_x, axis=0)[:n]
     return theta, x
+
+
+def presimulate_bank(
+    bank: ScenarioBank,
+    prior: PriorBox,
+    key: jax.Array,
+    n_per_scenario: int,
+    *,
+    protocol: str = "webdav",
+    backend: Optional[str] = None,
+    batch: int = 128,
+    leap: bool = False,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Presimulate ``(theta, x_sim)`` tuples over **scenario variants**.
+
+    Where :func:`presimulate` varies only theta against one frozen campaign,
+    this draws every tuple against a scenario of the bank: the classifier
+    then learns a likelihood ratio robust to campaign shape instead of one
+    conditioned on a single workload realization. All scenarios and draws run
+    through the single banked trace. The Eq.-1 summary statistic regresses
+    remote-access observations, so draw the fleet from remote-bearing
+    scenario families (scenarios without remote legs produce degenerate
+    fits).
+
+    Returns ``(theta [n, 3], x_sim [n, 3], scenario_id [n] i32)`` with
+    ``n = bank.n_scenarios * n_per_scenario``, scenario-major.
+    """
+    spec = bank_spec(bank)
+    n_scn = bank.n_scenarios
+    pid = bank.protocol_names.index(protocol)
+    mask = jnp.asarray(bank.protocol_id == pid)  # [N, T]
+    keep = jnp.asarray(bank.keep_frac)  # [N, T]
+    link_valid = jnp.asarray(bank.link_valid, jnp.float32)  # [N, L]
+
+    @functools.partial(jax.jit, static_argnames=("backend",))
+    def _chunk(k, *, backend=backend):
+        kt, ks = jax.random.split(k)
+        u = jax.random.uniform(kt, (n_scn, batch, 3))
+        thetas = prior.from_unit(u)  # independent theta per (scenario, draw)
+        keys = jax.random.split(ks, n_scn * batch).reshape(n_scn, batch, 2)
+        # per-(scenario, draw) params, honoring the bank padding contract
+        # (zero moments on padded links) exactly like make_bank_theta_mapper
+        params = SimParams(
+            keep_frac=jnp.where(
+                mask[:, None, :], 1.0 - thetas[..., 0:1], keep[:, None, :]
+            ),
+            bg_mu=thetas[..., 1:2] * link_valid[:, None, :],
+            bg_sigma=thetas[..., 2:3] * link_valid[:, None, :],
+        )
+        res = simulate_bank(spec, params, keys, backend=backend, leap=leap)
+        flat = jax.tree.map(
+            lambda a: a.reshape((n_scn * batch,) + a.shape[2:]), res
+        )
+        coefs = jax.vmap(_eq1_coefficients)(flat).reshape(n_scn, batch, 3)
+        return thetas, coefs
+
+    outs_t, outs_x = [], []
+    n_chunks = (n_per_scenario + batch - 1) // batch
+    for i in range(n_chunks):
+        key, sub = jax.random.split(key)
+        t, x = _chunk(sub)
+        outs_t.append(t)
+        outs_x.append(x)
+        if (i + 1) % max(n_chunks // 10, 1) == 0:
+            log.info("presimulate_bank: %d/%d chunks x %d scenarios",
+                     i + 1, n_chunks, n_scn)
+    theta = jnp.concatenate(outs_t, axis=1)[:, :n_per_scenario]
+    x = jnp.concatenate(outs_x, axis=1)[:, :n_per_scenario]
+    scenario_id = jnp.repeat(jnp.arange(n_scn, dtype=jnp.int32), n_per_scenario)
+    return (
+        theta.reshape(-1, 3),
+        x.reshape(-1, 3),
+        scenario_id,
+    )
+
+
+def validate_bank(
+    bank: ScenarioBank,
+    theta_star: jax.Array,
+    x_true: jax.Array,  # [3] shared or [N, 3] per-scenario references
+    key: jax.Array,
+    *,
+    n_sims: int = 64,
+    protocol: str = "webdav",
+    backend: Optional[str] = None,
+    leap: bool = True,
+) -> dict:
+    """Validation sweep over scenario variants: ``n_sims`` stochastic
+    replicas of every scenario under theta*, per-sim Eq.-1 fits, Eq.-6
+    errors. The whole (scenario x replica) sweep is one banked batch."""
+    mapper = make_bank_theta_mapper(bank, protocol)
+    params = mapper(jnp.asarray(theta_star))
+    n_scn = bank.n_scenarios
+    keys = jax.random.split(key, n_scn * n_sims).reshape(n_scn, n_sims, 2)
+    res = simulate_bank(bank, params, keys, backend=backend, leap=leap)
+
+    flat = jax.tree.map(
+        lambda a: a.reshape((n_scn * n_sims,) + a.shape[2:]), res
+    )
+    coefs = jax.vmap(_eq1_coefficients)(flat).reshape(n_scn, n_sims, 3)
+    x_ref = jnp.asarray(x_true)
+    if x_ref.ndim == 1:
+        x_ref = jnp.broadcast_to(x_ref, (n_scn, 3))
+    errors = jax.vmap(
+        lambda c, xr: jax.vmap(lambda ci: coefficient_error(xr, ci))(c)
+    )(coefs, x_ref)  # [N, R, 3]
+    return {
+        "coefficients": np.asarray(coefs),
+        "errors": np.asarray(errors),
+        "median_coef": np.asarray(jnp.median(coefs, axis=1)),  # [N, 3]
+        "mean_abs_error": np.asarray(jnp.mean(errors, axis=1)),  # [N, 3]
+        "sum_error": np.asarray(jnp.sum(errors, axis=2)),  # [N, R]
+        "scenario_names": list(bank.names),
+    }
 
 
 def calibrate(

@@ -15,20 +15,36 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple, Optional, Tuple
+from typing import NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.workload import LegTable
+from repro.core.workload import LegTable, ScenarioBank
 from repro.kernels import ops
 
-__all__ = ["SimSpec", "SimParams", "SimResult", "simulate", "simulate_batch"]
+__all__ = [
+    "SimSpec",
+    "SimParams",
+    "SimResult",
+    "simulate",
+    "simulate_batch",
+    "bank_spec",
+    "make_bank_params",
+    "simulate_bank",
+    "bank_trace_count",
+]
 
 
 class SimSpec(NamedTuple):
-    """Static (weakly-typed, jnp) arrays describing one compiled campaign."""
+    """Static (weakly-typed, jnp) arrays describing one compiled campaign.
+
+    The same structure carries a **stacked bank** of campaigns: every field
+    then has a leading ``[N]`` scenario dim (see :func:`bank_spec`),
+    ``max_ticks`` becomes a per-scenario array, and ``leg_valid`` masks the
+    padding (padded legs are born done). ``simulate`` always consumes the
+    per-scenario view — :func:`simulate_bank` vmaps it over the bank."""
 
     size_mb: jax.Array  # [T] f32
     release: jax.Array  # [T] i32
@@ -40,15 +56,16 @@ class SimSpec(NamedTuple):
     leg_link: jax.Array  # [T, L] f32 one-hot
     bandwidth: jax.Array  # [L] f32 MB/tick
     bg_period: jax.Array  # [L] i32
-    max_ticks: int
+    max_ticks: Union[int, jax.Array]  # python int or [] i32 (bank member)
+    leg_valid: Optional[jax.Array] = None  # [T] bool (None = all real legs)
 
     @property
     def n_legs(self) -> int:
-        return self.size_mb.shape[0]
+        return self.size_mb.shape[-1]
 
     @property
     def n_links(self) -> int:
-        return self.bandwidth.shape[0]
+        return self.bandwidth.shape[-1]
 
     @staticmethod
     def from_table(table: LegTable, max_ticks: Optional[int] = None) -> "SimSpec":
@@ -259,11 +276,12 @@ def simulate(
     same per-event sampling — for stochastic ones).
     """
     n = spec.n_legs
-    born_done = (
-        jnp.zeros((n,), bool)
-        if params.enabled is None
-        else ~params.enabled.astype(bool)
-    )
+    born_done = jnp.zeros((n,), bool)
+    if params.enabled is not None:
+        born_done |= ~params.enabled.astype(bool)
+    if spec.leg_valid is not None:
+        # bank padding contract: padded legs are born done and stay inert
+        born_done |= ~spec.leg_valid.astype(bool)
     init = _Carry(
         t=jnp.zeros((), jnp.int32),
         remaining=spec.size_mb,
@@ -298,6 +316,19 @@ def simulate(
     )
 
 
+def _params_axes(params: SimParams, base_ndim: int = 1) -> SimParams:
+    """Per-field vmap axes: 0 for fields carrying a leading batch dim beyond
+    their per-sim rank, None for shared fields (mixing is allowed — e.g. a
+    population of ``enabled`` masks under one shared theta)."""
+    ax = lambda f: None if f is None else (0 if f.ndim > base_ndim else None)
+    return SimParams(
+        keep_frac=ax(params.keep_frac),
+        bg_mu=ax(params.bg_mu),
+        bg_sigma=ax(params.bg_sigma),
+        enabled=ax(params.enabled),
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("backend", "leap"))
 def simulate_batch(
     spec: SimSpec,
@@ -309,15 +340,138 @@ def simulate_batch(
 ) -> SimResult:
     """Vectorized batch of stochastic simulations.
 
-    ``params`` fields may carry a leading batch dim (one theta per sim) or be
-    unbatched (shared theta, e.g. the 16k validation runs of Section 5).
+    Each ``params`` field may carry a leading batch dim (one theta and/or one
+    ``enabled`` mask per sim) or be unbatched (shared theta, e.g. the 16k
+    validation runs of Section 5).
     """
-    batched_params = params.keep_frac.ndim == 2
-    in_axes = (0 if batched_params else None, 0)
     return jax.vmap(
         lambda p, k: simulate(spec, p, k, backend=backend, leap=leap),
-        in_axes=in_axes,
+        in_axes=(_params_axes(params), 0),
     )(params, keys)
+
+
+# ---------------------------------------------------------------------------
+# ScenarioBank execution: one trace, vmap over (scenario, replica)
+# ---------------------------------------------------------------------------
+
+# every SimSpec field maps over the leading scenario dim, including the
+# per-scenario max_ticks scalar and the padding mask
+_BANK_SPEC_AXES = SimSpec(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0)
+
+_bank_traces = 0
+
+
+def bank_trace_count() -> int:
+    """Number of times the banked engine has been (re)traced in this process
+    — the observable behind the "no per-scenario retrace" contract."""
+    return _bank_traces
+
+
+def bank_spec(bank: ScenarioBank) -> SimSpec:
+    """The stacked ``[N, ...]`` SimSpec view of a compiled bank."""
+    return SimSpec(
+        size_mb=jnp.asarray(bank.size_mb),
+        release=jnp.asarray(bank.release),
+        dep=jnp.asarray(bank.dep),
+        profile=jnp.asarray(bank.profile),
+        protocol_id=jnp.asarray(bank.protocol_id),
+        leg_proc=jnp.asarray(bank.leg_proc),
+        proc_link=jnp.asarray(bank.proc_link),
+        leg_link=jnp.asarray(bank.leg_link),
+        bandwidth=jnp.asarray(bank.bandwidth),
+        bg_period=jnp.asarray(bank.bg_period),
+        max_ticks=jnp.asarray(bank.max_ticks),
+        leg_valid=jnp.asarray(bank.leg_valid),
+    )
+
+
+def make_bank_params(
+    bank: ScenarioBank,
+    *,
+    overhead: Optional[float] = None,
+    bg_mu: Optional[float] = None,
+    bg_sigma: Optional[float] = None,
+    protocol: Optional[str] = None,
+) -> SimParams:
+    """Bank-wide :class:`SimParams` (``[N, T]`` keep, ``[N, L]`` moments) with
+    the same override knobs as :func:`make_params`, applied across the unified
+    protocol namespace of the bank."""
+    keep = bank.keep_frac.astype(np.float32).copy()
+    if overhead is not None:
+        if protocol is None:
+            keep[bank.leg_valid] = 1.0 - overhead
+        else:
+            pid = bank.protocol_names.index(protocol)
+            keep[bank.protocol_id == pid] = 1.0 - overhead
+    mu = bank.bg_mu if bg_mu is None else np.where(bank.link_valid, bg_mu, 0.0)
+    sigma = (
+        bank.bg_sigma if bg_sigma is None
+        else np.where(bank.link_valid, bg_sigma, 0.0)
+    )
+    return SimParams(
+        keep_frac=jnp.asarray(keep),
+        bg_mu=jnp.asarray(mu, jnp.float32),
+        bg_sigma=jnp.asarray(sigma, jnp.float32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "leap"))
+def _simulate_bank(
+    spec: SimSpec,  # stacked [N, ...]
+    params: SimParams,  # fields [N, ...] or [N, R, ...]
+    keys: jax.Array,  # [N, R, 2]
+    *,
+    backend: Optional[str],
+    leap: bool,
+) -> SimResult:
+    global _bank_traces
+    _bank_traces += 1  # executes at trace time only
+
+    def one_scenario(spec_i: SimSpec, params_i: SimParams, keys_i: jax.Array):
+        return jax.vmap(
+            lambda p, k: simulate(spec_i, p, k, backend=backend, leap=leap),
+            in_axes=(_params_axes(params_i), 0),
+        )(params_i, keys_i)
+
+    # outer vmap peels the scenario dim off every spec/params field; the
+    # inner vmap runs the replicas, sharing params fields without an [N, R]
+    # leading shape
+    outer_params_axes = SimParams(
+        keep_frac=0,
+        bg_mu=0,
+        bg_sigma=0,
+        enabled=None if params.enabled is None else 0,
+    )
+    return jax.vmap(
+        one_scenario, in_axes=(_BANK_SPEC_AXES, outer_params_axes, 0)
+    )(spec, params, keys)
+
+
+def simulate_bank(
+    bank: Union[ScenarioBank, SimSpec],
+    params: SimParams,
+    keys: jax.Array,  # [N, R, 2] PRNG keys (R replicas per scenario)
+    *,
+    backend: Optional[str] = None,
+    leap: bool = False,
+) -> SimResult:
+    """Simulate every scenario of the bank x ``R`` stochastic replicas.
+
+    One jit trace serves every bank of the same padded shape — scenario
+    diversity costs zero retraces. Fields of the result carry ``[N, R]``
+    leading dims; padded legs report ``done=True`` with zero transfer (mask
+    with ``bank.leg_valid`` downstream). ``params`` fields may be bank-wide
+    (``[N, ...]``) or per-replica (``[N, R, ...]``).
+
+    The flattened ``N*R`` batch is embarrassingly parallel: under a device
+    mesh, shard ``keys`` (and any per-replica params) over the scenario axis
+    and XLA partitions the whole tick program with zero collectives (see
+    ``tests/test_bank.py`` and ``benchmarks/bank_throughput.py``).
+    """
+    spec = bank_spec(bank) if isinstance(bank, ScenarioBank) else bank
+    if keys.ndim != 3:
+        raise ValueError(f"keys must be [n_scenarios, n_replicas, 2]: {keys.shape}")
+    return _simulate_bank(spec, params, keys, backend=backend, leap=leap)
 
 
 def make_params(

@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import SimParams, SimSpec, simulate
+from repro.core.engine import SimParams, SimSpec, simulate, simulate_batch
 from repro.core.topology import Grid
 from repro.core.workload import (
     AccessProfileKind,
@@ -38,7 +38,13 @@ from repro.core.workload import (
     compile_campaign,
 )
 
-__all__ = ["CandidateAccess", "SuperTable", "build_super_table", "optimize_profiles"]
+__all__ = [
+    "CandidateAccess",
+    "SuperTable",
+    "build_super_table",
+    "evaluate_population",
+    "optimize_profiles",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,6 +141,27 @@ def _assignment_mask(st: SuperTable, assign: jax.Array) -> jax.Array:
     return onehot[:n_legs]
 
 
+def _mask_fitness(
+    res, mask: jax.Array, makespan_weight: float, mean_weight: float
+) -> jax.Array:
+    """Fitness of simulated legs under an enabled mask; all reductions run
+    over the trailing leg axis, so one formula scores a single assignment
+    ([T] fields) or a whole population batch ([B, T] fields)."""
+    m = mask.astype(jnp.float32)
+    t_end = res.start_tick + res.transfer_time
+    makespan = jnp.max(t_end * m, axis=-1)
+    mean_t = jnp.sum(res.transfer_time * m, axis=-1) / jnp.maximum(
+        jnp.sum(m, axis=-1), 1.0
+    )
+    # unfinished legs dominate the penalty
+    unfinished = jnp.sum((~res.done) & (m > 0), axis=-1)
+    return (
+        makespan_weight * makespan
+        + mean_weight * mean_t
+        + 1e6 * unfinished.astype(jnp.float32)
+    )
+
+
 def _fitness(
     st: SuperTable,
     base_params: SimParams,
@@ -151,17 +178,32 @@ def _fitness(
         enabled=mask,
     )
     res = simulate(st.spec, params, key)
-    m = mask.astype(jnp.float32)
-    t_end = res.start_tick + res.transfer_time
-    makespan = jnp.max(t_end * m)
-    mean_t = jnp.sum(res.transfer_time * m) / jnp.maximum(jnp.sum(m), 1.0)
-    # unfinished legs dominate the penalty
-    unfinished = jnp.sum((~res.done) & (m > 0))
-    return (
-        makespan_weight * makespan
-        + mean_weight * mean_t
-        + 1e6 * unfinished.astype(jnp.float32)
+    return _mask_fitness(res, mask, makespan_weight, mean_weight)
+
+
+def evaluate_population(
+    st: SuperTable,
+    base_params: SimParams,
+    pop: jax.Array,  # [B, n_access] candidate assignments
+    keys: jax.Array,  # [B, 2]
+    *,
+    makespan_weight: float = 1.0,
+    mean_weight: float = 0.1,
+) -> jax.Array:
+    """Fitness of a whole population in **one banked batch**: the population
+    is a degenerate scenario bank — every member shares the super-table spec
+    and differs only in its ``enabled`` mask — so the engine's batched entry
+    point evaluates all assignments in a single dispatch instead of one
+    ``simulate`` call per assignment."""
+    masks = jax.vmap(functools.partial(_assignment_mask, st))(pop)  # [B, T]
+    params = SimParams(
+        keep_frac=base_params.keep_frac,
+        bg_mu=base_params.bg_mu,
+        bg_sigma=base_params.bg_sigma,
+        enabled=masks,
     )
+    res = simulate_batch(st.spec, params, keys)
+    return _mask_fitness(res, masks, makespan_weight, mean_weight)
 
 
 def optimize_profiles(
@@ -183,14 +225,12 @@ def optimize_profiles(
     key, k0 = jax.random.split(key)
     pop = jax.random.randint(k0, (population, n_access), 0, n_cand)
 
-    fitness_one = functools.partial(_fitness, st, base_params)
-
     @jax.jit
     def eval_pop(pop: jax.Array, key: jax.Array) -> jax.Array:
         keys = jax.random.split(key, antithetic_sims)
         def per_sim(k):
             ks = jax.random.split(k, pop.shape[0])
-            return jax.vmap(fitness_one)(pop, ks)
+            return evaluate_population(st, base_params, pop, ks)
         return jnp.mean(jax.vmap(per_sim)(keys), axis=0)
 
     @jax.jit

@@ -32,10 +32,23 @@ __all__ = [
     "Job",
     "Campaign",
     "LegTable",
+    "ScenarioBank",
     "compile_campaign",
+    "compile_bank",
     "wlcg_production_workload",
     "ProfileTag",
+    "PAD_PROFILE",
+    "PAD_PROTOCOL",
+    "PAD_BG_PERIOD",
 ]
+
+# Padding sentinels of the bank contract (see :class:`ScenarioBank`). The
+# background period of a padded link must be huge, not 1: the event-leap
+# engine leaps to the next background resample, and a period-1 phantom link
+# would force it back to tick-by-tick stepping.
+PAD_PROFILE = -1
+PAD_PROTOCOL = -1
+PAD_BG_PERIOD = 1 << 30
 
 
 class AccessProfileKind(enum.Enum):
@@ -264,6 +277,193 @@ def compile_campaign(grid: Grid, campaign: Campaign) -> LegTable:
         protocol_names=proto_names,
         links=link_table,
         n_procs=n_procs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# ScenarioBank: many heterogeneous campaigns as one padded, stacked spec
+# ---------------------------------------------------------------------------
+
+def _round_up(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+@dataclasses.dataclass
+class ScenarioBank:
+    """``N`` compiled ``(Grid, Campaign)`` pairs padded to shared shapes.
+
+    Every scenario's leg table is embedded into ``[N, T]`` / ``[N, P]`` /
+    ``[N, L]`` arrays (``T/P/L`` = the per-axis maxima across the bank,
+    optionally rounded up), so a single jit trace of the engine serves every
+    scenario shape up to the pad and heterogeneous banks of the same padded
+    shape reuse the trace.
+
+    Padding contract (semantically inert by construction):
+
+    - padded **legs** carry ``size_mb=0``, ``dep=-1``, ``keep_frac=1``,
+      ``profile=PAD_PROFILE``, ``protocol_id=PAD_PROTOCOL`` and an all-zero
+      row in ``leg_proc`` / ``leg_link``; they are born done via
+      ``leg_valid`` and never transfer, accumulate, or gate anything;
+    - padded **processes** have all-zero ``proc_link`` rows, so they add no
+      campaign load to any link;
+    - padded **links** have ``bandwidth=0`` (zero fair share), zero
+      background moments, and ``bg_period=PAD_BG_PERIOD`` so the event-leap
+      engine never schedules a resample event for them;
+    - ``max_ticks`` stays **per scenario**, so a bank run stops each
+      scenario exactly where the per-scenario ``simulate()`` would.
+
+    ``protocol_id`` is remapped onto the sorted union of all scenarios'
+    protocol names (``protocol_names``), so one per-protocol override (e.g.
+    the calibrated WebDAV overhead) applies bank-wide.
+    """
+
+    # stacked per-leg arrays [N, T]
+    size_mb: np.ndarray
+    release: np.ndarray
+    dep: np.ndarray
+    keep_frac: np.ndarray
+    protocol_id: np.ndarray
+    profile: np.ndarray
+    leg_valid: np.ndarray  # bool
+    # stacked incidence matrices
+    leg_proc: np.ndarray  # [N, T, P] f32
+    proc_link: np.ndarray  # [N, P, L] f32
+    leg_link: np.ndarray  # [N, T, L] f32
+    # stacked per-link arrays [N, L]
+    bandwidth: np.ndarray
+    bg_mu: np.ndarray
+    bg_sigma: np.ndarray
+    bg_period: np.ndarray
+    link_valid: np.ndarray  # bool
+    # per-scenario scalars [N]
+    max_ticks: np.ndarray
+    n_legs: np.ndarray
+    n_procs: np.ndarray
+    n_links: np.ndarray
+    # metadata
+    protocol_names: List[str]
+    names: List[str]
+    tables: List[LegTable]
+
+    @property
+    def n_scenarios(self) -> int:
+        return int(self.size_mb.shape[0])
+
+    @property
+    def pad_legs(self) -> int:
+        return int(self.size_mb.shape[1])
+
+    @property
+    def pad_procs(self) -> int:
+        return int(self.proc_link.shape[1])
+
+    @property
+    def pad_links(self) -> int:
+        return int(self.bandwidth.shape[1])
+
+    def scenario_table(self, i: int) -> LegTable:
+        """The unpadded source table of scenario ``i`` (oracle comparisons)."""
+        return self.tables[i]
+
+
+def compile_bank(
+    pairs: Sequence[Tuple[Grid, Campaign]],
+    *,
+    max_ticks=None,
+    pad_legs: Optional[int] = None,
+    pad_procs: Optional[int] = None,
+    pad_links: Optional[int] = None,
+    pad_multiple: int = 1,
+) -> ScenarioBank:
+    """Compile heterogeneous ``(grid, campaign)`` pairs into one padded bank.
+
+    ``max_ticks`` may be ``None`` (per-scenario safe upper bound), an int
+    (uniform cap), or a per-scenario sequence. ``pad_*`` set explicit floors
+    for the padded axes (so differently-sized banks can share a jit trace);
+    ``pad_multiple`` rounds every padded axis up (e.g. 8 or 128 for
+    lane-friendly kernel operands).
+    """
+    if not pairs:
+        raise ValueError("compile_bank needs at least one (grid, campaign)")
+    tables = [compile_campaign(g, c) for g, c in pairs]
+    names = [c.name for _, c in pairs]
+    n = len(tables)
+
+    # pad floors are floors: content larger than a floor grows the pad
+    T = _round_up(max(max(t.n_legs for t in tables), pad_legs or 1), pad_multiple)
+    P = _round_up(max(max(t.n_procs for t in tables), pad_procs or 1), pad_multiple)
+    L = _round_up(max(max(t.n_links for t in tables), pad_links or 1), pad_multiple)
+
+    proto_names = sorted(set().union(*(t.protocol_names for t in tables)))
+    proto_index = {p: i for i, p in enumerate(proto_names)}
+
+    if max_ticks is None:
+        ticks = [t.max_ticks_upper_bound() for t in tables]
+    elif np.ndim(max_ticks) == 0:
+        ticks = [int(max_ticks)] * n
+    else:
+        if len(max_ticks) != n:
+            raise ValueError(f"max_ticks: expected {n} entries, got {len(max_ticks)}")
+        ticks = [int(m) for m in max_ticks]
+
+    size_mb = np.zeros((n, T), np.float32)
+    release = np.zeros((n, T), np.int32)
+    dep = np.full((n, T), -1, np.int32)
+    keep = np.ones((n, T), np.float32)
+    proto_id = np.full((n, T), PAD_PROTOCOL, np.int32)
+    profile = np.full((n, T), PAD_PROFILE, np.int32)
+    leg_valid = np.zeros((n, T), bool)
+    leg_proc = np.zeros((n, T, P), np.float32)
+    proc_link = np.zeros((n, P, L), np.float32)
+    leg_link = np.zeros((n, T, L), np.float32)
+    bandwidth = np.zeros((n, L), np.float32)
+    bg_mu = np.zeros((n, L), np.float32)
+    bg_sigma = np.zeros((n, L), np.float32)
+    bg_period = np.full((n, L), PAD_BG_PERIOD, np.int32)
+    link_valid = np.zeros((n, L), bool)
+
+    for i, t in enumerate(tables):
+        nt, np_, nl = t.n_legs, t.n_procs, t.n_links
+        size_mb[i, :nt] = t.size_mb
+        release[i, :nt] = t.release
+        dep[i, :nt] = t.dep
+        keep[i, :nt] = t.keep_frac
+        remap = np.array([proto_index[p] for p in t.protocol_names], np.int32)
+        proto_id[i, :nt] = remap[t.protocol_id]
+        profile[i, :nt] = t.profile
+        leg_valid[i, :nt] = True
+        leg_proc[i, :nt, :np_] = t.leg_proc_onehot()
+        proc_link[i, :np_, :nl] = t.proc_link_onehot()
+        leg_link[i, :nt, :nl] = t.leg_link_onehot()
+        bandwidth[i, :nl] = t.links.bandwidth
+        bg_mu[i, :nl] = t.links.bg_mu
+        bg_sigma[i, :nl] = t.links.bg_sigma
+        bg_period[i, :nl] = t.links.bg_period
+        link_valid[i, :nl] = True
+
+    return ScenarioBank(
+        size_mb=size_mb,
+        release=release,
+        dep=dep,
+        keep_frac=keep,
+        protocol_id=proto_id,
+        profile=profile,
+        leg_valid=leg_valid,
+        leg_proc=leg_proc,
+        proc_link=proc_link,
+        leg_link=leg_link,
+        bandwidth=bandwidth,
+        bg_mu=bg_mu,
+        bg_sigma=bg_sigma,
+        bg_period=bg_period,
+        link_valid=link_valid,
+        max_ticks=np.array(ticks, np.int32),
+        n_legs=np.array([t.n_legs for t in tables], np.int32),
+        n_procs=np.array([t.n_procs for t in tables], np.int32),
+        n_links=np.array([t.n_links for t in tables], np.int32),
+        protocol_names=proto_names,
+        names=names,
+        tables=tables,
     )
 
 

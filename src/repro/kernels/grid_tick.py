@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["grid_tick_pallas"]
+__all__ = ["grid_tick_pallas", "grid_tick_bank_pallas"]
 
 _LANE = 128
 _SUBLANE = 8
@@ -170,3 +170,131 @@ def grid_tick_pallas(
     if unbatched:
         return xfer[0], proc_xfer[0], link_xfer[0]
     return xfer, proc_xfer, link_xfer
+
+
+# ---------------------------------------------------------------------------
+# bank-tiled variant: per-scenario incidence matrices, grid over
+# (scenario, replica-block)
+# ---------------------------------------------------------------------------
+
+def _bank_tick_kernel(
+    active_ref,  # [1, Rb, T]
+    remaining_ref,  # [1, Rb, T]
+    bg_ref,  # [1, Rb, L]
+    keep_ref,  # [1, 1, T]
+    bw_ref,  # [1, 1, L]
+    m_tp_ref,  # [1, T, P]
+    m_pl_ref,  # [1, P, L]
+    m_tl_ref,  # [1, T, L]
+    xfer_ref,  # [1, Rb, T] out
+    proc_ref,  # [1, Rb, P] out
+    link_ref,  # [1, Rb, L] out
+):
+    f32 = jnp.float32
+    active = active_ref[0].astype(f32)
+    remaining = remaining_ref[0].astype(f32)
+    m_tp = m_tp_ref[0]
+    m_pl = m_pl_ref[0]
+    m_tl = m_tl_ref[0]
+
+    dot = lambda a, b: jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())), preferred_element_type=f32
+    )
+    dot_t = lambda a, b: jax.lax.dot_general(
+        a, b, (((1,), (1,)), ((), ())), preferred_element_type=f32
+    )
+    threads = dot(active, m_tp)  # [Rb, P]
+    proc_active = (threads > 0).astype(f32)
+    campaign = dot(proc_active, m_pl)  # [Rb, L]
+    denom = jnp.maximum(campaign + jnp.maximum(bg_ref[0].astype(f32), 0.0), 1.0)
+    per_proc = bw_ref[0].astype(f32) / denom  # [Rb, L]
+    per_proc_leg = dot_t(per_proc, m_tl)  # [Rb, T]
+    threads_leg = jnp.maximum(dot_t(threads, m_tp), 1.0)  # [Rb, T]
+    chunk = active * keep_ref[0].astype(f32) * per_proc_leg / threads_leg
+    xfer = jnp.minimum(remaining, chunk)
+    xfer_ref[0] = xfer
+    proc_ref[0] = dot(xfer, m_tp)
+    link_ref[0] = dot(xfer, m_tl)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_r"))
+def grid_tick_bank_pallas(
+    active: jax.Array,  # [S, R, T]
+    remaining: jax.Array,  # [S, R, T]
+    keep_frac: jax.Array,  # [S, T]
+    bg_load: jax.Array,  # [S, R, L]
+    bandwidth: jax.Array,  # [S, L]
+    leg_proc: jax.Array,  # [S, T, P]
+    proc_link: jax.Array,  # [S, P, L]
+    leg_link: jax.Array,  # [S, T, L]
+    *,
+    interpret: bool = False,
+    block_r: int = 256,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fair-share tick for a **scenario bank**: the incidence matrices carry a
+    leading scenario dim instead of being broadcast constants. The grid runs
+    ``(scenario, replica-block)``; each scenario's incidences stay resident in
+    VMEM across its replica blocks, so heterogeneous campaigns batch without
+    retraces or HBM round-trips between the fused matmul stages.
+
+    The single-campaign padding contract applies per scenario: padded legs
+    are inactive with all-zero one-hot rows, padded links have zero
+    bandwidth, so padding transfers exactly nothing.
+    """
+    S, R, T = active.shape
+    P = leg_proc.shape[2]
+    L = proc_link.shape[2]
+
+    active_p = _pad_to(_pad_to(active, 2, _LANE), 1, _SUBLANE)
+    remaining_p = _pad_to(_pad_to(remaining, 2, _LANE), 1, _SUBLANE)
+    bg_p = _pad_to(_pad_to(bg_load, 2, _LANE), 1, _SUBLANE)
+    keep_p = _pad_to(keep_frac[:, None, :], 2, _LANE)
+    bw_p = _pad_to(bandwidth[:, None, :], 2, _LANE)
+    m_tp = _pad_to(_pad_to(leg_proc, 1, _LANE), 2, _LANE)
+    m_pl = _pad_to(_pad_to(proc_link, 1, _LANE), 2, _LANE)
+    m_tl = _pad_to(_pad_to(leg_link, 1, _LANE), 2, _LANE)
+    Tp = active_p.shape[2]
+    Pp, Lp = m_pl.shape[1], m_pl.shape[2]
+
+    rb = min(block_r, active_p.shape[1])
+    active_p = _pad_to(active_p, 1, rb)
+    remaining_p = _pad_to(remaining_p, 1, rb)
+    bg_p = _pad_to(bg_p, 1, rb)
+    Rp = active_p.shape[1]
+    grid = (S, Rp // rb)
+
+    rep_spec = lambda w: pl.BlockSpec((1, rb, w), lambda s, r: (s, r, 0))
+    scn_spec = lambda h, w: pl.BlockSpec((1, h, w), lambda s, r: (s, 0, 0))
+
+    out_shape = (
+        jax.ShapeDtypeStruct((S, Rp, Tp), jnp.float32),
+        jax.ShapeDtypeStruct((S, Rp, Pp), jnp.float32),
+        jax.ShapeDtypeStruct((S, Rp, Lp), jnp.float32),
+    )
+    xfer, proc_xfer, link_xfer = pl.pallas_call(
+        _bank_tick_kernel,
+        grid=grid,
+        in_specs=[
+            rep_spec(Tp),
+            rep_spec(Tp),
+            rep_spec(Lp),
+            scn_spec(1, Tp),
+            scn_spec(1, Lp),
+            scn_spec(Tp, Pp),
+            scn_spec(Pp, Lp),
+            scn_spec(Tp, Lp),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, rb, Tp), lambda s, r: (s, r, 0)),
+            pl.BlockSpec((1, rb, Pp), lambda s, r: (s, r, 0)),
+            pl.BlockSpec((1, rb, Lp), lambda s, r: (s, r, 0)),
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(active_p, remaining_p, bg_p, keep_p, bw_p, m_tp, m_pl, m_tl)
+
+    return (
+        xfer[:, :R, :T],
+        proc_xfer[:, :R, :P],
+        link_xfer[:, :R, :L],
+    )

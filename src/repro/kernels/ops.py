@@ -25,6 +25,7 @@ from repro.kernels import ref
 __all__ = [
     "default_backend",
     "grid_tick",
+    "grid_tick_bank",
     "flash_attention",
     "decode_attention",
     "mlstm_chunk",
@@ -74,6 +75,36 @@ def grid_tick(
     from repro.kernels import grid_tick as _k
 
     return _k.grid_tick_pallas(
+        active, remaining, keep_frac, bg_load, bandwidth,
+        leg_proc, proc_link, leg_link,
+        interpret=(b == "pallas_interpret"),
+    )
+
+
+def grid_tick_bank(
+    active: jax.Array,  # [S, R, T]
+    remaining: jax.Array,  # [S, R, T]
+    keep_frac: jax.Array,  # [S, T]
+    bg_load: jax.Array,  # [S, R, L]
+    bandwidth: jax.Array,  # [S, L]
+    leg_proc: jax.Array,  # [S, T, P]
+    proc_link: jax.Array,  # [S, P, L]
+    leg_link: jax.Array,  # [S, T, L]
+    *,
+    backend: Optional[str] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Scenario-bank fair-share tick: per-scenario incidence operands instead
+    of broadcast constants (the hot path of ``engine.simulate_bank`` on TPU;
+    the XLA path broadcasts through the batched reference)."""
+    b = _resolve(backend)
+    if b == "xla":
+        return ref.grid_tick(
+            active, remaining, keep_frac[:, None], bg_load, bandwidth[:, None],
+            leg_proc[:, None], proc_link[:, None], leg_link[:, None],
+        )
+    from repro.kernels import grid_tick as _k
+
+    return _k.grid_tick_bank_pallas(
         active, remaining, keep_frac, bg_load, bandwidth,
         leg_proc, proc_link, leg_link,
         interpret=(b == "pallas_interpret"),

@@ -25,37 +25,46 @@ __all__ = [
 # grid_tick: GDAPS fair-share transfer tick (paper Section 4)
 # ---------------------------------------------------------------------------
 def grid_tick(
-    active: jax.Array,  # [T] f32 in {0,1}
-    remaining: jax.Array,  # [T] f32 MB
-    keep_frac: jax.Array,  # [T] f32 = 1 - protocol overhead
-    bg_load: jax.Array,  # [L] f32 background processes (>=0)
-    bandwidth: jax.Array,  # [L] f32 MB/tick
-    leg_proc: jax.Array,  # [T, P] f32 one-hot
-    proc_link: jax.Array,  # [P, L] f32 one-hot
-    leg_link: jax.Array,  # [T, L] f32 one-hot
+    active: jax.Array,  # [..., T] f32 in {0,1}
+    remaining: jax.Array,  # [..., T] f32 MB
+    keep_frac: jax.Array,  # [..., T] f32 = 1 - protocol overhead
+    bg_load: jax.Array,  # [..., L] f32 background processes (>=0)
+    bandwidth: jax.Array,  # [..., L] f32 MB/tick
+    leg_proc: jax.Array,  # [..., T, P] f32 one-hot
+    proc_link: jax.Array,  # [..., P, L] f32 one-hot
+    leg_link: jax.Array,  # [..., T, L] f32 one-hot
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One simulation tick of the GDAPS transfer mechanism.
 
     chunk = (link.bandwidth / (background_load + campaign_load)) / n_threads
     chunk -= chunk * protocol.overhead
 
-    Returns ``(xfer[T], proc_xfer[P], link_xfer[L])`` — MB moved this tick per
-    leg / per process / per link (campaign traffic only).
+    Returns ``(xfer[..., T], proc_xfer[..., P], link_xfer[..., L])`` — MB
+    moved this tick per leg / per process / per link (campaign traffic only).
+
+    All operands broadcast over leading batch dims, so a scenario bank can
+    pass per-scenario incidence matrices ``[N, T, P]`` against per-sim state
+    ``[N, T]`` (or ``[N, R, T]`` with ``[N, 1, T, P]`` incidences) directly —
+    no vmap required.
     """
     f32 = jnp.float32
     active = active.astype(f32)
-    threads_per_proc = active @ leg_proc  # [P]
+    # one-hot contractions as batched matmuls: [..., 1, T] @ [..., T, P]
+    row = lambda v, m: jnp.matmul(v[..., None, :], m)[..., 0, :]
+    # gathers against the transposed incidence: [..., 1, X] @ [..., X, T]^T
+    col = lambda v, m: jnp.matmul(v[..., None, :], jnp.swapaxes(m, -1, -2))[..., 0, :]
+    threads_per_proc = row(active, leg_proc)  # [..., P]
     proc_is_active = (threads_per_proc > 0).astype(f32)
-    campaign_load = proc_is_active @ proc_link  # [L]
+    campaign_load = row(proc_is_active, proc_link)  # [..., L]
     denom = jnp.maximum(campaign_load + jnp.maximum(bg_load, 0.0), 1.0)
-    per_proc_bw = bandwidth / denom  # [L]
+    per_proc_bw = bandwidth / denom  # [..., L]
     # gather link/process quantities back to legs (one-hot matvecs)
-    per_proc_bw_leg = leg_link @ per_proc_bw  # [T]
-    threads_leg = jnp.maximum(leg_proc @ threads_per_proc, 1.0)  # [T]
+    per_proc_bw_leg = col(per_proc_bw, leg_link)  # [..., T]
+    threads_leg = jnp.maximum(col(threads_per_proc, leg_proc), 1.0)  # [..., T]
     chunk = active * keep_frac * per_proc_bw_leg / threads_leg
     xfer = jnp.minimum(remaining, chunk)
-    proc_xfer = xfer @ leg_proc  # [P]
-    link_xfer = xfer @ leg_link  # [L]
+    proc_xfer = row(xfer, leg_proc)  # [..., P]
+    link_xfer = row(xfer, leg_link)  # [..., L]
     return xfer, proc_xfer, link_xfer
 
 

@@ -1,0 +1,224 @@
+"""ScenarioBank semantics: the banked engine must match per-scenario
+``simulate()`` and the plain-Python oracle leg for leg, run every scenario in
+one jit trace, and keep the padding contract inert."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine as E
+from repro.core.calibration import (
+    PriorBox,
+    make_bank_theta_mapper,
+    presimulate_bank,
+    validate_bank,
+)
+from repro.core.engine import (
+    SimSpec,
+    bank_spec,
+    bank_trace_count,
+    make_bank_params,
+    make_params,
+    simulate,
+    simulate_bank,
+)
+from repro.core.refsim import reference_simulate
+from repro.core.scenarios import build_bank, family_names, sample_scenarios
+from repro.core.workload import ProfileTag, compile_bank
+
+N_FAMILIES = len(family_names())
+
+
+def _bank(n=8, seed=0, max_ticks=20_000, **kw):
+    return build_bank(n=n, seed=seed, max_ticks=max_ticks, **kw)
+
+
+def _assert_bank_matches_scenario(bank, res, i, ref, r=0, atol=1e-5):
+    nt = int(bank.n_legs[i])
+    pick = lambda a: np.asarray(a)[i, r, :nt]
+    for field in ("transfer_time", "conth_mb", "conpr_mb", "start_tick"):
+        np.testing.assert_allclose(
+            pick(getattr(res, field)),
+            np.asarray(ref[field] if isinstance(ref, dict) else getattr(ref, field)),
+            rtol=1e-5, atol=atol, err_msg=f"scenario {i} field {field}",
+        )
+    ref_done = ref["done"] if isinstance(ref, dict) else np.asarray(ref.done)
+    np.testing.assert_array_equal(pick(res.done), ref_done,
+                                  err_msg=f"scenario {i} done")
+
+
+def test_bank_has_heterogeneous_shapes():
+    bank = _bank(n=N_FAMILIES)
+    assert bank.n_scenarios == N_FAMILIES
+    # the fleet is genuinely heterogeneous: shapes differ across scenarios
+    assert len({int(n) for n in bank.n_legs}) > 1
+    assert len({int(n) for n in bank.n_links}) > 1
+    # padding contract: padded legs carry no size, no incidence
+    for i in range(bank.n_scenarios):
+        nt = int(bank.n_legs[i])
+        assert (bank.size_mb[i, nt:] == 0).all()
+        assert (bank.leg_proc[i, nt:] == 0).all()
+        assert (bank.leg_link[i, nt:] == 0).all()
+        assert not bank.leg_valid[i, nt:].any()
+        nl = int(bank.n_links[i])
+        assert (bank.bandwidth[i, nl:] == 0).all()
+
+
+@pytest.mark.parametrize("leap", [False, True])
+def test_bank_matches_per_scenario_and_oracle(leap):
+    """>= 8 heterogeneous scenarios x 2 replicas: the banked run must agree
+    leg-for-leg with the per-scenario engine AND the loop-based oracle under
+    deterministic background load (the families use sigma=0)."""
+    n = max(8, N_FAMILIES)
+    bank = _bank(n=n)
+    params = make_bank_params(bank)
+    keys = jax.random.split(jax.random.PRNGKey(0), n * 2).reshape(n, 2, 2)
+    res = simulate_bank(bank, params, keys, leap=leap)
+    assert res.transfer_time.shape == (n, 2, bank.pad_legs)
+
+    for i in range(n):
+        table = bank.scenario_table(i)
+        spec = SimSpec.from_table(table, max_ticks=int(bank.max_ticks[i]))
+        p = make_params(table)
+        for r in range(2):
+            ref = simulate(spec, p, keys[i, r], leap=leap)
+            _assert_bank_matches_scenario(bank, res, i, ref, r=r)
+            if leap:
+                continue
+            assert int(res.ticks[i, r]) == int(ref.ticks)
+        # plain-Python oracle (tick semantics; deterministic bg)
+        if not leap:
+            oracle = reference_simulate(
+                table,
+                np.asarray(p.keep_frac),
+                np.asarray(p.bg_mu),
+                np.asarray(p.bg_sigma),
+                int(bank.max_ticks[i]),
+            )
+            _assert_bank_matches_scenario(bank, res, i, oracle, r=0, atol=1e-3)
+
+
+def test_bank_padding_is_inert():
+    """Growing the pads must not change any real leg's observations."""
+    pairs = sample_scenarios(n=4, seed=3)
+    small = compile_bank(pairs, max_ticks=20_000)
+    big = compile_bank(
+        pairs, max_ticks=20_000,
+        pad_legs=small.pad_legs + 13,
+        pad_procs=small.pad_procs + 7,
+        pad_links=small.pad_links + 5,
+    )
+    keys = jax.random.split(jax.random.PRNGKey(1), 4).reshape(4, 1, 2)
+    r_small = simulate_bank(small, make_bank_params(small), keys)
+    r_big = simulate_bank(big, make_bank_params(big), keys)
+    for i in range(4):
+        nt = int(small.n_legs[i])
+        for f in ("transfer_time", "conth_mb", "conpr_mb", "done"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(r_small, f))[i, 0, :nt],
+                np.asarray(getattr(r_big, f))[i, 0, :nt],
+                rtol=1e-6, atol=1e-6, err_msg=f,
+            )
+    # padded legs are born done and transfer nothing
+    pad = ~np.broadcast_to(big.leg_valid[:, None, :], r_big.done.shape)
+    assert np.asarray(r_big.done)[pad].all()
+    assert (np.asarray(r_big.transfer_time)[pad] == 0).all()
+
+
+@pytest.mark.slow
+def test_bank_64_scenarios_single_trace():
+    """64 heterogeneous scenarios x 2 replicas in ONE jit trace, and a second
+    fleet of the same padded shape reuses it (zero retraces)."""
+    pads = dict(pad_legs=64, pad_procs=64, pad_links=8)
+    bank = _bank(n=64, seed=0, **pads)
+    params = make_bank_params(bank)
+    keys = jax.random.split(jax.random.PRNGKey(0), 64 * 2).reshape(64, 2, 2)
+    before = bank_trace_count()
+    res = simulate_bank(bank, params, keys, leap=True)
+    res.done.block_until_ready()
+    assert bank_trace_count() == before + 1
+    # stratified parity against the per-scenario engine (full sweep is the
+    # oracle test above; here we guard the at-scale path)
+    for i in range(0, 64, 8):
+        table = bank.scenario_table(i)
+        spec = SimSpec.from_table(table, max_ticks=int(bank.max_ticks[i]))
+        ref = simulate(spec, make_params(table), keys[i, 0], leap=True)
+        _assert_bank_matches_scenario(bank, res, i, ref, r=0)
+    # a *different* fleet, same pads -> same trace
+    bank2 = _bank(n=64, seed=1000, **pads)
+    res2 = simulate_bank(bank2, make_bank_params(bank2), keys, leap=True)
+    res2.done.block_until_ready()
+    assert bank_trace_count() == before + 1
+    valid2 = np.broadcast_to(bank2.leg_valid[:, None, :], res2.done.shape)
+    assert np.asarray(res2.done)[valid2].all()
+
+
+def test_make_bank_params_protocol_override():
+    bank = _bank(n=N_FAMILIES)
+    params = make_bank_params(bank, overhead=0.25, protocol="webdav")
+    pid = bank.protocol_names.index("webdav")
+    keep = np.asarray(params.keep_frac)
+    webdav = bank.protocol_id == pid
+    assert np.allclose(keep[webdav], 0.75)
+    other = bank.leg_valid & ~webdav
+    assert np.allclose(keep[other], bank.keep_frac[other])
+    assert np.allclose(keep[~bank.leg_valid], 1.0)  # padding untouched
+
+
+def test_bank_theta_mapper_matches_scalar_mapper():
+    """The bank mapper must agree with the per-table mapper on every valid
+    slot (unified protocol namespace notwithstanding)."""
+    from repro.core.calibration import make_theta_mapper
+
+    bank = _bank(n=4, seed=5)
+    theta = jnp.array([0.07, 12.0, 3.0])
+    bank_params = make_bank_theta_mapper(bank, "webdav")(theta)
+    for i in range(4):
+        table = bank.scenario_table(i)
+        if "webdav" not in table.protocol_names:
+            continue
+        ref = make_theta_mapper(table, "webdav")(theta)
+        nt, nl = table.n_legs, table.n_links
+        np.testing.assert_allclose(
+            np.asarray(bank_params.keep_frac)[i, :nt], np.asarray(ref.keep_frac),
+            rtol=1e-6,
+        )
+        np.testing.assert_allclose(
+            np.asarray(bank_params.bg_mu)[i, :nl], np.asarray(ref.bg_mu),
+            rtol=1e-6,
+        )
+
+
+def test_presimulate_bank_shapes_and_finiteness():
+    # Eq.-1 coefficients need remote-access observations: draw the fleet
+    # from remote-bearing families
+    bank = build_bank(
+        ["wlcg-remote", "bursty"], n=3, seed=7, max_ticks=20_000
+    )
+    theta, x, sid = presimulate_bank(
+        bank, PriorBox.paper(), jax.random.PRNGKey(0), 6, batch=3, leap=True,
+    )
+    assert theta.shape == (18, 3) and x.shape == (18, 3) and sid.shape == (18,)
+    assert np.isfinite(np.asarray(x)).all()
+    assert (np.bincount(np.asarray(sid), minlength=3) == 6).all()
+    lo, hi = PriorBox.paper().low, PriorBox.paper().high
+    assert (np.asarray(theta) >= np.asarray(lo) - 1e-6).all()
+    assert (np.asarray(theta) <= np.asarray(hi) + 1e-6).all()
+
+
+def test_validate_bank_per_scenario_errors():
+    bank = build_bank(
+        ["wlcg-remote", "bursty"], n=3, seed=9, max_ticks=20_000
+    )
+    val = validate_bank(
+        bank,
+        jnp.array([0.02, 1.0, 0.0]),
+        jnp.array([0.02, 0.03, 0.001]),
+        jax.random.PRNGKey(2),
+        n_sims=4,
+    )
+    assert val["median_coef"].shape == (3, 3)
+    assert val["mean_abs_error"].shape == (3, 3)
+    assert val["sum_error"].shape == (3, 4)
+    assert len(val["scenario_names"]) == 3
+    assert np.isfinite(val["coefficients"]).all()

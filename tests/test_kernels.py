@@ -8,7 +8,7 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import _bwd_chunked, flash_attention_pallas
-from repro.kernels.grid_tick import grid_tick_pallas
+from repro.kernels.grid_tick import grid_tick_bank_pallas, grid_tick_pallas
 from repro.kernels.mlstm_chunk import mlstm_chunk_pallas
 from repro.kernels.selu_mlp import selu_mlp_pallas
 
@@ -69,6 +69,66 @@ def test_grid_tick_conserves_bandwidth():
         interpret=True,
     )
     assert (np.asarray(link_xfer)[0] <= bw + 1e-3).all()
+
+
+@pytest.mark.parametrize(
+    "S,R,T,P,L",
+    [(1, 4, 8, 4, 2), (3, 5, 37, 19, 4), (4, 2, 106, 64, 7)],
+)
+def test_grid_tick_bank_matches_oracle(S, R, T, P, L):
+    """Bank-tiled kernel (per-scenario incidences) vs the double-vmapped
+    unbatched oracle."""
+    m_tp = np.zeros((S, T, P), np.float32)
+    m_pl = np.zeros((S, P, L), np.float32)
+    for s in range(S):
+        m_tp[s, np.arange(T), RNG.randint(0, P, T)] = 1
+        m_pl[s, np.arange(P), RNG.randint(0, L, P)] = 1
+    m_tl = np.einsum("stp,spl->stl", m_tp, m_pl)
+    active = (RNG.rand(S, R, T) < 0.5).astype(np.float32)
+    remaining = RNG.uniform(0.01, 50, (S, R, T)).astype(np.float32)
+    keep = RNG.uniform(0.8, 1, (S, T)).astype(np.float32)
+    bg = RNG.uniform(-1, 5, (S, R, L)).astype(np.float32)
+    bw = RNG.uniform(10, 100, (S, L)).astype(np.float32)
+    args = [jnp.asarray(a)
+            for a in (active, remaining, keep, bg, bw, m_tp, m_pl, m_tl)]
+    inner = jax.vmap(ref.grid_tick, in_axes=(0, 0, None, 0, None, None, None, None))
+    o_ref = jax.vmap(inner, in_axes=(0,) * 8)(*args)
+    o_pal = grid_tick_bank_pallas(*args, interpret=True)
+    for r, p in zip(o_ref, o_pal):
+        np.testing.assert_allclose(np.asarray(r), np.asarray(p),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_grid_tick_ref_broadcasts_batch_dims():
+    """The generalized reference accepts stacked operands directly and agrees
+    with its own per-scenario evaluation."""
+    S, R, T, P, L = 2, 3, 9, 5, 3
+    m_tp = np.zeros((S, T, P), np.float32)
+    m_pl = np.zeros((S, P, L), np.float32)
+    for s in range(S):
+        m_tp[s, np.arange(T), RNG.randint(0, P, T)] = 1
+        m_pl[s, np.arange(P), RNG.randint(0, L, P)] = 1
+    m_tl = np.einsum("stp,spl->stl", m_tp, m_pl)
+    active = (RNG.rand(S, R, T) < 0.6).astype(np.float32)
+    remaining = RNG.uniform(0.01, 50, (S, R, T)).astype(np.float32)
+    keep = RNG.uniform(0.8, 1, (S, T)).astype(np.float32)
+    bg = RNG.uniform(0, 5, (S, R, L)).astype(np.float32)
+    bw = RNG.uniform(10, 100, (S, L)).astype(np.float32)
+    batched = ref.grid_tick(
+        jnp.asarray(active), jnp.asarray(remaining), jnp.asarray(keep[:, None]),
+        jnp.asarray(bg), jnp.asarray(bw[:, None]), jnp.asarray(m_tp[:, None]),
+        jnp.asarray(m_pl[:, None]), jnp.asarray(m_tl[:, None]),
+    )
+    for s in range(S):
+        for r in range(R):
+            one = ref.grid_tick(
+                jnp.asarray(active[s, r]), jnp.asarray(remaining[s, r]),
+                jnp.asarray(keep[s]), jnp.asarray(bg[s, r]), jnp.asarray(bw[s]),
+                jnp.asarray(m_tp[s]), jnp.asarray(m_pl[s]), jnp.asarray(m_tl[s]),
+            )
+            for a, b in zip(batched, one):
+                np.testing.assert_allclose(np.asarray(a)[s, r], np.asarray(b),
+                                           rtol=1e-6, atol=1e-6)
 
 
 # ---------------------------------------------------------------------------
