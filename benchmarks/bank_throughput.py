@@ -3,14 +3,21 @@
 The loop baseline is what the pre-bank architecture forced on every consumer
 of scenario diversity: one ``simulate_batch`` dispatch per (grid, campaign)
 pair, each distinct campaign shape paying its own jit trace. The bank runs
-the identical fleet x replicas through one padded trace.
+the identical fleet x replicas through one padded trace — and, since the
+bucketing rework, through one trace per ``max_ticks``-homogeneous sub-bank,
+so warm same-fleet throughput is no longer gated by the slowest scenario's
+tick count times the global pad.
 
     PYTHONPATH=src python benchmarks/bank_throughput.py \
-        [--scenarios 64] [--replicas 4] [--out BENCH_bank.json]
+        [--scenarios 64] [--replicas 4] [--buckets 8] [--out BENCH_bank.json]
 
 Emits ``BENCH_bank.json`` with cold (trace included — the cost scenario
-diversity actually incurs) and warm (all traces cached) walls, scenarios/sec,
-simulated leg-ticks/sec, and the speedups future PRs must not regress.
+diversity actually incurs) and warm (all traces cached) walls, per-bucket
+warm throughput, the manual-banked-kernel vs vmap lowering delta on the
+monolithic bank, and the speedups future PRs must not regress:
+``speedup_warm`` (bucketed warm vs cached loop, the gap this rework closed),
+``speedup_fresh_fleet`` (steady-state scenario diversity), and
+``bank_fresh_fleet_retraces`` (must stay 0 for fixed bucket shapes).
 """
 from __future__ import annotations
 
@@ -27,6 +34,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scenarios", type=int, default=64)
     ap.add_argument("--replicas", type=int, default=4)
+    ap.add_argument("--buckets", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--max-ticks", type=int, default=20_000)
     ap.add_argument("--leap", action=argparse.BooleanOptionalAction, default=True)
@@ -38,28 +46,51 @@ def main() -> None:
 
     from repro.core.engine import (
         SimSpec,
-        bank_trace_count,
+        count_bank_traces,
         make_bank_params,
         make_params,
+        reset_bank_trace_count,
         simulate_bank,
         simulate_batch,
     )
     from repro.core.scenarios import sample_scenarios
     from repro.core.workload import compile_bank, compile_campaign
 
-    n, r = args.scenarios, args.replicas
+    n, r, k = args.scenarios, args.replicas, args.buckets
     pairs = sample_scenarios(n=n, seed=args.seed)
     pairs2 = sample_scenarios(n=n, seed=args.seed + 7919)  # a fresh fleet
-    # shared pad floors so both fleets hit one bank trace
+    # shared pad floors so both fleets hit one monolithic trace ...
     probe = [compile_campaign(g, c) for g, c in pairs + pairs2]
     pads = dict(
         pad_legs=max(t.n_legs for t in probe),
         pad_procs=max(t.n_procs for t in probe),
         pad_links=max(t.n_links for t in probe),
     )
-    bank = compile_bank(pairs, max_ticks=args.max_ticks, **pads)
-    bank2 = compile_bank(pairs2, max_ticks=args.max_ticks, **pads)
+    # ... and shared per-bucket pad floors so both fleets reuse every bucket
+    # trace (two-pass: bucket each fleet, then join the bucket shapes)
+    b1 = compile_bank(pairs, max_ticks=args.max_ticks, n_buckets=k, **pads)
+    b2 = compile_bank(pairs2, max_ticks=args.max_ticks, n_buckets=k, **pads)
+    bucket_floors = [
+        (max(x.bank.pad_legs, y.bank.pad_legs),
+         max(x.bank.pad_procs, y.bank.pad_procs),
+         max(x.bank.pad_links, y.bank.pad_links))
+        for x, y in zip(b1.buckets, b2.buckets)
+    ]
+    bank = compile_bank(
+        pairs, max_ticks=args.max_ticks, n_buckets=k,
+        bucket_pad_floors=bucket_floors, **pads,
+    )
+    bank2 = compile_bank(
+        pairs2, max_ticks=args.max_ticks, n_buckets=k,
+        bucket_pad_floors=bucket_floors, **pads,
+    )
     keys = jax.random.split(jax.random.PRNGKey(args.seed), n * r).reshape(n, r, 2)
+
+    def timed(fn):
+        t0 = time.time()
+        out = fn()
+        jax.block_until_ready(out)
+        return out, time.time() - t0
 
     # ---- per-scenario Python loop (the pre-bank architecture) -------------
     tables = bank.tables
@@ -70,57 +101,69 @@ def main() -> None:
     params_i = [make_params(t) for t in tables]
 
     def run_loop():
-        ticks = []
-        for i in range(n):
-            res = simulate_batch(specs[i], params_i[i], keys[i], leap=args.leap)
-            ticks.append(np.asarray(res.ticks))
-        jax.block_until_ready(ticks)
-        return ticks
+        return [
+            simulate_batch(specs[i], params_i[i], keys[i], leap=args.leap).ticks
+            for i in range(n)
+        ]
 
-    t0 = time.time()
-    loop_ticks = run_loop()  # pays one trace per distinct campaign shape
-    loop_cold = time.time() - t0
-    t0 = time.time()
-    run_loop()
-    loop_warm = time.time() - t0
+    _, loop_cold = timed(run_loop)  # pays one trace per distinct campaign shape
+    _, loop_warm = timed(run_loop)
 
-    # ---- banked engine ----------------------------------------------------
+    # ---- monolithic bank: vmap lowering vs manual banked tick body --------
     bparams = make_bank_params(bank)
-    traces0 = bank_trace_count()
+    run_mono = lambda lowering: simulate_bank(
+        bank, bparams, keys, leap=args.leap, lowering=lowering, bucketed=False
+    )
+    timed(lambda: run_mono("vmap"))
+    _, vmap_mono_warm = timed(lambda: run_mono("vmap"))
+    timed(lambda: run_mono("banked"))
+    _, banked_mono_warm = timed(lambda: run_mono("banked"))
 
-    def run_bank():
-        res = simulate_bank(bank, bparams, keys, leap=args.leap)
-        jax.block_until_ready(res)
-        return res
+    # ---- bucketed bank (the warm-path fix) --------------------------------
+    reset_bank_trace_count()
+    run_bank = lambda: simulate_bank(bank, bparams, keys, leap=args.leap)
+    with count_bank_traces() as cold_traces:
+        bank_res, bank_cold = timed(run_bank)
+    _, bank_warm = timed(run_bank)
+    bank_traces = cold_traces.count
 
-    t0 = time.time()
-    bank_res = run_bank()
-    bank_cold = time.time() - t0
-    t0 = time.time()
-    run_bank()
-    bank_warm = time.time() - t0
-    bank_traces = bank_trace_count() - traces0
+    # per-bucket warm throughput: each sub-bank timed as its own dispatch
+    per_bucket = []
+    for bucket in bank.buckets:
+        sub = bucket.bank
+        sub_params = make_bank_params(sub)
+        sub_keys = keys[np.asarray(bucket.scenario_ids)]
+        run_sub = lambda: simulate_bank(sub, sub_params, sub_keys, leap=args.leap)
+        timed(run_sub)  # warm the (already cached) shape + params transfer
+        _, sub_warm = timed(run_sub)
+        per_bucket.append({
+            "scenarios": len(bucket.scenario_ids),
+            "pad_legs": sub.pad_legs,
+            "pad_procs": sub.pad_procs,
+            "pad_links": sub.pad_links,
+            "tick_bound": int(sub.max_ticks.max()),
+            "warm_s": round(sub_warm, 4),
+            "scenarios_per_sec": round(len(bucket.scenario_ids) / sub_warm, 2),
+        })
 
     # ---- a FRESH fleet: the steady-state cost of scenario diversity -------
-    # every new fleet re-pays the loop's per-shape traces; the bank reuses
-    # its single padded trace
+    # every new fleet re-pays the loop's per-shape traces; the bucketed bank
+    # reuses every per-bucket-shape trace
     specs2 = [
         SimSpec.from_table(t, max_ticks=int(bank2.max_ticks[i]))
         for i, t in enumerate(bank2.tables)
     ]
     params2_i = [make_params(t) for t in bank2.tables]
-    t0 = time.time()
-    out = [
+    _, loop_fresh = timed(lambda: [
         simulate_batch(specs2[i], params2_i[i], keys[i], leap=args.leap).ticks
         for i in range(n)
-    ]
-    jax.block_until_ready(out)
-    loop_fresh = time.time() - t0
+    ])
     bparams2 = make_bank_params(bank2)
-    t0 = time.time()
-    jax.block_until_ready(simulate_bank(bank2, bparams2, keys, leap=args.leap))
-    bank_fresh = time.time() - t0
-    fresh_retraces = bank_trace_count() - traces0 - bank_traces
+    with count_bank_traces() as fresh_traces:
+        _, bank_fresh = timed(
+            lambda: simulate_bank(bank2, bparams2, keys, leap=args.leap)
+        )
+    fresh_retraces = fresh_traces.count
 
     # simulated work: sum over (scenario, replica) of real legs x ticks run
     legs = np.asarray(bank.n_legs, np.float64)
@@ -130,6 +173,7 @@ def main() -> None:
     report = {
         "n_scenarios": n,
         "n_replicas": r,
+        "n_buckets": len(bank.buckets),
         "pad_legs": bank.pad_legs,
         "pad_procs": bank.pad_procs,
         "pad_links": bank.pad_links,
@@ -139,6 +183,10 @@ def main() -> None:
         "loop_warm_s": round(loop_warm, 3),
         "bank_cold_s": round(bank_cold, 3),
         "bank_warm_s": round(bank_warm, 3),
+        "vmap_mono_warm_s": round(vmap_mono_warm, 3),
+        "banked_mono_warm_s": round(banked_mono_warm, 3),
+        "banked_vs_vmap_speedup": round(vmap_mono_warm / banked_mono_warm, 2),
+        "per_bucket_warm": per_bucket,
         "scenarios_per_sec_loop_cold": round(n / loop_cold, 2),
         "scenarios_per_sec_bank_cold": round(n / bank_cold, 2),
         "scenarios_per_sec_loop_warm": round(n / loop_warm, 2),
@@ -155,8 +203,22 @@ def main() -> None:
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
     print(json.dumps(report, indent=2))
-    assert bank_traces == 1, f"bank retraced {bank_traces} times"
-    assert fresh_retraces == 0, "fresh fleet must reuse the bank trace"
+    # identically-shaped buckets share one jit trace, so the cold trace count
+    # equals the number of *distinct* bucket shapes, not the bucket count
+    distinct_shapes = len({
+        (len(b.scenario_ids), b.bank.pad_legs, b.bank.pad_procs, b.bank.pad_links)
+        for b in bank.buckets
+    })
+    assert bank_traces == distinct_shapes, (
+        f"bucketed bank traced {bank_traces} times for "
+        f"{distinct_shapes} distinct bucket shapes"
+    )
+    assert fresh_retraces == 0, "fresh fleet must reuse every bucket trace"
+    if report["speedup_warm"] < 1.0:
+        print(
+            f"WARNING: warm bucketed bank ({bank_warm:.3f}s) still trails the "
+            f"cached per-scenario loop ({loop_warm:.3f}s)", file=sys.stderr,
+        )
 
 
 if __name__ == "__main__":

@@ -1,3 +1,14 @@
 """repro: GDAPS-JAX — data-grid access-profile simulation & calibration."""
 
+import jax
+
+# Cross-layout RNG contract: the banked engine draws per-(scenario, replica)
+# background noise with the *padded* link count of whatever (sub-)bank a
+# scenario runs in, so stochastic results are only reproducible across
+# layouts (per-scenario vs monolithic vs bucketed, any pad floors) when key
+# streams are prefix-stable across draw shapes. Partitionable threefry
+# guarantees that; the legacy mode does not (it is also the default in
+# newer jax releases — this pins the behavior on older ones).
+jax.config.update("jax_threefry_partitionable", True)
+
 __version__ = "0.1.0"

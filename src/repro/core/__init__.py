@@ -10,11 +10,17 @@ Architecture (compile -> bank -> engine -> consumers):
    dense :class:`~repro.core.workload.LegTable`;
    ``workload.compile_bank`` pads and stacks many heterogeneous
    ``(Grid, Campaign)`` pairs into a :class:`~repro.core.workload.ScenarioBank`
-   with semantically-inert padding and a per-scenario ``max_ticks`` mask.
+   with semantically-inert padding and a per-scenario ``max_ticks`` mask —
+   or, with ``n_buckets > 1``, a :class:`~repro.core.workload.BucketedBank`
+   of max_ticks-homogeneous sub-banks (stable scenario -> (bucket, slot)
+   map) so warm throughput is not gated by the slowest scenario.
 3. **Engine** — :mod:`engine` executes tables (``simulate`` /
-   ``simulate_batch``) and banks (``simulate_bank``: one jit trace per padded
-   shape, vmapped over (scenario, replica), sharded over the device mesh)
-   via the fair-share tick kernels in :mod:`repro.kernels`;
+   ``simulate_batch``) and banks (``simulate_bank``: one jit trace per
+   (sub-)bank padded shape, sharded over the device mesh; the ``"banked"``
+   lowering carries ``[S, R, ...]`` state through ``ops.grid_tick_bank`` —
+   the bank-tiled TPU kernel, picked on TPU by the default ``"auto"`` —
+   with the vmap-of-``simulate`` program as the ``"vmap"`` fallback) via
+   the fair-share tick kernels in :mod:`repro.kernels`;
    :mod:`refsim` is the loop-based oracle.
 4. **Consumers** — :mod:`calibration` (likelihood-free inference over theta
    *and* scenario variants), :mod:`scheduler` (access-profile optimization;

@@ -30,7 +30,6 @@ from repro.core.engine import (
     SimParams,
     SimResult,
     SimSpec,
-    bank_spec,
     simulate,
     simulate_bank,
 )
@@ -162,8 +161,12 @@ def _eq1_coefficients(res: SimResult) -> jax.Array:
     observations of one simulation (padded bank legs carry ``profile=-1``
     and are excluded by the profile filter)."""
     ds = observations(res, ProfileTag.REMOTE)
+    # unfinished legs have no defined duration: drop them from the fit
+    # explicitly (ds.valid already excludes ~done, but the zero weight is
+    # the contract this regression relies on — keep it visible here)
+    valid = ds.valid * res.done.astype(ds.valid.dtype)
     return fit_eq1(
-        ds.transfer_time, ds.size_mb, ds.conth_mb, ds.conpr_mb, ds.valid
+        ds.transfer_time, ds.size_mb, ds.conth_mb, ds.conpr_mb, valid
     ).coef
 
 
@@ -265,7 +268,6 @@ def presimulate_bank(
     Returns ``(theta [n, 3], x_sim [n, 3], scenario_id [n] i32)`` with
     ``n = bank.n_scenarios * n_per_scenario``, scenario-major.
     """
-    spec = bank_spec(bank)
     n_scn = bank.n_scenarios
     pid = bank.protocol_names.index(protocol)
     mask = jnp.asarray(bank.protocol_id == pid)  # [N, T]
@@ -287,7 +289,9 @@ def presimulate_bank(
             bg_mu=thetas[..., 1:2] * link_valid[:, None, :],
             bg_sigma=thetas[..., 2:3] * link_valid[:, None, :],
         )
-        res = simulate_bank(spec, params, keys, backend=backend, leap=leap)
+        # pass the bank itself (not a pre-extracted monolithic spec): a
+        # BucketedBank then runs each warm chunk through its sub-bank traces
+        res = simulate_bank(bank, params, keys, backend=backend, leap=leap)
         flat = jax.tree.map(
             lambda a: a.reshape((n_scn * batch,) + a.shape[2:]), res
         )

@@ -44,7 +44,10 @@ def observations(
 
     ``profile`` filters legs by :class:`ProfileTag`; ``None`` keeps all legs.
     The mask convention keeps shapes static (jit/vmap-friendly) — downstream
-    regressions consume the mask as observation weights.
+    regressions consume the mask as observation weights. Legs that never
+    finished (``~done``) are always dropped: they have no defined transfer
+    time (the engine reports 0 for them), so they must never enter a
+    duration regression.
     """
     valid = res.done
     if profile is not None:

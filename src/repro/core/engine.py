@@ -13,15 +13,17 @@ Semantics are identical to an event-driven execution at 1-tick resolution;
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
+import os
 from typing import NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.workload import LegTable, ScenarioBank
+from repro.core.workload import BucketedBank, LegTable, PAD_PROFILE, ScenarioBank
 from repro.kernels import ops
 
 __all__ = [
@@ -34,6 +36,8 @@ __all__ = [
     "make_bank_params",
     "simulate_bank",
     "bank_trace_count",
+    "reset_bank_trace_count",
+    "count_bank_traces",
 ]
 
 
@@ -270,10 +274,13 @@ def simulate(
     """Run one stochastic simulation of the campaign.
 
     Returns per-leg observations; legs that never finish within
-    ``spec.max_ticks`` have ``done=False`` and an undefined transfer time.
-    ``leap=True`` enables the exact event-leap acceleration (identical
-    results for deterministic background loads; statistically equivalent —
-    same per-event sampling — for stochastic ones).
+    ``spec.max_ticks`` have ``done=False`` and ``transfer_time=0`` (their
+    end tick is undefined, so the duration is masked out rather than
+    reported as the garbage ``-t_start`` — consumers must filter on
+    ``done`` for duration statistics). ``leap=True`` enables the exact
+    event-leap acceleration (identical results for deterministic background
+    loads; statistically equivalent — same per-event sampling — for
+    stochastic ones).
     """
     n = spec.n_legs
     born_done = jnp.zeros((n,), bool)
@@ -305,7 +312,11 @@ def simulate(
 
     final = jax.lax.while_loop(cond, body, init)
     return SimResult(
-        transfer_time=(final.t_end - final.t_start).astype(jnp.float32),
+        # unfinished legs have t_end frozen at 0 while t_start may be > 0:
+        # mask them to 0 instead of emitting a negative duration
+        transfer_time=jnp.where(
+            final.done, (final.t_end - final.t_start).astype(jnp.float32), 0.0
+        ),
         size_mb=spec.size_mb,
         conth_mb=final.conth,
         conpr_mb=final.conpr,
@@ -367,8 +378,68 @@ def bank_trace_count() -> int:
     return _bank_traces
 
 
+def reset_bank_trace_count(*, clear_caches: bool = True) -> None:
+    """Zero the banked-engine trace counter.
+
+    The counter is process-global and only grows, which makes absolute
+    trace-count assertions order-dependent (a shape traced by an earlier
+    caller is cached and silently costs zero). ``clear_caches=True``
+    (default) also drops the jit caches of both banked lowerings, so the
+    next ``simulate_bank`` call re-traces no matter what ran before — the
+    order-independent fixture for tests and benchmarks.
+    """
+    global _bank_traces
+    _bank_traces = 0
+    if clear_caches:
+        _simulate_bank.clear_cache()
+        _simulate_bank_banked.clear_cache()
+        _simulate_bank_bucketed_impl.clear_cache()
+
+
+class _TraceDelta:
+    """Live view of banked-engine traces since the scope was entered."""
+
+    def __init__(self) -> None:
+        self._start = _bank_traces
+
+    @property
+    def count(self) -> int:
+        return _bank_traces - self._start
+
+
+@contextlib.contextmanager
+def count_bank_traces():
+    """Context manager counting banked-engine (re)traces inside the block::
+
+        with count_bank_traces() as traces:
+            simulate_bank(bank, params, keys)
+        assert traces.count == expected
+
+    Relative counting makes assertions robust to whatever earlier callers
+    already traced (pair with :func:`reset_bank_trace_count` when the
+    assertion must also be immune to cached shapes).
+    """
+    yield _TraceDelta()
+
+
 def bank_spec(bank: ScenarioBank) -> SimSpec:
-    """The stacked ``[N, ...]`` SimSpec view of a compiled bank."""
+    """The stacked ``[N, ...]`` SimSpec view of a compiled bank.
+
+    The device arrays are memoized on the bank instance (compiled banks are
+    immutable by contract), so repeated warm ``simulate_bank`` calls don't
+    re-upload the spec every dispatch. When first called under a jit trace
+    the arrays are tracers — those must not leak into the cache.
+    """
+    cached = getattr(bank, "_spec_cache", None)
+    if cached is not None:
+        return cached
+    spec = _bank_spec_uncached(bank)
+    if not isinstance(spec.size_mb, jax.core.Tracer):
+        bank._spec_cache = spec
+    return spec
+
+
+def _bank_spec_uncached(bank: ScenarioBank) -> SimSpec:
     return SimSpec(
         size_mb=jnp.asarray(bank.size_mb),
         release=jnp.asarray(bank.release),
@@ -447,6 +518,372 @@ def _simulate_bank(
     )(spec, params, keys)
 
 
+# ---------------------------------------------------------------------------
+# manual banked lowering: one while loop over [S, R, ...] state driving
+# ops.grid_tick_bank directly (the bank-tiled kernel on TPU)
+# ---------------------------------------------------------------------------
+
+
+def _rep3(field: Optional[jax.Array]) -> Optional[jax.Array]:
+    """Lift a bank-wide ``[S, X]`` params field to broadcast against
+    per-(scenario, replica) ``[S, R, X]`` state (no-op if already 3-D)."""
+    if field is None or field.ndim == 3:
+        return field
+    return field[:, None, :]
+
+
+def _bank_dep_done(dep: jax.Array, done: jax.Array) -> jax.Array:
+    """``done[s, r, dep[s, t]]`` with -1 mapping to True: [S, R, T]."""
+    idx = jnp.broadcast_to(jnp.maximum(dep, 0)[:, None, :], done.shape)
+    gathered = jnp.take_along_axis(done, idx, axis=2)
+    return jnp.where(dep[:, None, :] >= 0, gathered, True)
+
+
+def _bank_bg_resample(
+    spec: SimSpec, params: SimParams, c: _Carry
+) -> Tuple[jax.Array, jax.Array]:
+    """Split every (scenario, replica) key and resample background loads due
+    at this tick — element-for-element the same draws as the per-scenario
+    body under vmap. Returns ``(bg [S, R, L], key [S, R, 2])``."""
+    n_links = c.bg.shape[-1]
+    pair = jax.vmap(jax.vmap(jax.random.split))(c.key)  # [S, R, 2, 2]
+    key, sub = pair[:, :, 0], pair[:, :, 1]
+    noise = jax.vmap(jax.vmap(lambda k: jax.random.normal(k, (n_links,))))(sub)
+    fresh = jnp.maximum(
+        _rep3(params.bg_mu) + _rep3(params.bg_sigma) * noise, 0.0
+    )
+    due = c.t[:, :, None] % spec.bg_period[:, None, :] == 0
+    return jnp.where(due, fresh, c.bg), key
+
+
+def _bank_tick_body(
+    spec: SimSpec, params: SimParams, backend: Optional[str], c: _Carry
+) -> _Carry:
+    """One tick of the whole bank: [S, R, ...] state, per-scenario spec rows
+    — the manual analogue of vmap(vmap(_tick_body))."""
+    t = c.t  # [S, R]
+    bg, key = _bank_bg_resample(spec, params, c)
+
+    dep_done = _bank_dep_done(spec.dep, c.done)
+    active = (~c.done) & (spec.release[:, None, :] <= t[:, :, None]) & dep_done
+    a = active.astype(jnp.float32)
+
+    xfer, proc_xfer, link_xfer = ops.grid_tick_bank(
+        a,
+        c.remaining,
+        params.keep_frac,
+        bg,
+        spec.bandwidth,
+        spec.leg_proc,
+        spec.proc_link,
+        spec.leg_link,
+        backend=backend,
+    )
+
+    remaining = c.remaining - xfer
+    newly_done = active & (remaining <= 1e-6)
+    done = c.done | newly_done
+
+    own_proc_xfer = jnp.einsum("stp,srp->srt", spec.leg_proc, proc_xfer)
+    own_link_xfer = jnp.einsum("stl,srl->srt", spec.leg_link, link_xfer)
+    conth = c.conth + a * (own_proc_xfer - xfer)
+    conpr = c.conpr + a * (own_link_xfer - own_proc_xfer)
+
+    t3 = t[:, :, None]
+    t_start = jnp.where(active & (~c.started), t3, c.t_start)
+    started = c.started | active
+    t_end = jnp.where(newly_done, t3 + 1, c.t_end)
+
+    return _Carry(
+        t=t + 1,
+        remaining=remaining,
+        done=done,
+        started=started,
+        t_start=t_start,
+        t_end=t_end,
+        conth=conth,
+        conpr=conpr,
+        bg=bg,
+        key=key,
+    )
+
+
+def _bank_leap_body(
+    spec: SimSpec, params: SimParams, backend: Optional[str], c: _Carry
+) -> _Carry:
+    """Event-leap window for the whole bank: each (scenario, replica) leaps
+    by its own ``dt`` — the manual analogue of vmap(vmap(_leap_body))."""
+    t = c.t  # [S, R]
+    bg, key = _bank_bg_resample(spec, params, c)
+
+    dep_done = _bank_dep_done(spec.dep, c.done)
+    active = (~c.done) & (spec.release[:, None, :] <= t[:, :, None]) & dep_done
+    a = active.astype(jnp.float32)
+
+    inf_rem = jnp.full_like(c.remaining, jnp.inf)
+    rate, proc_rate, link_rate = ops.grid_tick_bank(
+        a, inf_rem, params.keep_frac, bg, spec.bandwidth,
+        spec.leg_proc, spec.proc_link, spec.leg_link, backend=backend,
+    )
+
+    ttc = jnp.where(
+        active & (rate > 0), jnp.ceil(c.remaining / jnp.maximum(rate, 1e-30)),
+        jnp.inf,
+    )
+    pending = (~c.done) & (spec.release[:, None, :] > t[:, :, None])
+    t_rel = jnp.where(
+        pending,
+        (spec.release[:, None, :] - t[:, :, None]).astype(jnp.float32),
+        jnp.inf,
+    )
+    t_bg = (
+        spec.bg_period[:, None, :] - t[:, :, None] % spec.bg_period[:, None, :]
+    ).astype(jnp.float32)  # >= 1
+    dt = jnp.minimum(
+        jnp.minimum(jnp.min(ttc, axis=-1), jnp.min(t_rel, axis=-1)),
+        jnp.min(t_bg, axis=-1),
+    )  # [S, R]
+    dt = jnp.where(jnp.isfinite(dt), jnp.maximum(dt, 1.0), 1.0)
+    dt3 = dt[:, :, None]
+
+    rem_mid = c.remaining - a * rate * (dt3 - 1.0)
+    xfer_f = jnp.minimum(rem_mid, rate) * a
+    proc_xfer_f = jnp.einsum("srt,stp->srp", xfer_f, spec.leg_proc)
+    link_xfer_f = jnp.einsum("srt,stl->srl", xfer_f, spec.leg_link)
+    remaining = rem_mid - xfer_f
+
+    own_proc_rate = jnp.einsum("stp,srp->srt", spec.leg_proc, proc_rate)
+    own_link_rate = jnp.einsum("stl,srl->srt", spec.leg_link, link_rate)
+    own_proc_f = jnp.einsum("stp,srp->srt", spec.leg_proc, proc_xfer_f)
+    own_link_f = jnp.einsum("stl,srl->srt", spec.leg_link, link_xfer_f)
+    conth = c.conth + a * ((own_proc_rate - rate) * (dt3 - 1.0)
+                           + (own_proc_f - xfer_f))
+    conpr = c.conpr + a * ((own_link_rate - own_proc_rate) * (dt3 - 1.0)
+                           + (own_link_f - own_proc_f))
+
+    newly_done = active & (remaining <= 1e-6)
+    done = c.done | newly_done
+    t3 = t[:, :, None]
+    t_start = jnp.where(active & (~c.started), t3, c.t_start)
+    started = c.started | active
+    t_end = jnp.where(newly_done, t3 + dt3.astype(jnp.int32), c.t_end)
+
+    return _Carry(
+        t=t + dt.astype(jnp.int32),
+        remaining=remaining,
+        done=done,
+        started=started,
+        t_start=t_start,
+        t_end=t_end,
+        conth=conth,
+        conpr=conpr,
+        bg=bg,
+        key=key,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "leap"))
+def _simulate_bank_banked(
+    spec: SimSpec,  # stacked [S, ...]
+    params: SimParams,  # fields [S, ...] or [S, R, ...]
+    keys: jax.Array,  # [S, R, 2]
+    *,
+    backend: Optional[str],
+    leap: bool,
+) -> SimResult:
+    """Manual banked lowering: the tick/leap loop carries ``[S, R, ...]``
+    state and calls :func:`repro.kernels.ops.grid_tick_bank` directly, so the
+    TPU hot path hits the bank-tiled kernel (per-scenario incidences resident
+    in VMEM) instead of the per-sim kernel under a double vmap.
+
+    Semantics are element-for-element those of :func:`_simulate_bank`: each
+    (scenario, replica) advances under its own condition (its carry freezes
+    once it finishes or hits its scenario's ``max_ticks``), and the RNG
+    splits follow the per-scenario body exactly.
+    """
+    global _bank_traces
+    _bank_traces += 1  # executes at trace time only
+
+    S, T = spec.size_mb.shape
+    L = spec.bandwidth.shape[-1]
+    R = keys.shape[1]
+
+    born_done = jnp.zeros((S, R, T), bool)
+    if params.enabled is not None:
+        born_done |= ~_rep3(params.enabled).astype(bool)
+    if spec.leg_valid is not None:
+        born_done |= ~spec.leg_valid[:, None, :].astype(bool)
+
+    init = _Carry(
+        t=jnp.zeros((S, R), jnp.int32),
+        remaining=jnp.broadcast_to(spec.size_mb[:, None, :], (S, R, T)),
+        done=born_done,
+        started=jnp.zeros((S, R, T), bool),
+        t_start=jnp.zeros((S, R, T), jnp.int32),
+        t_end=jnp.zeros((S, R, T), jnp.int32),
+        conth=jnp.zeros((S, R, T), jnp.float32),
+        conpr=jnp.zeros((S, R, T), jnp.float32),
+        bg=jnp.zeros((S, R, L), jnp.float32),
+        key=keys,
+    )
+
+    body_fn = _bank_leap_body if leap else _bank_tick_body
+
+    def live(c: _Carry) -> jax.Array:  # [S, R]
+        return (c.t < spec.max_ticks[:, None]) & ~jnp.all(c.done, axis=-1)
+
+    def cond(c: _Carry) -> jax.Array:
+        return jnp.any(live(c))
+
+    def body(c: _Carry) -> _Carry:
+        # matching vmap-of-while semantics: finished (scenario, replica)
+        # elements keep their carry (including the RNG key) frozen
+        alive = live(c)
+        new = body_fn(spec, params, backend, c)
+        sel = lambda n, o: jnp.where(
+            alive.reshape(alive.shape + (1,) * (n.ndim - 2)), n, o
+        )
+        return jax.tree.map(sel, new, c)
+
+    final = jax.lax.while_loop(cond, body, init)
+    return SimResult(
+        transfer_time=jnp.where(
+            final.done, (final.t_end - final.t_start).astype(jnp.float32), 0.0
+        ),
+        size_mb=jnp.broadcast_to(spec.size_mb[:, None, :], (S, R, T)),
+        conth_mb=final.conth,
+        conpr_mb=final.conpr,
+        done=final.done,
+        ticks=final.t,
+        profile=jnp.broadcast_to(spec.profile[:, None, :], (S, R, T)),
+        start_tick=final.t_start.astype(jnp.float32),
+    )
+
+
+_VALID_LOWERINGS = ("auto", "banked", "vmap")
+
+
+def _resolve_lowering(lowering: Optional[str]) -> str:
+    lowering = lowering or os.environ.get("REPRO_BANK_LOWERING", "auto")
+    if lowering not in _VALID_LOWERINGS:
+        raise ValueError(
+            f"bank lowering must be one of {_VALID_LOWERINGS}: {lowering!r}"
+        )
+    if lowering == "auto":
+        # the manual banked body exists for the bank-tiled TPU kernel
+        # (per-scenario incidences resident in VMEM); on CPU/GPU the
+        # vmap-of-simulate program lowers to the same math with less
+        # batched-gather overhead, so auto keeps it there
+        return "banked" if ops._platform() == "tpu" else "vmap"
+    return lowering
+
+
+def _dispatch_bank(
+    spec: SimSpec,
+    params: SimParams,
+    keys: jax.Array,
+    *,
+    backend: Optional[str],
+    leap: bool,
+    lowering: Optional[str],
+) -> SimResult:
+    if keys.ndim != 3:
+        raise ValueError(f"keys must be [n_scenarios, n_replicas, 2]: {keys.shape}")
+    if _resolve_lowering(lowering) == "vmap":
+        return _simulate_bank(spec, params, keys, backend=backend, leap=leap)
+    return _simulate_bank_banked(spec, params, keys, backend=backend, leap=leap)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "bucket_legs", "bucket_links", "pad_legs", "backend", "leap", "lowering",
+    ),
+)
+def _simulate_bank_bucketed_impl(
+    specs: Tuple[SimSpec, ...],  # per-bucket stacked specs
+    params: SimParams,  # bank-wide fields in original scenario order
+    keys: jax.Array,  # [N, R, 2]
+    idx: Tuple[jax.Array, ...],  # per-bucket original scenario ids
+    *,
+    bucket_legs: Tuple[int, ...],
+    bucket_links: Tuple[int, ...],
+    pad_legs: int,
+    backend: Optional[str],
+    leap: bool,
+    lowering: str,
+) -> SimResult:
+    """One fused program over every sub-bank: gather the bucket's params
+    rows, simulate, scatter into the caller's ``[N, R]`` order. Fusing keeps
+    warm dispatch cost at a single call (the eager per-bucket slice/scatter
+    ops would otherwise dominate the warm wall on small fleets); each inner
+    banked program still (re)uses its own per-shape trace/counter."""
+    n, r = keys.shape[:2]
+    sim = _simulate_bank if lowering == "vmap" else _simulate_bank_banked
+    out = SimResult(
+        transfer_time=jnp.zeros((n, r, pad_legs), jnp.float32),
+        size_mb=jnp.zeros((n, r, pad_legs), jnp.float32),
+        conth_mb=jnp.zeros((n, r, pad_legs), jnp.float32),
+        conpr_mb=jnp.zeros((n, r, pad_legs), jnp.float32),
+        done=jnp.ones((n, r, pad_legs), bool),  # padding is born done
+        ticks=jnp.zeros((n, r), jnp.int32),
+        profile=jnp.full((n, r, pad_legs), PAD_PROFILE, jnp.int32),
+        start_tick=jnp.zeros((n, r, pad_legs), jnp.float32),
+    )
+    for spec_b, ids, t_b, l_b in zip(specs, idx, bucket_legs, bucket_links):
+        legs = lambda f: None if f is None else f[ids][..., :t_b]
+        links = lambda f: None if f is None else f[ids][..., :l_b]
+        sub_params = SimParams(
+            keep_frac=legs(params.keep_frac),
+            bg_mu=links(params.bg_mu),
+            bg_sigma=links(params.bg_sigma),
+            enabled=legs(params.enabled),
+        )
+        res = sim(spec_b, sub_params, keys[ids], backend=backend, leap=leap)
+        out = SimResult(
+            transfer_time=out.transfer_time.at[ids, :, :t_b].set(res.transfer_time),
+            size_mb=out.size_mb.at[ids, :, :t_b].set(res.size_mb),
+            conth_mb=out.conth_mb.at[ids, :, :t_b].set(res.conth_mb),
+            conpr_mb=out.conpr_mb.at[ids, :, :t_b].set(res.conpr_mb),
+            done=out.done.at[ids, :, :t_b].set(res.done),
+            ticks=out.ticks.at[ids].set(res.ticks),
+            profile=out.profile.at[ids, :, :t_b].set(res.profile),
+            start_tick=out.start_tick.at[ids, :, :t_b].set(res.start_tick),
+        )
+    return out
+
+
+def _simulate_bank_bucketed(
+    bank: BucketedBank,
+    params: SimParams,
+    keys: jax.Array,  # [N, R, 2]
+    *,
+    backend: Optional[str],
+    leap: bool,
+    lowering: Optional[str],
+) -> SimResult:
+    """Run each max_ticks-bucketed sub-bank under its own cached trace and
+    scatter the per-bucket results back into the caller's ``[N, R]`` order
+    (global pads; the tail beyond a bucket's pad reports inert padding)."""
+    if keys.ndim != 3:
+        raise ValueError(f"keys must be [n_scenarios, n_replicas, 2]: {keys.shape}")
+    specs = tuple(bank_spec(b.bank) for b in bank.buckets)
+    idx = getattr(bank, "_idx_cache", None)
+    if idx is None:
+        idx = tuple(jnp.asarray(b.scenario_ids) for b in bank.buckets)
+        if not any(isinstance(i, jax.core.Tracer) for i in idx):
+            bank._idx_cache = idx
+    return _simulate_bank_bucketed_impl(
+        specs, params, keys, idx,
+        bucket_legs=tuple(b.bank.pad_legs for b in bank.buckets),
+        bucket_links=tuple(b.bank.pad_links for b in bank.buckets),
+        pad_legs=bank.pad_legs,
+        backend=backend,
+        leap=leap,
+        lowering=_resolve_lowering(lowering),
+    )
+
+
 def simulate_bank(
     bank: Union[ScenarioBank, SimSpec],
     params: SimParams,
@@ -454,6 +891,8 @@ def simulate_bank(
     *,
     backend: Optional[str] = None,
     leap: bool = False,
+    lowering: Optional[str] = None,
+    bucketed: bool = True,
 ) -> SimResult:
     """Simulate every scenario of the bank x ``R`` stochastic replicas.
 
@@ -463,15 +902,34 @@ def simulate_bank(
     with ``bank.leg_valid`` downstream). ``params`` fields may be bank-wide
     (``[N, ...]``) or per-replica (``[N, R, ...]``).
 
+    ``lowering`` picks the jit program: ``"banked"`` runs the manual
+    ``[S, R, ...]`` tick loop on ``ops.grid_tick_bank`` — the bank-tiled TPU
+    kernel — while ``"vmap"`` keeps the original vmap-of-``simulate``
+    program. ``"auto"`` (default; override with ``REPRO_BANK_LOWERING``)
+    resolves to ``"banked"`` on TPU and ``"vmap"`` elsewhere. Both are
+    element-for-element equivalent (see ``tests/test_bank_buckets.py``).
+
+    A :class:`~repro.core.workload.BucketedBank` (from ``compile_bank(...,
+    n_buckets=k)``) runs one trace per distinct sub-bank shape, each
+    stopping at its own bucket's tick bound, and the results are scattered
+    back into the
+    caller's original ``[N, R]`` scenario order — same contract, warm
+    throughput no longer gated by the slowest scenario of the whole fleet.
+    Pass ``bucketed=False`` to force the monolithic single-trace path.
+
     The flattened ``N*R`` batch is embarrassingly parallel: under a device
     mesh, shard ``keys`` (and any per-replica params) over the scenario axis
     and XLA partitions the whole tick program with zero collectives (see
     ``tests/test_bank.py`` and ``benchmarks/bank_throughput.py``).
     """
+    if bucketed and isinstance(bank, BucketedBank):
+        return _simulate_bank_bucketed(
+            bank, params, keys, backend=backend, leap=leap, lowering=lowering
+        )
     spec = bank_spec(bank) if isinstance(bank, ScenarioBank) else bank
-    if keys.ndim != 3:
-        raise ValueError(f"keys must be [n_scenarios, n_replicas, 2]: {keys.shape}")
-    return _simulate_bank(spec, params, keys, backend=backend, leap=leap)
+    return _dispatch_bank(
+        spec, params, keys, backend=backend, leap=leap, lowering=lowering
+    )
 
 
 def make_params(

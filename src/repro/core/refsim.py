@@ -124,7 +124,9 @@ def reference_simulate(
         t += 1
 
     return {
-        "transfer_time": (t_end - t_start).astype(np.float64),
+        # same masking contract as the vectorized engine: legs that never
+        # finish report 0, not the meaningless t_end(=0) - t_start
+        "transfer_time": np.where(done, t_end - t_start, 0).astype(np.float64),
         "size_mb": table.size_mb.astype(np.float64),
         "conth_mb": conth,
         "conpr_mb": conpr,

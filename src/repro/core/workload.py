@@ -33,6 +33,8 @@ __all__ = [
     "Campaign",
     "LegTable",
     "ScenarioBank",
+    "BankBucket",
+    "BucketedBank",
     "compile_campaign",
     "compile_bank",
     "wlcg_production_workload",
@@ -366,45 +368,55 @@ class ScenarioBank:
         return self.tables[i]
 
 
-def compile_bank(
-    pairs: Sequence[Tuple[Grid, Campaign]],
-    *,
-    max_ticks=None,
-    pad_legs: Optional[int] = None,
-    pad_procs: Optional[int] = None,
-    pad_links: Optional[int] = None,
-    pad_multiple: int = 1,
-) -> ScenarioBank:
-    """Compile heterogeneous ``(grid, campaign)`` pairs into one padded bank.
+@dataclasses.dataclass
+class BankBucket:
+    """One max_ticks/size-homogeneous sub-bank of a :class:`BucketedBank`.
 
-    ``max_ticks`` may be ``None`` (per-scenario safe upper bound), an int
-    (uniform cap), or a per-scenario sequence. ``pad_*`` set explicit floors
-    for the padded axes (so differently-sized banks can share a jit trace);
-    ``pad_multiple`` rounds every padded axis up (e.g. 8 or 128 for
-    lane-friendly kernel operands).
+    ``scenario_ids`` are the *original* bank indices (ascending), so slot
+    ``s`` of ``bank`` is scenario ``scenario_ids[s]`` of the parent.
     """
-    if not pairs:
-        raise ValueError("compile_bank needs at least one (grid, campaign)")
-    tables = [compile_campaign(g, c) for g, c in pairs]
-    names = [c.name for _, c in pairs]
+
+    scenario_ids: np.ndarray  # [S_b] i32, ascending original indices
+    bank: ScenarioBank  # sub-bank with its own (smaller) pads
+
+
+@dataclasses.dataclass
+class BucketedBank(ScenarioBank):
+    """A :class:`ScenarioBank` whose scenarios are additionally grouped into
+    ``max_ticks``-homogeneous sub-banks (see :func:`compile_bank`).
+
+    The inherited stacked arrays keep the **original scenario order** and the
+    global pads, so every params builder (``make_bank_params``, the bank theta
+    mappers) and the monolithic engine path work unchanged. The engine's
+    bucketed path runs each ``buckets[b].bank`` under its own cached trace and
+    scatters results back into the caller's ``[N, R]`` order via the index
+    map: scenario ``i`` lives at ``(bucket_of[i], slot_of[i])``.
+    """
+
+    bucket_of: np.ndarray  # [N] i32 bucket index per original scenario
+    slot_of: np.ndarray  # [N] i32 slot within the bucket
+    buckets: List[BankBucket]
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.buckets)
+
+
+def _stack_tables(
+    tables: Sequence[LegTable],
+    names: Sequence[str],
+    ticks: Sequence[int],
+    T: int,
+    P: int,
+    L: int,
+    proto_names: List[str],
+) -> ScenarioBank:
+    """Embed compiled leg tables into one ``[N, ...]`` padded stack (the
+    shared worker behind the monolithic bank and each bucket's sub-bank;
+    ``proto_names`` is the unified namespace protocol ids are remapped onto).
+    """
     n = len(tables)
-
-    # pad floors are floors: content larger than a floor grows the pad
-    T = _round_up(max(max(t.n_legs for t in tables), pad_legs or 1), pad_multiple)
-    P = _round_up(max(max(t.n_procs for t in tables), pad_procs or 1), pad_multiple)
-    L = _round_up(max(max(t.n_links for t in tables), pad_links or 1), pad_multiple)
-
-    proto_names = sorted(set().union(*(t.protocol_names for t in tables)))
     proto_index = {p: i for i, p in enumerate(proto_names)}
-
-    if max_ticks is None:
-        ticks = [t.max_ticks_upper_bound() for t in tables]
-    elif np.ndim(max_ticks) == 0:
-        ticks = [int(max_ticks)] * n
-    else:
-        if len(max_ticks) != n:
-            raise ValueError(f"max_ticks: expected {n} entries, got {len(max_ticks)}")
-        ticks = [int(m) for m in max_ticks]
 
     size_mb = np.zeros((n, T), np.float32)
     release = np.zeros((n, T), np.int32)
@@ -462,8 +474,125 @@ def compile_bank(
         n_procs=np.array([t.n_procs for t in tables], np.int32),
         n_links=np.array([t.n_links for t in tables], np.int32),
         protocol_names=proto_names,
-        names=names,
-        tables=tables,
+        names=list(names),
+        tables=list(tables),
+    )
+
+
+def compile_bank(
+    pairs: Sequence[Tuple[Grid, Campaign]],
+    *,
+    max_ticks=None,
+    pad_legs: Optional[int] = None,
+    pad_procs: Optional[int] = None,
+    pad_links: Optional[int] = None,
+    pad_multiple: int = 1,
+    n_buckets: int = 1,
+    bucket_pad_floors: Optional[Sequence[Tuple[int, int, int]]] = None,
+) -> ScenarioBank:
+    """Compile heterogeneous ``(grid, campaign)`` pairs into one padded bank.
+
+    ``max_ticks`` may be ``None`` (per-scenario safe upper bound), an int
+    (uniform cap), or a per-scenario sequence. ``pad_*`` set explicit floors
+    for the padded axes (so differently-sized banks can share a jit trace);
+    ``pad_multiple`` rounds every padded axis up (e.g. 8 or 128 for
+    lane-friendly kernel operands).
+
+    **Bucketing contract** (``n_buckets > 1`` returns a
+    :class:`BucketedBank`): scenarios are sorted by the key ``(resolved
+    max_ticks, max_ticks_upper_bound(), n_legs)`` and split into
+    ``n_buckets`` contiguous, near-equal-count groups, so each sub-bank
+    groups scenarios of similar simulated length and size. Each bucket is
+    padded to **its own** member maxima (optionally raised by
+    ``bucket_pad_floors[b] = (legs, procs, links)`` and rounded to
+    ``pad_multiple``), and its engine trace runs only until the bucket's own
+    slowest scenario finishes — no scenario ticks past its bucket's bound,
+    which is what closes the warm-bank throughput gap of monolithic padding.
+
+    The **scenario index map is stable**: within each bucket, scenarios keep
+    ascending original order, so ``bucket_of[i]`` / ``slot_of[i]`` are
+    reproducible for a given fleet and the engine can scatter per-bucket
+    results back into the caller's original ``[N, R]`` order. The inherited
+    stacked arrays (and therefore every params builder) always use the
+    original scenario order with the global pads; the global ``pad_*``
+    floors apply only to that monolithic view, ``bucket_pad_floors`` only to
+    the sub-banks. Two fleets bucketed with the same ``n_buckets``, equal
+    fleet size, and matching bucket pad shapes reuse each bucket's jit trace
+    (zero retraces — see ``benchmarks/bank_throughput.py``).
+    """
+    if not pairs:
+        raise ValueError("compile_bank needs at least one (grid, campaign)")
+    tables = [compile_campaign(g, c) for g, c in pairs]
+    names = [c.name for _, c in pairs]
+    n = len(tables)
+
+    # pad floors are floors: content larger than a floor grows the pad
+    T = _round_up(max(max(t.n_legs for t in tables), pad_legs or 1), pad_multiple)
+    P = _round_up(max(max(t.n_procs for t in tables), pad_procs or 1), pad_multiple)
+    L = _round_up(max(max(t.n_links for t in tables), pad_links or 1), pad_multiple)
+
+    proto_names = sorted(set().union(*(t.protocol_names for t in tables)))
+
+    if max_ticks is None:
+        ticks = [t.max_ticks_upper_bound() for t in tables]
+    elif np.ndim(max_ticks) == 0:
+        ticks = [int(max_ticks)] * n
+    else:
+        if len(max_ticks) != n:
+            raise ValueError(f"max_ticks: expected {n} entries, got {len(max_ticks)}")
+        ticks = [int(m) for m in max_ticks]
+
+    if n_buckets <= 1:
+        return _stack_tables(tables, names, ticks, T, P, L, proto_names)
+
+    if n_buckets > n:
+        raise ValueError(f"n_buckets={n_buckets} exceeds {n} scenarios")
+    if bucket_pad_floors is not None and len(bucket_pad_floors) != n_buckets:
+        raise ValueError(
+            f"bucket_pad_floors: expected {n_buckets} entries, "
+            f"got {len(bucket_pad_floors)}"
+        )
+
+    # sort by simulated length (resolved cap, then the compile-time upper
+    # bound, then leg count) and split into near-equal contiguous groups
+    bounds = np.array([t.max_ticks_upper_bound() for t in tables], np.int64)
+    legs = np.array([t.n_legs for t in tables], np.int64)
+    order = np.lexsort((legs, bounds, np.array(ticks, np.int64)))
+    groups = [g for g in np.array_split(order, n_buckets) if len(g)]
+
+    bucket_of = np.zeros(n, np.int32)
+    slot_of = np.zeros(n, np.int32)
+    buckets: List[BankBucket] = []
+    for b, group in enumerate(groups):
+        ids = np.sort(group).astype(np.int32)  # stable: ascending originals
+        bucket_of[ids] = b
+        slot_of[ids] = np.arange(len(ids), dtype=np.int32)
+        bt = [tables[i] for i in ids]
+        fl, fp, fll = (
+            bucket_pad_floors[b] if bucket_pad_floors is not None else (1, 1, 1)
+        )
+        Tb = _round_up(max(max(t.n_legs for t in bt), fl), pad_multiple)
+        Pb = _round_up(max(max(t.n_procs for t in bt), fp), pad_multiple)
+        Lb = _round_up(max(max(t.n_links for t in bt), fll), pad_multiple)
+        sub = _stack_tables(
+            bt, [names[i] for i in ids], [ticks[i] for i in ids],
+            Tb, Pb, Lb, proto_names,
+        )
+        buckets.append(BankBucket(scenario_ids=ids, bank=sub))
+
+    # the monolithic view must dominate every bucket pad (the engine slices
+    # bank-wide params down to each bucket's pads), so explicit
+    # bucket_pad_floors grow the global pads too
+    T = max(T, max(b.bank.pad_legs for b in buckets))
+    P = max(P, max(b.bank.pad_procs for b in buckets))
+    L = max(L, max(b.bank.pad_links for b in buckets))
+    mono = _stack_tables(tables, names, ticks, T, P, L, proto_names)
+
+    return BucketedBank(
+        **{f.name: getattr(mono, f.name) for f in dataclasses.fields(ScenarioBank)},
+        bucket_of=bucket_of,
+        slot_of=slot_of,
+        buckets=buckets,
     )
 
 

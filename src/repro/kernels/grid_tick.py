@@ -181,7 +181,7 @@ def _bank_tick_kernel(
     active_ref,  # [1, Rb, T]
     remaining_ref,  # [1, Rb, T]
     bg_ref,  # [1, Rb, L]
-    keep_ref,  # [1, 1, T]
+    keep_ref,  # [1, 1, T] bank-wide, or [1, Rb, T] per-replica keeps
     bw_ref,  # [1, 1, L]
     m_tp_ref,  # [1, T, P]
     m_pl_ref,  # [1, P, L]
@@ -221,7 +221,7 @@ def _bank_tick_kernel(
 def grid_tick_bank_pallas(
     active: jax.Array,  # [S, R, T]
     remaining: jax.Array,  # [S, R, T]
-    keep_frac: jax.Array,  # [S, T]
+    keep_frac: jax.Array,  # [S, T] or [S, R, T] (per-replica keeps)
     bg_load: jax.Array,  # [S, R, L]
     bandwidth: jax.Array,  # [S, L]
     leg_proc: jax.Array,  # [S, T, P]
@@ -237,6 +237,10 @@ def grid_tick_bank_pallas(
     VMEM across its replica blocks, so heterogeneous campaigns batch without
     retraces or HBM round-trips between the fused matmul stages.
 
+    ``keep_frac`` may carry a replica dim (one theta draw per replica, as the
+    calibration presimulation sweeps do); bank-wide ``[S, T]`` keeps are
+    broadcast to the replica blocks.
+
     The single-campaign padding contract applies per scenario: padded legs
     are inactive with all-zero one-hot rows, padded links have zero
     bandwidth, so padding transfers exactly nothing.
@@ -244,11 +248,18 @@ def grid_tick_bank_pallas(
     S, R, T = active.shape
     P = leg_proc.shape[2]
     L = proc_link.shape[2]
+    # bank-wide keeps stay a single [S, 1, T] row per scenario (the kernel
+    # broadcasts over the replica block); only genuinely per-replica keeps
+    # pay the [S, R, T] operand
+    per_replica_keep = keep_frac.ndim == 3
 
     active_p = _pad_to(_pad_to(active, 2, _LANE), 1, _SUBLANE)
     remaining_p = _pad_to(_pad_to(remaining, 2, _LANE), 1, _SUBLANE)
     bg_p = _pad_to(_pad_to(bg_load, 2, _LANE), 1, _SUBLANE)
-    keep_p = _pad_to(keep_frac[:, None, :], 2, _LANE)
+    if per_replica_keep:
+        keep_p = _pad_to(_pad_to(keep_frac, 2, _LANE), 1, _SUBLANE)
+    else:
+        keep_p = _pad_to(keep_frac[:, None, :], 2, _LANE)
     bw_p = _pad_to(bandwidth[:, None, :], 2, _LANE)
     m_tp = _pad_to(_pad_to(leg_proc, 1, _LANE), 2, _LANE)
     m_pl = _pad_to(_pad_to(proc_link, 1, _LANE), 2, _LANE)
@@ -260,6 +271,8 @@ def grid_tick_bank_pallas(
     active_p = _pad_to(active_p, 1, rb)
     remaining_p = _pad_to(remaining_p, 1, rb)
     bg_p = _pad_to(bg_p, 1, rb)
+    if per_replica_keep:
+        keep_p = _pad_to(keep_p, 1, rb)
     Rp = active_p.shape[1]
     grid = (S, Rp // rb)
 
@@ -278,7 +291,7 @@ def grid_tick_bank_pallas(
             rep_spec(Tp),
             rep_spec(Tp),
             rep_spec(Lp),
-            scn_spec(1, Tp),
+            rep_spec(Tp) if per_replica_keep else scn_spec(1, Tp),
             scn_spec(1, Lp),
             scn_spec(Tp, Pp),
             scn_spec(Pp, Lp),

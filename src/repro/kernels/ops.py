@@ -84,7 +84,7 @@ def grid_tick(
 def grid_tick_bank(
     active: jax.Array,  # [S, R, T]
     remaining: jax.Array,  # [S, R, T]
-    keep_frac: jax.Array,  # [S, T]
+    keep_frac: jax.Array,  # [S, T] or [S, R, T]
     bg_load: jax.Array,  # [S, R, L]
     bandwidth: jax.Array,  # [S, L]
     leg_proc: jax.Array,  # [S, T, P]
@@ -95,11 +95,51 @@ def grid_tick_bank(
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Scenario-bank fair-share tick: per-scenario incidence operands instead
     of broadcast constants (the hot path of ``engine.simulate_bank`` on TPU;
-    the XLA path broadcasts through the batched reference)."""
+    the XLA path broadcasts through the batched reference).
+
+    Ranks are validated up front: per-sim state must carry the replica dim
+    (``[S, R, ...]``) — without the check, ``[S, T]`` inputs would silently
+    mis-broadcast against the ``[S, 1, ...]``-lifted campaign operands and
+    produce garbage fair shares instead of an error. ``keep_frac`` may be
+    bank-wide ``[S, T]`` or per-replica ``[S, R, T]``.
+    """
+    if active.ndim != 3 or remaining.ndim != 3 or bg_load.ndim != 3:
+        raise ValueError(
+            "grid_tick_bank: per-sim state must be [S(cenario), R(eplica), ...] "
+            f"— got active {active.shape}, remaining {remaining.shape}, "
+            f"bg_load {bg_load.shape}; vmap/reshape a replica dim in, or use "
+            "grid_tick for unbanked state"
+        )
+    if keep_frac.ndim not in (2, 3):
+        raise ValueError(
+            f"grid_tick_bank: keep_frac must be [S, T] or [S, R, T]: "
+            f"{keep_frac.shape}"
+        )
+    if bandwidth.ndim != 2:
+        raise ValueError(
+            f"grid_tick_bank: bandwidth must be [S, L]: {bandwidth.shape}"
+        )
+    if leg_proc.ndim != 3 or proc_link.ndim != 3 or leg_link.ndim != 3:
+        raise ValueError(
+            "grid_tick_bank: incidence matrices must carry the scenario dim "
+            f"([S, T, P] / [S, P, L] / [S, T, L]) — got {leg_proc.shape}, "
+            f"{proc_link.shape}, {leg_link.shape}"
+        )
+    s = active.shape[0]
+    for name, arr in (
+        ("remaining", remaining), ("keep_frac", keep_frac), ("bg_load", bg_load),
+        ("bandwidth", bandwidth), ("leg_proc", leg_proc),
+        ("proc_link", proc_link), ("leg_link", leg_link),
+    ):
+        if arr.shape[0] != s:
+            raise ValueError(
+                f"grid_tick_bank: {name} scenario dim {arr.shape[0]} != {s}"
+            )
     b = _resolve(backend)
     if b == "xla":
+        keep3 = keep_frac if keep_frac.ndim == 3 else keep_frac[:, None]
         return ref.grid_tick(
-            active, remaining, keep_frac[:, None], bg_load, bandwidth[:, None],
+            active, remaining, keep3, bg_load, bandwidth[:, None],
             leg_proc[:, None], proc_link[:, None], leg_link[:, None],
         )
     from repro.kernels import grid_tick as _k

@@ -1,0 +1,388 @@
+"""Parity suite for the bucketed bank and the manual banked tick body.
+
+Three layers of the warm-path rework are pinned against each other here:
+
+- ``compile_bank(..., n_buckets=k)`` — max_ticks-bucketed sub-banks with a
+  stable scenario -> (bucket, slot) index map and per-bucket pads;
+- ``engine.simulate_bank`` on a :class:`BucketedBank` — per-bucket traces
+  scattered back into the caller's original ``[N, R]`` order;
+- the manual ``[S, R, ...]`` tick/leap loop on ``ops.grid_tick_bank``
+  (``lowering="banked"``) vs the vmap-of-``simulate`` fallback
+  (``lowering="vmap"``), including the Pallas interpret-mode kernel on CPU.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import (
+    SimSpec,
+    bank_spec,
+    count_bank_traces,
+    make_bank_params,
+    make_params,
+    reset_bank_trace_count,
+    simulate,
+    simulate_bank,
+)
+from repro.core.scenarios import build_bank, sample_scenarios
+from repro.core.workload import BucketedBank, ScenarioBank, compile_bank
+from repro.kernels import ops
+
+FIELDS = ("transfer_time", "conth_mb", "conpr_mb", "done", "ticks",
+          "start_tick", "profile", "size_mb")
+
+
+def _pairs(n=8, seed=0):
+    return sample_scenarios(n=n, seed=seed)
+
+
+def _keys(n, r=2, seed=0):
+    return jax.random.split(jax.random.PRNGKey(seed), n * r).reshape(n, r, 2)
+
+
+def _assert_results_equal(a, b, fields=FIELDS, rtol=1e-5, atol=1e-5, msg=""):
+    for f in fields:
+        x = np.asarray(getattr(a, f)).astype(np.float64)
+        y = np.asarray(getattr(b, f)).astype(np.float64)
+        np.testing.assert_allclose(x, y, rtol=rtol, atol=atol,
+                                   err_msg=f"{msg}{f}")
+
+
+# ---------------------------------------------------------------------------
+# bucketing structure
+# ---------------------------------------------------------------------------
+
+def test_bucketed_bank_index_map_is_stable_and_complete():
+    bank = compile_bank(_pairs(n=9, seed=2), n_buckets=3)
+    assert isinstance(bank, BucketedBank)
+    assert bank.n_buckets == 3
+    seen = set()
+    for b, bucket in enumerate(bank.buckets):
+        ids = np.asarray(bucket.scenario_ids)
+        # ascending original indices: the stable slot order
+        assert (np.diff(ids) > 0).all() or len(ids) == 1
+        for slot, i in enumerate(ids):
+            assert int(bank.bucket_of[i]) == b
+            assert int(bank.slot_of[i]) == slot
+            seen.add(int(i))
+        # sub-bank content is the original scenario, bit for bit
+        for slot, i in enumerate(ids):
+            nt = int(bank.n_legs[i])
+            np.testing.assert_array_equal(
+                bucket.bank.size_mb[slot, :nt], bank.size_mb[i, :nt]
+            )
+            assert int(bucket.bank.max_ticks[slot]) == int(bank.max_ticks[i])
+    assert seen == set(range(bank.n_scenarios))
+    # buckets group by simulated length: bucket tick bounds are sorted
+    bounds = [int(b.bank.max_ticks.max()) for b in bank.buckets]
+    assert bounds == sorted(bounds)
+
+
+def test_bucketed_bank_per_bucket_pads_not_larger_than_global():
+    bank = compile_bank(_pairs(n=8, seed=3), n_buckets=4)
+    for bucket in bank.buckets:
+        assert bucket.bank.pad_legs <= bank.pad_legs
+        assert bucket.bank.pad_procs <= bank.pad_procs
+        assert bucket.bank.pad_links <= bank.pad_links
+    # at least one bucket is genuinely smaller than the monolithic pad
+    # (heterogeneous fleet), otherwise bucketing buys nothing
+    assert min(b.bank.pad_legs for b in bank.buckets) < bank.pad_legs
+
+
+def test_bucket_pad_floors_and_trace_reuse_across_fleets():
+    """Two fleets bucketed to matching shapes share every bucket trace."""
+    p1, p2 = _pairs(n=6, seed=10), _pairs(n=6, seed=77)
+    b1 = compile_bank(p1, n_buckets=2, max_ticks=20_000)
+    b2 = compile_bank(p2, n_buckets=2, max_ticks=20_000)
+    floors = [
+        (max(x.bank.pad_legs, y.bank.pad_legs),
+         max(x.bank.pad_procs, y.bank.pad_procs),
+         max(x.bank.pad_links, y.bank.pad_links))
+        for x, y in zip(b1.buckets, b2.buckets)
+    ]
+    b1 = compile_bank(p1, n_buckets=2, max_ticks=20_000, bucket_pad_floors=floors)
+    b2 = compile_bank(p2, n_buckets=2, max_ticks=20_000, bucket_pad_floors=floors)
+    keys = _keys(6, 2)
+    # identically-shaped buckets share one trace: expect distinct shapes
+    expected = len({
+        (len(b.scenario_ids), b.bank.pad_legs, b.bank.pad_procs,
+         b.bank.pad_links)
+        for b in b1.buckets
+    })
+    reset_bank_trace_count()
+    with count_bank_traces() as first:
+        simulate_bank(b1, make_bank_params(b1), keys, leap=True)
+    assert first.count == expected  # one trace per distinct bucket shape
+    with count_bank_traces() as second:
+        simulate_bank(b2, make_bank_params(b2), keys, leap=True)
+    assert second.count == 0  # fresh fleet, same bucket shapes: all cached
+
+
+def test_compile_bank_bucket_validation():
+    pairs = _pairs(n=4)
+    with pytest.raises(ValueError, match="n_buckets"):
+        compile_bank(pairs, n_buckets=9)
+    with pytest.raises(ValueError, match="bucket_pad_floors"):
+        compile_bank(pairs, n_buckets=2, bucket_pad_floors=[(1, 1, 1)])
+    # n_buckets=1 keeps the plain ScenarioBank type
+    bank = compile_bank(pairs, n_buckets=1)
+    assert isinstance(bank, ScenarioBank)
+    assert not isinstance(bank, BucketedBank)
+
+
+# ---------------------------------------------------------------------------
+# result parity: bucketed vs monolithic vs per-scenario
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("leap", [False, True])
+def test_bucketed_matches_monolithic_and_per_scenario(leap):
+    """The bucketed run must reproduce the monolithic bank AND per-scenario
+    ``simulate`` leg for leg, with results back in original scenario order."""
+    n = 8
+    bank = compile_bank(_pairs(n=n, seed=4), n_buckets=3)
+    params = make_bank_params(bank)
+    keys = _keys(n, 2, seed=4)
+    res_b = simulate_bank(bank, params, keys, leap=leap)
+    res_m = simulate_bank(bank, params, keys, leap=leap, bucketed=False)
+    _assert_results_equal(res_b, res_m, msg=f"leap={leap} bucketed-vs-mono ")
+
+    for i in range(n):
+        table = bank.scenario_table(i)
+        spec = SimSpec.from_table(table, max_ticks=int(bank.max_ticks[i]))
+        p = make_params(table)
+        nt = int(bank.n_legs[i])
+        for r in range(2):
+            ref = simulate(spec, p, keys[i, r], leap=leap)
+            for f in ("transfer_time", "conth_mb", "conpr_mb", "start_tick"):
+                np.testing.assert_allclose(
+                    np.asarray(getattr(res_b, f))[i, r, :nt],
+                    np.asarray(getattr(ref, f)),
+                    rtol=1e-5, atol=1e-5,
+                    err_msg=f"scenario {i} replica {r} field {f}",
+                )
+            np.testing.assert_array_equal(
+                np.asarray(res_b.done)[i, r, :nt], np.asarray(ref.done)
+            )
+
+
+def test_bucketed_padding_is_inert_per_bucket():
+    """Tail slots beyond each bucket's own pad (and the bucket pad itself)
+    report the global padding contract: born done, zero everything."""
+    bank = compile_bank(_pairs(n=8, seed=5), n_buckets=3)
+    params = make_bank_params(bank)
+    keys = _keys(8, 2, seed=5)
+    res = simulate_bank(bank, params, keys, leap=True)
+    pad = ~np.broadcast_to(bank.leg_valid[:, None, :], res.done.shape)
+    assert np.asarray(res.done)[pad].all()
+    for f in ("transfer_time", "conth_mb", "conpr_mb", "start_tick", "size_mb"):
+        assert (np.asarray(getattr(res, f))[pad] == 0).all(), f
+    # the global-pad tail beyond a bucket's local pad carries PAD profile
+    from repro.core.workload import PAD_PROFILE
+    assert (np.asarray(res.profile)[pad] == PAD_PROFILE).all()
+
+
+def test_bucketed_stochastic_bg_statistically_equivalent():
+    """With sigma > 0 the bucketed run is draw-for-draw identical to the
+    monolithic engine (same per-(scenario, replica) key streams)."""
+    n = 6
+    bank = compile_bank(_pairs(n=n, seed=6), n_buckets=2)
+    params = make_bank_params(bank, bg_mu=4.0, bg_sigma=2.0)
+    keys = _keys(n, 4, seed=6)
+    res_b = simulate_bank(bank, params, keys, leap=False)
+    res_m = simulate_bank(bank, params, keys, leap=False, bucketed=False)
+    _assert_results_equal(res_b, res_m, msg="stochastic ")
+
+
+# ---------------------------------------------------------------------------
+# lowering parity: manual banked tick body vs vmap-of-simulate
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("leap", [False, True])
+def test_banked_lowering_matches_vmap(leap):
+    n = 8
+    bank = build_bank(n=n, seed=7, max_ticks=20_000)
+    params = make_bank_params(bank)
+    keys = _keys(n, 2, seed=7)
+    res_v = simulate_bank(bank, params, keys, leap=leap, lowering="vmap")
+    res_b = simulate_bank(bank, params, keys, leap=leap, lowering="banked")
+    _assert_results_equal(res_v, res_b, msg=f"leap={leap} lowering ")
+
+
+def test_banked_lowering_matches_vmap_stochastic_bitwise():
+    """Stochastic background loads: the manual body must consume the same
+    per-(scenario, replica) RNG stream as the vmap lowering — same split
+    order, same normal draws — so results agree draw for draw."""
+    n = 4
+    bank = build_bank(n=n, seed=8, max_ticks=20_000)
+    params = make_bank_params(bank, bg_mu=5.0, bg_sigma=2.0)
+    keys = _keys(n, 3, seed=8)
+    res_v = simulate_bank(bank, params, keys, leap=True, lowering="vmap")
+    res_b = simulate_bank(bank, params, keys, leap=True, lowering="banked")
+    _assert_results_equal(res_v, res_b, msg="stochastic lowering ")
+
+
+def test_banked_lowering_per_replica_params():
+    """Per-(scenario, replica) keep/bg params ([N, R, ...]) — the shape the
+    calibration presimulation sweep feeds — run through both lowerings."""
+    n, r = 3, 4
+    bank = build_bank(["wlcg-remote", "bursty"], n=n, seed=9, max_ticks=20_000)
+    base = make_bank_params(bank)
+    rng = np.random.RandomState(0)
+    keep = np.broadcast_to(
+        np.asarray(base.keep_frac)[:, None, :], (n, r, bank.pad_legs)
+    ) * rng.uniform(0.9, 1.0, (n, r, 1)).astype(np.float32)
+    params = base._replace(
+        keep_frac=jnp.asarray(keep),
+        bg_mu=jnp.broadcast_to(base.bg_mu[:, None, :], (n, r, bank.pad_links)),
+        bg_sigma=jnp.broadcast_to(base.bg_sigma[:, None, :], (n, r, bank.pad_links)),
+    )
+    keys = _keys(n, r, seed=9)
+    res_v = simulate_bank(bank, params, keys, leap=True, lowering="vmap")
+    res_b = simulate_bank(bank, params, keys, leap=True, lowering="banked")
+    _assert_results_equal(res_v, res_b, msg="per-replica params ")
+
+
+def test_banked_lowering_interpret_kernel_matches_xla():
+    """The manual banked body driving the Pallas bank kernel in interpret
+    mode (the CPU stand-in for the TPU lowering) matches the XLA reference
+    path — the whole engine, not just one kernel call."""
+    n = 4
+    bank = build_bank(n=n, seed=11, max_ticks=20_000)
+    params = make_bank_params(bank)
+    keys = _keys(n, 2, seed=11)
+    res_x = simulate_bank(bank, params, keys, leap=True, lowering="banked",
+                          backend="xla")
+    res_p = simulate_bank(bank, params, keys, leap=True, lowering="banked",
+                          backend="pallas_interpret")
+    _assert_results_equal(res_x, res_p, rtol=1e-4, atol=1e-3,
+                          msg="interpret kernel ")
+
+
+def test_lowering_flag_validation():
+    bank = build_bank(n=2, seed=0, max_ticks=2_000)
+    params = make_bank_params(bank)
+    keys = _keys(2, 1)
+    with pytest.raises(ValueError, match="lowering"):
+        simulate_bank(bank, params, keys, lowering="magic")
+
+
+# ---------------------------------------------------------------------------
+# engine-result bugfixes
+# ---------------------------------------------------------------------------
+
+def test_unfinished_legs_report_zero_transfer_time():
+    """Legs cut off by max_ticks must never report negative durations
+    (t_end frozen at 0 while t_start > 0 was the seed bug)."""
+    bank = build_bank(n=4, seed=12, max_ticks=5)
+    params = make_bank_params(bank)
+    keys = _keys(4, 2, seed=12)
+    for lowering in ("vmap", "banked"):
+        res = simulate_bank(bank, params, keys, lowering=lowering)
+        tt = np.asarray(res.transfer_time)
+        done = np.asarray(res.done)
+        assert (~done).any(), "fixture must leave legs unfinished"
+        assert (tt >= 0).all(), f"{lowering}: negative transfer_time"
+        assert (tt[~done] == 0).all(), f"{lowering}: unfinished not masked"
+        # no SimResult field may go negative for unfinished legs
+        for f in ("conth_mb", "conpr_mb", "start_tick", "size_mb"):
+            assert (np.asarray(getattr(res, f))[~done] >= 0).all(), f
+
+
+def test_refsim_oracle_masks_unfinished_legs():
+    from repro.core.refsim import reference_simulate
+
+    bank = build_bank(n=2, seed=13, max_ticks=4)
+    table = bank.scenario_table(0)
+    ref = reference_simulate(
+        table,
+        table.keep_frac,
+        np.zeros(table.n_links),
+        np.zeros(table.n_links),
+        4,
+    )
+    assert (ref["transfer_time"] >= 0).all()
+    assert (ref["transfer_time"][~ref["done"]] == 0).all()
+
+
+def test_eq1_fit_drops_unfinished_legs():
+    """A truncated simulation must still produce finite Eq.-1 coefficients
+    (unfinished legs carry no information, not garbage)."""
+    from repro.core.calibration import _eq1_coefficients
+
+    bank = build_bank(["wlcg-remote"], n=2, seed=14, max_ticks=30)
+    params = make_bank_params(bank)
+    keys = _keys(2, 1, seed=14)
+    res = simulate_bank(bank, params, keys)
+    flat = jax.tree.map(lambda a: a.reshape((2,) + a.shape[2:]), res)
+    coefs = jax.vmap(_eq1_coefficients)(flat)
+    assert np.isfinite(np.asarray(coefs)).all()
+
+
+def test_grid_tick_bank_rejects_missing_replica_dim():
+    """[S, T] per-sim state (no replica dim) must be a loud error, not a
+    silent mis-broadcast against the [S, 1, ...] campaign operands."""
+    S, T, P, L = 2, 5, 4, 3
+    mk = lambda *shape: jnp.ones(shape, jnp.float32)
+    good = dict(
+        active=mk(S, 1, T), remaining=mk(S, 1, T), keep_frac=mk(S, T),
+        bg_load=mk(S, 1, L), bandwidth=mk(S, L), leg_proc=mk(S, T, P),
+        proc_link=mk(S, P, L), leg_link=mk(S, T, L),
+    )
+    ops.grid_tick_bank(**good)  # replica dim present: fine
+    for field, bad in (
+        ("active", mk(S, T)),
+        ("remaining", mk(S, T)),
+        ("bg_load", mk(S, L)),
+        ("keep_frac", mk(S)),
+        ("bandwidth", mk(S, 1, L)),
+        ("leg_proc", mk(T, P)),
+    ):
+        with pytest.raises(ValueError, match="grid_tick_bank"):
+            ops.grid_tick_bank(**{**good, field: bad})
+    with pytest.raises(ValueError, match="scenario dim"):
+        ops.grid_tick_bank(**{**good, "bandwidth": mk(S + 1, L)})
+
+
+def test_presimulate_bank_routes_through_buckets():
+    """The calibration presimulation sweep must inherit the bucketed warm
+    path: a BucketedBank input runs the sub-bank traces (2 here), never the
+    monolithic single-trace program."""
+    from repro.core.calibration import PriorBox, presimulate_bank
+
+    bank = compile_bank(
+        sample_scenarios(["wlcg-remote", "bursty"], n=4, seed=15),
+        max_ticks=20_000, n_buckets=2,
+    )
+    expected = len({
+        (len(b.scenario_ids), b.bank.pad_legs, b.bank.pad_procs,
+         b.bank.pad_links)
+        for b in bank.buckets
+    })
+    reset_bank_trace_count()
+    theta, x, sid = presimulate_bank(
+        bank, PriorBox.paper(), jax.random.PRNGKey(0), 4, batch=2, leap=True,
+    )
+    from repro.core.engine import bank_trace_count
+
+    assert bank_trace_count() == expected  # sub-bank traces, not monolithic
+    assert theta.shape == (16, 3) and np.isfinite(np.asarray(x)).all()
+    assert (np.bincount(np.asarray(sid), minlength=4) == 4).all()
+
+
+def test_trace_count_reset_is_order_independent():
+    """reset_bank_trace_count(clear_caches=True) makes absolute trace-count
+    assertions independent of whatever earlier callers traced."""
+    bank = build_bank(n=2, seed=0, max_ticks=2_000)
+    params = make_bank_params(bank)
+    keys = _keys(2, 1)
+    simulate_bank(bank, params, keys)  # warm some shape
+    reset_bank_trace_count()
+    with count_bank_traces() as tr:
+        simulate_bank(bank, params, keys)  # same shape — but caches dropped
+    assert tr.count == 1
+    with count_bank_traces() as tr2:
+        simulate_bank(bank, params, keys)
+    assert tr2.count == 0
