@@ -1,5 +1,7 @@
-"""End-to-end Section-5 reproduction at laptop scale: presimulate, train the
-AALR classifier, run likelihood-free MCMC, validate against x_true.
+"""End-to-end Section-5 reproduction at laptop scale through the ``Fleet``
+façade: compile the production workload, presimulate + train the AALR
+classifier + run likelihood-free MCMC (``fleet.calibrate``), validate
+against x_true (``fleet.validate``).
 
     PYTHONPATH=src python examples/calibrate_wlcg.py [--fast]
 
@@ -7,47 +9,48 @@ Full-paper-scale settings (12.7M presims, 263 epochs, 1.1M MCMC states,
 16k validation sims) are flags on repro.launch.calibrate.
 """
 import argparse
-import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.calibration import (
-    CalibrationConfig, calibrate, make_theta_mapper, simulate_coefficients,
-    validate,
-)
-from repro.core.engine import SimSpec
-from repro.core.workload import compile_campaign, wlcg_production_workload
+from repro import CalibrationConfig, Fleet
+from repro.core.workload import wlcg_production_workload
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--fast", action="store_true", help="CI-speed settings")
 args = ap.parse_args()
 
-grid, camp = wlcg_production_workload(seed=0)
-table = compile_campaign(grid, camp)
-spec = SimSpec.from_table(table, max_ticks=30_000)
-mapper = make_theta_mapper(table, "webdav")
+# compile -> simulate -> calibrate, one session object
+fleet = Fleet.from_pairs(
+    [wlcg_production_workload(seed=0)], max_ticks=30_000, leap=True
+)
 
 theta_true = jnp.array([0.02, 36.9, 14.4])  # the "true system"
-x_true = simulate_coefficients(spec, mapper(theta_true),
-                               jax.random.PRNGKey(42), n_replicates=8)
+# Eq.-1 coefficients of the true system, averaged over stochastic replicas
+# to stabilize the observation. Intentional asymmetry vs the old per-table
+# example: fleet.calibrate trains the AALR ratio on single-realization
+# presim coefficients (scenario diversity, not replicate averaging, is the
+# fleet path's variance control), so the ratio is evaluated at a
+# lower-variance observed statistic than it was trained on.
+x_true = jnp.asarray(
+    fleet.coefficients(theta_true, replicas=8, key=jax.random.PRNGKey(42))
+).mean(axis=1)[0]
 print("x_true (a, b, c) =", np.asarray(x_true))
 
 cfg = (CalibrationConfig(n_presim=4096, epochs=100, batch_size=1024, lr=3e-4,
-                         n_replicates=2, n_chains=4, n_mcmc=5000, burn_in=1000,
-                         step_size=0.1)
+                         n_chains=4, n_mcmc=5000, burn_in=1000, step_size=0.1)
        if args.fast else
        CalibrationConfig(n_presim=8192, epochs=160, batch_size=2048, lr=3e-4,
-                         n_replicates=4, n_chains=4, n_mcmc=10_000,
-                         burn_in=2000, step_size=0.1))
-result = calibrate(spec, table, x_true, jax.random.PRNGKey(0), cfg)
+                         n_chains=4, n_mcmc=10_000, burn_in=2000,
+                         step_size=0.1))
+result = fleet.calibrate(x_true, jax.random.PRNGKey(0), cfg)
 print("theta* (marginal modes) =", np.asarray(result.theta_star))
 print("theta_MAP (ratio argmax) =", np.asarray(result.theta_map),
       "   [true: 0.02, 36.9, 14.4]")
 
-val = validate(spec, table, result.theta_map, x_true, jax.random.PRNGKey(9),
-               n_sims=16 if args.fast else 64, n_replicates=cfg.n_replicates)
-print("validation median coef:", val["median_coef"],
-      " mean |E|:", val["mean_abs_error"],
+val = fleet.validate(result.theta_map, x_true, jax.random.PRNGKey(9),
+                     n_sims=16 if args.fast else 64)
+print("validation median coef:", val["median_coef"][0],
+      " mean |E|:", val["mean_abs_error"][0],
       " best sum E: {:.1f}%".format(100 * val["sum_error"].min()))

@@ -1,13 +1,17 @@
 """The paper's future-work experiment: evolutionary optimization of data
 access profiles for a bag of jobs, fitness evaluated on the simulator.
 
+Every generation's population fitness runs as **one fleet dispatch**: the
+super-table of all candidate realizations becomes a single-scenario
+``repro.Fleet`` (``scheduler.super_fleet``) and the B candidate ``enabled``
+masks ride its replica axis through one banked jit trace.
+
     PYTHONPATH=src python examples/optimize_profiles.py
 """
 import jax
-import numpy as np
 
+from repro import count_bank_traces, reset_bank_trace_count
 from repro.data.gridfeed import GridFeed, GridFeedConfig
-from repro.core.workload import AccessProfileKind
 
 feed = GridFeed(GridFeedConfig(n_shards=32, n_workers=4, bg_mu=12.0,
                                bg_sigma=3.0))
@@ -17,8 +21,12 @@ stall_remote, frac_remote = feed.stall_time(step_time_s=2.0,
                                             key=jax.random.PRNGKey(1))
 print(f"all-remote: stall {stall_remote:.0f}s ({frac_remote*100:.1f}% of epoch)")
 
-best, fitness, hist = feed.optimize(generations=10, population=24)
+reset_bank_trace_count()
+with count_bank_traces() as traces:
+    best, fitness, hist = feed.optimize(generations=10, population=24)
 placed = int((best % 2 == 1).sum())
 print(f"optimized: fitness {hist[0]:.0f} -> {fitness:.0f} "
       f"({(hist[0]-fitness)/hist[0]*100:.1f}% better), "
       f"{placed}/{len(best)} shards moved to data-placement")
+print(f"10 generations x 24 candidates = one fleet trace reused throughout: "
+      f"{traces.count} banked trace(s)")

@@ -12,3 +12,82 @@ import jax
 jax.config.update("jax_threefry_partitionable", True)
 
 __version__ = "0.1.0"
+
+# The public surface: the fleet façade plus the compile/simulate/calibrate
+# primitives it composes, importable without reaching into ``repro.core.*``.
+# (Must come after the RNG pin above so every entry point inherits it.)
+from repro.core.calibration import (  # noqa: E402
+    CalibrationConfig,
+    PriorBox,
+    calibrate,
+    make_theta_mapper,
+    presimulate_bank,
+    validate_bank,
+)
+from repro.core.engine import (  # noqa: E402
+    SimParams,
+    SimResult,
+    SimSpec,
+    count_bank_traces,
+    make_bank_params,
+    make_params,
+    reset_bank_trace_count,
+    simulate,
+    simulate_bank,
+    simulate_batch,
+)
+from repro.core.fleet import Fleet, StreamChunk  # noqa: E402
+from repro.core.scenarios import (  # noqa: E402
+    build_bank,
+    family_names,
+    make_scenario,
+    sample_scenarios,
+)
+from repro.core.topology import Grid  # noqa: E402
+from repro.core.workload import (  # noqa: E402
+    BucketedBank,
+    Campaign,
+    LegTable,
+    ScenarioBank,
+    compile_bank,
+    compile_campaign,
+    wlcg_production_workload,
+)
+
+__all__ = [
+    "__version__",
+    # façade
+    "Fleet",
+    "StreamChunk",
+    # model / compile
+    "Grid",
+    "Campaign",
+    "LegTable",
+    "ScenarioBank",
+    "BucketedBank",
+    "compile_campaign",
+    "compile_bank",
+    "build_bank",
+    "make_scenario",
+    "sample_scenarios",
+    "family_names",
+    "wlcg_production_workload",
+    # engine
+    "SimSpec",
+    "SimParams",
+    "SimResult",
+    "simulate",
+    "simulate_batch",
+    "simulate_bank",
+    "make_params",
+    "make_bank_params",
+    "count_bank_traces",
+    "reset_bank_trace_count",
+    # calibration
+    "PriorBox",
+    "CalibrationConfig",
+    "calibrate",
+    "make_theta_mapper",
+    "presimulate_bank",
+    "validate_bank",
+]

@@ -1,6 +1,6 @@
 """Core library: the GDAPS grid simulator + SBI calibration in JAX.
 
-Architecture (compile -> bank -> engine -> consumers):
+Architecture (model -> compile -> engine -> fleet façade -> consumers):
 
 1. **Model** — :mod:`topology` (grids, links, protocols) and
    :mod:`workload` (replicas, access profiles, jobs, campaigns) describe one
@@ -8,12 +8,13 @@ Architecture (compile -> bank -> engine -> consumers):
    Section-3/5 setups and the registry of heterogeneous scenario families).
 2. **Compile** — ``workload.compile_campaign`` lowers one campaign to a
    dense :class:`~repro.core.workload.LegTable`;
-   ``workload.compile_bank`` pads and stacks many heterogeneous
-   ``(Grid, Campaign)`` pairs into a :class:`~repro.core.workload.ScenarioBank`
-   with semantically-inert padding and a per-scenario ``max_ticks`` mask —
-   or, with ``n_buckets > 1``, a :class:`~repro.core.workload.BucketedBank`
-   of max_ticks-homogeneous sub-banks (stable scenario -> (bucket, slot)
-   map) so warm throughput is not gated by the slowest scenario.
+   ``workload.compile_bank`` / ``workload.bank_from_tables`` pad and stack
+   many heterogeneous scenarios into a
+   :class:`~repro.core.workload.ScenarioBank` with semantically-inert
+   padding and per-scenario ``max_ticks`` — or, with ``n_buckets > 1``, a
+   :class:`~repro.core.workload.BucketedBank` of max_ticks-homogeneous
+   sub-banks (stable scenario -> (bucket, slot) map) so warm throughput is
+   not gated by the slowest scenario.
 3. **Engine** — :mod:`engine` executes tables (``simulate`` /
    ``simulate_batch``) and banks (``simulate_bank``: one jit trace per
    (sub-)bank padded shape, sharded over the device mesh; the ``"banked"``
@@ -22,8 +23,18 @@ Architecture (compile -> bank -> engine -> consumers):
    with the vmap-of-``simulate`` program as the ``"vmap"`` fallback) via
    the fair-share tick kernels in :mod:`repro.kernels`;
    :mod:`refsim` is the loop-based oracle.
-4. **Consumers** — :mod:`calibration` (likelihood-free inference over theta
-   *and* scenario variants), :mod:`scheduler` (access-profile optimization;
-   population fitness is one banked batch), :mod:`dataset` /
-   :mod:`regression` (the paper's observation datasets and Eq. 1-2 fits).
+4. **Fleet façade** — :mod:`fleet` (exported as ``repro.Fleet``) is the one
+   entry point consumers program against: it compiles (and memoizes) banks
+   (``from_pairs`` / ``from_scenarios`` / ``from_table``), dispatches
+   ``run`` with the right lowering in stable scenario order, streams
+   iterator-fed fleets through fixed-pad chunk banks that share one jit
+   trace (``stream``), persists compiled banks (``save`` / ``load``,
+   npz + json), and fronts the calibration pipeline (``presimulate`` /
+   ``calibrate`` / ``validate`` / ``coefficients``).
+5. **Consumers** — :mod:`calibration` (likelihood-free inference over theta
+   *and* scenario variants; its bank entry points accept fleets and
+   dispatch through ``Fleet.run``), :mod:`scheduler` (access-profile
+   optimization; population fitness is one fleet run over a super-table),
+   :mod:`dataset` / :mod:`regression` (the paper's observation datasets and
+   Eq. 1-2 fits).
 """

@@ -31,7 +31,6 @@ from repro.core.engine import (
     SimResult,
     SimSpec,
     simulate,
-    simulate_bank,
 )
 from repro.core.regression import coefficient_error, fit_eq1
 from repro.core.workload import LegTable, ProfileTag, ScenarioBank
@@ -105,55 +104,67 @@ class CalibrationResult(NamedTuple):
     rhat: jax.Array = None  # [3] split-R-hat convergence diagnostic
 
 
-def _theta_to_params(table_keep: jax.Array, protocol_mask: jax.Array,
-                     n_links: int, theta: jax.Array) -> SimParams:
+def _theta_to_params(keep: jax.Array, protocol_mask: jax.Array,
+                     link_scale: jax.Array, theta: jax.Array) -> SimParams:
     """Map theta = (overhead, mu, sigma) onto SimParams: the calibrated
-    protocol's legs get the inferred overhead; every link gets the inferred
-    background-load moments (the paper calibrates one link)."""
+    protocol's legs get the inferred overhead; every (valid) link gets the
+    inferred background-load moments (the paper calibrates one link).
+
+    One mapper serves both layouts: per-campaign (``keep``/``mask`` = [T],
+    ``link_scale`` = ones [L]) and bank-wide (``[N, T]`` / ``[N, L]`` with
+    ``link_scale`` = the validity mask, so padded links keep zero moments and
+    their — already zero-bandwidth — fair shares stay untouched)."""
     overhead, mu, sigma = theta[0], theta[1], theta[2]
-    keep = jnp.where(protocol_mask, 1.0 - overhead, table_keep)
     return SimParams(
-        keep_frac=keep,
-        bg_mu=jnp.full((n_links,), mu),
-        bg_sigma=jnp.full((n_links,), sigma),
+        keep_frac=jnp.where(protocol_mask, 1.0 - overhead, keep),
+        bg_mu=mu * link_scale,
+        bg_sigma=sigma * link_scale,
     )
 
 
-def make_theta_mapper(table: LegTable, protocol: str = "webdav"):
-    """Returns ``f(theta) -> SimParams`` for the campaign's leg table."""
-    pid = table.protocol_names.index(protocol)
-    mask = jnp.asarray(table.protocol_id == pid)
-    keep = jnp.asarray(table.keep_frac)
-    n_links = table.n_links
-    return functools.partial(_theta_to_params, keep, mask, n_links)
+def make_theta_mapper(source, protocol: str = "webdav", *,
+                      missing_ok: bool = False):
+    """Returns ``f(theta) -> SimParams`` for ``source``: a compiled
+    :class:`LegTable` (per-campaign params), a :class:`ScenarioBank`
+    (bank-wide stacked params over the unified protocol namespace), or a
+    :class:`~repro.core.fleet.Fleet` (its bank).
 
+    An unknown ``protocol`` raises unless ``missing_ok=True``, where the
+    overhead mask is all-False (no leg calibrated, background moments still
+    apply) — the behavior a protocol-free scenario already gets inside a
+    union-namespace bank, which is what lets ``Fleet.stream`` apply one
+    theta to chunks whose local namespace lacks the protocol entirely."""
+    from repro.core.fleet import Fleet  # deferred: fleet sits above us
 
-def _bank_theta_to_params(
-    keep: jax.Array,  # [N, T]
-    mask: jax.Array,  # [N, T]
-    link_valid: jax.Array,  # [N, L]
-    theta: jax.Array,  # [3]
-) -> SimParams:
-    """Bank-wide analogue of ``_theta_to_params``: one theta applied to every
-    scenario (padded links keep zero moments so their — already zero-bandwidth
-    — fair shares stay untouched)."""
-    overhead, mu, sigma = theta[0], theta[1], theta[2]
-    lv = link_valid.astype(jnp.float32)
-    return SimParams(
-        keep_frac=jnp.where(mask, 1.0 - overhead, keep),
-        bg_mu=mu * lv,
-        bg_sigma=sigma * lv,
-    )
+    if isinstance(source, Fleet):
+        source = source.bank
+    if not isinstance(source, (ScenarioBank, LegTable)):
+        raise TypeError(
+            "make_theta_mapper needs a LegTable, ScenarioBank, or Fleet: "
+            f"{type(source)!r}"
+        )
+    if protocol in source.protocol_names:
+        pid = source.protocol_names.index(protocol)
+        mask = jnp.asarray(source.protocol_id == pid)
+    elif missing_ok:
+        mask = jnp.zeros(source.protocol_id.shape, bool)
+    else:
+        raise ValueError(
+            f"protocol {protocol!r} not in {source.protocol_names} "
+            "(missing_ok=True maps it to a no-op overhead mask)"
+        )
+    keep = jnp.asarray(source.keep_frac)
+    if isinstance(source, ScenarioBank):
+        link_scale = jnp.asarray(source.link_valid, jnp.float32)
+    else:
+        link_scale = jnp.ones((source.n_links,), jnp.float32)
+    return functools.partial(_theta_to_params, keep, mask, link_scale)
 
 
 def make_bank_theta_mapper(bank: ScenarioBank, protocol: str = "webdav"):
-    """Returns ``f(theta) -> SimParams`` stacked over the whole bank, using
-    the bank's unified protocol namespace."""
-    pid = bank.protocol_names.index(protocol)
-    mask = jnp.asarray(bank.protocol_id == pid)
-    keep = jnp.asarray(bank.keep_frac)
-    link_valid = jnp.asarray(bank.link_valid)
-    return functools.partial(_bank_theta_to_params, keep, mask, link_valid)
+    """Deprecated alias: :func:`make_theta_mapper` now accepts banks (and
+    fleets) directly."""
+    return make_theta_mapper(bank, protocol)
 
 
 def _eq1_coefficients(res: SimResult) -> jax.Array:
@@ -243,6 +254,17 @@ def presimulate(
     return theta, x
 
 
+def _as_fleet(bank_or_fleet):
+    """Lift a bare bank into a :class:`~repro.core.fleet.Fleet` (the session
+    façade every banked consumer now dispatches through); fleets pass
+    through. Imported lazily — fleet sits above this module."""
+    from repro.core.fleet import Fleet
+
+    if isinstance(bank_or_fleet, Fleet):
+        return bank_or_fleet
+    return Fleet(bank_or_fleet)
+
+
 def presimulate_bank(
     bank: ScenarioBank,
     prior: PriorBox,
@@ -252,7 +274,7 @@ def presimulate_bank(
     protocol: str = "webdav",
     backend: Optional[str] = None,
     batch: int = 128,
-    leap: bool = False,
+    leap: Optional[bool] = None,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Presimulate ``(theta, x_sim)`` tuples over **scenario variants**.
 
@@ -265,9 +287,18 @@ def presimulate_bank(
     scenario families (scenarios without remote legs produce degenerate
     fits).
 
+    ``bank`` may be a :class:`ScenarioBank`/:class:`BucketedBank` or a
+    :class:`~repro.core.fleet.Fleet` (whose run defaults are honored:
+    ``leap=None`` resolves to the fleet's ``leap``, which is ``False`` for a
+    bare bank); :meth:`Fleet.presimulate` is the façade entry point.
+
     Returns ``(theta [n, 3], x_sim [n, 3], scenario_id [n] i32)`` with
     ``n = bank.n_scenarios * n_per_scenario``, scenario-major.
     """
+    fleet = _as_fleet(bank)
+    if leap is None:
+        leap = fleet.leap
+    bank = fleet.bank
     n_scn = bank.n_scenarios
     pid = bank.protocol_names.index(protocol)
     mask = jnp.asarray(bank.protocol_id == pid)  # [N, T]
@@ -289,9 +320,9 @@ def presimulate_bank(
             bg_mu=thetas[..., 1:2] * link_valid[:, None, :],
             bg_sigma=thetas[..., 2:3] * link_valid[:, None, :],
         )
-        # pass the bank itself (not a pre-extracted monolithic spec): a
+        # dispatch through the fleet (not a pre-extracted monolithic spec): a
         # BucketedBank then runs each warm chunk through its sub-bank traces
-        res = simulate_bank(bank, params, keys, backend=backend, leap=leap)
+        res = fleet.run(params, keys=keys, backend=backend, leap=leap)
         flat = jax.tree.map(
             lambda a: a.reshape((n_scn * batch,) + a.shape[2:]), res
         )
@@ -327,16 +358,24 @@ def validate_bank(
     n_sims: int = 64,
     protocol: str = "webdav",
     backend: Optional[str] = None,
-    leap: bool = True,
+    leap: Optional[bool] = None,
 ) -> dict:
     """Validation sweep over scenario variants: ``n_sims`` stochastic
     replicas of every scenario under theta*, per-sim Eq.-1 fits, Eq.-6
-    errors. The whole (scenario x replica) sweep is one banked batch."""
-    mapper = make_bank_theta_mapper(bank, protocol)
+    errors. The whole (scenario x replica) sweep is one banked batch;
+    ``bank`` may be a bank or a :class:`~repro.core.fleet.Fleet`
+    (:meth:`Fleet.validate` is the façade entry point). ``leap=None``
+    resolves to the fleet's run default; a bare bank keeps the historical
+    ``leap=True`` validation default."""
+    fleet = _as_fleet(bank)
+    if leap is None:
+        leap = fleet.leap if fleet is bank else True
+    bank = fleet.bank
+    mapper = make_theta_mapper(bank, protocol)
     params = mapper(jnp.asarray(theta_star))
     n_scn = bank.n_scenarios
     keys = jax.random.split(key, n_scn * n_sims).reshape(n_scn, n_sims, 2)
-    res = simulate_bank(bank, params, keys, backend=backend, leap=leap)
+    res = fleet.run(params, keys=keys, backend=backend, leap=leap)
 
     flat = jax.tree.map(
         lambda a: a.reshape((n_scn * n_sims,) + a.shape[2:]), res
@@ -370,16 +409,22 @@ def calibrate(
     backend: Optional[str] = None,
     presim: Optional[Tuple[jax.Array, jax.Array]] = None,
 ) -> CalibrationResult:
-    """Full likelihood-free calibration of (overhead, mu, sigma)."""
+    """Full likelihood-free calibration of (overhead, mu, sigma).
+
+    With an externally supplied ``presim = (theta, x_sim)`` the simulation
+    stage is skipped entirely: ``spec`` may then be ``None`` and ``table``
+    may be any :func:`make_theta_mapper` source (a bank/fleet included) —
+    this is how :meth:`repro.Fleet.calibrate` reuses the pipeline over
+    scenario variants."""
     prior = prior or PriorBox.paper()
-    mapper = make_theta_mapper(table, protocol)
     key, k_pre, k_train, k_mcmc = jax.random.split(key, 4)
 
     if presim is None:
         log.info("presimulating %d tuples (x%d replicates)",
                  cfg.n_presim, cfg.n_replicates)
         theta, x_sim = presimulate(
-            spec, mapper, prior, k_pre, cfg.n_presim, backend=backend,
+            spec, make_theta_mapper(table, protocol), prior, k_pre,
+            cfg.n_presim, backend=backend,
             n_replicates=cfg.n_replicates, leap=cfg.use_leap,
         )
     else:

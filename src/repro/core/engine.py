@@ -38,6 +38,7 @@ __all__ = [
     "bank_trace_count",
     "reset_bank_trace_count",
     "count_bank_traces",
+    "register_cache_clear_hook",
 ]
 
 
@@ -371,6 +372,20 @@ _BANK_SPEC_AXES = SimSpec(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0)
 
 _bank_traces = 0
 
+# cache-clear callbacks run by reset_bank_trace_count(clear_caches=True).
+# Higher layers that memoize compiled artifacts keyed on process history
+# (e.g. the fleet-level compile cache in repro.core.fleet) register here so
+# trace-count assertions stay order-independent without the engine importing
+# them.
+_cache_clear_hooks = []
+
+
+def register_cache_clear_hook(fn) -> None:
+    """Register ``fn()`` to run whenever the banked-engine caches are
+    dropped (see :func:`reset_bank_trace_count`). Idempotent per function."""
+    if fn not in _cache_clear_hooks:
+        _cache_clear_hooks.append(fn)
+
 
 def bank_trace_count() -> int:
     """Number of times the banked engine has been (re)traced in this process
@@ -384,9 +399,11 @@ def reset_bank_trace_count(*, clear_caches: bool = True) -> None:
     The counter is process-global and only grows, which makes absolute
     trace-count assertions order-dependent (a shape traced by an earlier
     caller is cached and silently costs zero). ``clear_caches=True``
-    (default) also drops the jit caches of both banked lowerings, so the
-    next ``simulate_bank`` call re-traces no matter what ran before — the
-    order-independent fixture for tests and benchmarks.
+    (default) also drops the jit caches of both banked lowerings — so the
+    next ``simulate_bank`` call re-traces no matter what ran before — and
+    every registered higher-layer cache (the fleet-level compile cache; see
+    :func:`register_cache_clear_hook`): the order-independent fixture for
+    tests and benchmarks.
     """
     global _bank_traces
     _bank_traces = 0
@@ -394,6 +411,8 @@ def reset_bank_trace_count(*, clear_caches: bool = True) -> None:
         _simulate_bank.clear_cache()
         _simulate_bank_banked.clear_cache()
         _simulate_bank_bucketed_impl.clear_cache()
+        for fn in list(_cache_clear_hooks):
+            fn()
 
 
 class _TraceDelta:

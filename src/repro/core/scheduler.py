@@ -26,7 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import SimParams, SimSpec, simulate, simulate_batch
+from repro.core.engine import SimParams, SimSpec, simulate
+from repro.core.fleet import Fleet
 from repro.core.topology import Grid
 from repro.core.workload import (
     AccessProfileKind,
@@ -42,6 +43,7 @@ __all__ = [
     "CandidateAccess",
     "SuperTable",
     "build_super_table",
+    "super_fleet",
     "evaluate_population",
     "optimize_profiles",
 ]
@@ -181,6 +183,16 @@ def _fitness(
     return _mask_fitness(res, mask, makespan_weight, mean_weight)
 
 
+def super_fleet(st: SuperTable) -> Fleet:
+    """The single-scenario :class:`~repro.core.fleet.Fleet` view of a
+    super-table (memoized in the fleet-level compile cache per table
+    identity): population fitness evaluation is a bank of one scenario whose
+    ``B`` candidate ``enabled`` masks ride the replica axis."""
+    return Fleet.from_table(
+        st.table, name="super", max_ticks=int(st.spec.max_ticks)
+    )
+
+
 def evaluate_population(
     st: SuperTable,
     base_params: SimParams,
@@ -189,20 +201,24 @@ def evaluate_population(
     *,
     makespan_weight: float = 1.0,
     mean_weight: float = 0.1,
+    fleet: Optional[Fleet] = None,
 ) -> jax.Array:
     """Fitness of a whole population in **one banked batch**: the population
-    is a degenerate scenario bank — every member shares the super-table spec
-    and differs only in its ``enabled`` mask — so the engine's batched entry
-    point evaluates all assignments in a single dispatch instead of one
-    ``simulate`` call per assignment."""
+    is a degenerate scenario fleet — every member shares the super-table
+    spec and differs only in its ``enabled`` mask — so the whole population
+    runs as one :meth:`Fleet.run` dispatch ([1, B, ...]: the masks are
+    per-replica params of the single scenario) instead of one ``simulate``
+    call per assignment."""
     masks = jax.vmap(functools.partial(_assignment_mask, st))(pop)  # [B, T]
+    fleet = fleet if fleet is not None else super_fleet(st)
     params = SimParams(
-        keep_frac=base_params.keep_frac,
-        bg_mu=base_params.bg_mu,
-        bg_sigma=base_params.bg_sigma,
-        enabled=masks,
+        keep_frac=jnp.asarray(base_params.keep_frac)[None],  # [1, T] shared
+        bg_mu=jnp.asarray(base_params.bg_mu)[None],
+        bg_sigma=jnp.asarray(base_params.bg_sigma)[None],
+        enabled=masks[None],  # [1, B, T]: one mask per replica
     )
-    res = simulate_batch(st.spec, params, keys)
+    res = fleet.run(params, keys=keys[None])
+    res = jax.tree.map(lambda a: a[0], res)  # back to [B, ...]
     return _mask_fitness(res, masks, makespan_weight, mean_weight)
 
 
@@ -224,13 +240,14 @@ def optimize_profiles(
     n_access, n_cand = st.n_access, st.n_cand
     key, k0 = jax.random.split(key)
     pop = jax.random.randint(k0, (population, n_access), 0, n_cand)
+    fleet = super_fleet(st)  # compiled once, shared by every generation
 
     @jax.jit
     def eval_pop(pop: jax.Array, key: jax.Array) -> jax.Array:
         keys = jax.random.split(key, antithetic_sims)
         def per_sim(k):
             ks = jax.random.split(k, pop.shape[0])
-            return evaluate_population(st, base_params, pop, ks)
+            return evaluate_population(st, base_params, pop, ks, fleet=fleet)
         return jnp.mean(jax.vmap(per_sim)(keys), axis=0)
 
     @jax.jit

@@ -37,6 +37,8 @@ __all__ = [
     "BucketedBank",
     "compile_campaign",
     "compile_bank",
+    "bank_from_tables",
+    "subset_bank",
     "wlcg_production_workload",
     "ProfileTag",
     "PAD_PROFILE",
@@ -290,6 +292,40 @@ def _round_up(n: int, mult: int) -> int:
     return -(-n // mult) * mult
 
 
+def _resolve_pads(
+    tables: Sequence["LegTable"],
+    pad_legs: Optional[int],
+    pad_procs: Optional[int],
+    pad_links: Optional[int],
+    pad_multiple: int,
+) -> Tuple[int, int, int]:
+    """Padded (T, P, L): per-axis member maxima raised to the explicit
+    floors and rounded to ``pad_multiple`` (floors are floors — content
+    larger than a floor grows the pad). One resolver for every bank builder
+    so banks from ``compile_bank`` and ``bank_from_tables`` share traces."""
+    T = _round_up(max(max(t.n_legs for t in tables), pad_legs or 1), pad_multiple)
+    P = _round_up(max(max(t.n_procs for t in tables), pad_procs or 1), pad_multiple)
+    L = _round_up(max(max(t.n_links for t in tables), pad_links or 1), pad_multiple)
+    return T, P, L
+
+
+def _resolve_ticks(tables: Sequence["LegTable"], max_ticks) -> List[int]:
+    """Per-scenario tick bounds: ``None`` -> safe upper bound, int ->
+    uniform cap, sequence -> per-scenario caps (length-checked)."""
+    n = len(tables)
+    if max_ticks is None:
+        return [t.max_ticks_upper_bound() for t in tables]
+    if np.ndim(max_ticks) == 0:
+        return [int(max_ticks)] * n
+    if len(max_ticks) != n:
+        raise ValueError(f"max_ticks: expected {n} entries, got {len(max_ticks)}")
+    return [int(m) for m in max_ticks]
+
+
+def _union_protocols(tables: Sequence["LegTable"]) -> List[str]:
+    return sorted(set().union(*(t.protocol_names for t in tables)))
+
+
 @dataclasses.dataclass
 class ScenarioBank:
     """``N`` compiled ``(Grid, Campaign)`` pairs padded to shared shapes.
@@ -365,6 +401,11 @@ class ScenarioBank:
 
     def scenario_table(self, i: int) -> LegTable:
         """The unpadded source table of scenario ``i`` (oracle comparisons)."""
+        if not self.tables:
+            raise ValueError(
+                "this bank carries no source tables (it was loaded from disk "
+                "via Fleet.load); recompile the scenario for oracle comparisons"
+            )
         return self.tables[i]
 
 
@@ -526,21 +567,9 @@ def compile_bank(
     names = [c.name for _, c in pairs]
     n = len(tables)
 
-    # pad floors are floors: content larger than a floor grows the pad
-    T = _round_up(max(max(t.n_legs for t in tables), pad_legs or 1), pad_multiple)
-    P = _round_up(max(max(t.n_procs for t in tables), pad_procs or 1), pad_multiple)
-    L = _round_up(max(max(t.n_links for t in tables), pad_links or 1), pad_multiple)
-
-    proto_names = sorted(set().union(*(t.protocol_names for t in tables)))
-
-    if max_ticks is None:
-        ticks = [t.max_ticks_upper_bound() for t in tables]
-    elif np.ndim(max_ticks) == 0:
-        ticks = [int(max_ticks)] * n
-    else:
-        if len(max_ticks) != n:
-            raise ValueError(f"max_ticks: expected {n} entries, got {len(max_ticks)}")
-        ticks = [int(m) for m in max_ticks]
+    T, P, L = _resolve_pads(tables, pad_legs, pad_procs, pad_links, pad_multiple)
+    proto_names = _union_protocols(tables)
+    ticks = _resolve_ticks(tables, max_ticks)
 
     if n_buckets <= 1:
         return _stack_tables(tables, names, ticks, T, P, L, proto_names)
@@ -593,6 +622,98 @@ def compile_bank(
         bucket_of=bucket_of,
         slot_of=slot_of,
         buckets=buckets,
+    )
+
+
+def bank_from_tables(
+    tables: Sequence[LegTable],
+    names: Optional[Sequence[str]] = None,
+    *,
+    max_ticks=None,
+    pad_legs: Optional[int] = None,
+    pad_procs: Optional[int] = None,
+    pad_links: Optional[int] = None,
+    pad_multiple: int = 1,
+) -> ScenarioBank:
+    """Stack already-compiled leg tables into one padded :class:`ScenarioBank`.
+
+    The ``(grid, campaign)``-level twin of :func:`compile_bank` for callers
+    that hold :class:`LegTable` objects (e.g. the scheduler's super-table):
+    same padding contract, same unified protocol namespace, no recompile.
+    """
+    if not tables:
+        raise ValueError("bank_from_tables needs at least one LegTable")
+    tables = list(tables)
+    n = len(tables)
+    names = list(names) if names is not None else [f"table{i}" for i in range(n)]
+    if len(names) != n:
+        raise ValueError(f"names: expected {n} entries, got {len(names)}")
+    T, P, L = _resolve_pads(tables, pad_legs, pad_procs, pad_links, pad_multiple)
+    return _stack_tables(
+        tables, names, _resolve_ticks(tables, max_ticks), T, P, L,
+        _union_protocols(tables),
+    )
+
+
+def subset_bank(
+    bank: ScenarioBank,
+    scenario_ids: Sequence[int],
+    *,
+    pad_legs: Optional[int] = None,
+    pad_procs: Optional[int] = None,
+    pad_links: Optional[int] = None,
+) -> ScenarioBank:
+    """Slice scenarios out of a bank into a (possibly tighter-padded) bank.
+
+    Because every stacked array keeps its scenario's content in the top-left
+    corner and the padding values are position-independent constants, slicing
+    rows and truncating the padded axes reproduces ``_stack_tables`` of the
+    same scenarios bit for bit — this is how :meth:`Fleet.load` rebuilds each
+    bucket's sub-bank from the persisted monolithic arrays. Target pads must
+    dominate the member content and default to the parent's pads.
+    """
+    ids = np.asarray(scenario_ids, np.int64)
+    T = bank.pad_legs if pad_legs is None else int(pad_legs)
+    P = bank.pad_procs if pad_procs is None else int(pad_procs)
+    L = bank.pad_links if pad_links is None else int(pad_links)
+    if (
+        T < int(bank.n_legs[ids].max())
+        or P < int(bank.n_procs[ids].max())
+        or L < int(bank.n_links[ids].max())
+    ):
+        raise ValueError(
+            f"subset pads ({T}, {P}, {L}) cannot hold the selected scenarios"
+        )
+    if T > bank.pad_legs or P > bank.pad_procs or L > bank.pad_links:
+        # slicing can only tighten pads; growing them would silently clamp
+        raise ValueError(
+            f"subset pads ({T}, {P}, {L}) exceed the parent pads "
+            f"{(bank.pad_legs, bank.pad_procs, bank.pad_links)}; re-pad via "
+            "compile_bank/bank_from_tables with explicit floors instead"
+        )
+    return ScenarioBank(
+        size_mb=bank.size_mb[ids, :T],
+        release=bank.release[ids, :T],
+        dep=bank.dep[ids, :T],
+        keep_frac=bank.keep_frac[ids, :T],
+        protocol_id=bank.protocol_id[ids, :T],
+        profile=bank.profile[ids, :T],
+        leg_valid=bank.leg_valid[ids, :T],
+        leg_proc=bank.leg_proc[ids, :T, :P],
+        proc_link=bank.proc_link[ids, :P, :L],
+        leg_link=bank.leg_link[ids, :T, :L],
+        bandwidth=bank.bandwidth[ids, :L],
+        bg_mu=bank.bg_mu[ids, :L],
+        bg_sigma=bank.bg_sigma[ids, :L],
+        bg_period=bank.bg_period[ids, :L],
+        link_valid=bank.link_valid[ids, :L],
+        max_ticks=bank.max_ticks[ids],
+        n_legs=bank.n_legs[ids],
+        n_procs=bank.n_procs[ids],
+        n_links=bank.n_links[ids],
+        protocol_names=list(bank.protocol_names),
+        names=[bank.names[int(i)] for i in ids],
+        tables=[bank.tables[int(i)] for i in ids] if bank.tables else [],
     )
 
 

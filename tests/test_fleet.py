@@ -1,0 +1,355 @@
+"""The Fleet façade: compile caching, run dispatch, streaming trace reuse,
+and compiled-fleet persistence.
+
+Contracts pinned here:
+
+- ``Fleet.run`` is exactly ``simulate_bank`` on the fleet's bank (stable
+  scenario order, theta/``SimParams``/None all resolve to the same params
+  the underlying layers build);
+- ``Fleet.stream`` over K fixed-pad chunks costs exactly the first chunk's
+  traces (0 retraces afterwards) and every chunk bit-matches a standalone
+  ``simulate_bank`` of the same chunk bank under the documented key
+  schedule — including a padded partial tail chunk;
+- ``Fleet.save``/``Fleet.load`` round-trip a ``BucketedBank`` whose
+  ``simulate_bank`` output bit-matches the original;
+- ``engine.reset_bank_trace_count(clear_caches=True)`` clears the
+  fleet-level compile cache (order-independent trace assertions).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.calibration import make_theta_mapper
+from repro.core.engine import (
+    count_bank_traces,
+    make_bank_params,
+    reset_bank_trace_count,
+    simulate_bank,
+)
+from repro.core.fleet import Fleet, StreamChunk
+from repro.core.scenarios import sample_scenarios
+from repro.core.workload import BucketedBank, ScenarioBank, compile_bank
+
+RESULT_FIELDS = ("transfer_time", "size_mb", "conth_mb", "conpr_mb", "done",
+                 "ticks", "profile", "start_tick")
+
+
+def _keys(n, r=2, seed=0):
+    return jax.random.split(jax.random.PRNGKey(seed), n * r).reshape(n, r, 2)
+
+
+def _assert_bitwise_equal(a, b, msg=""):
+    for f in RESULT_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(a, f)), np.asarray(getattr(b, f)),
+            err_msg=f"{msg}{f}",
+        )
+
+
+# ---------------------------------------------------------------------------
+# run dispatch
+# ---------------------------------------------------------------------------
+
+def test_run_matches_simulate_bank():
+    fleet = Fleet.from_scenarios(n=4, seed=0, max_ticks=20_000)
+    keys = _keys(4, 2)
+    res = fleet.run(keys=keys, leap=True)
+    ref = simulate_bank(fleet.bank, make_bank_params(fleet.bank), keys, leap=True)
+    _assert_bitwise_equal(res, ref, msg="run vs simulate_bank ")
+
+
+def test_run_theta_uses_unified_mapper():
+    fleet = Fleet.from_scenarios(["wlcg-remote", "bursty"], n=3, seed=1,
+                                 max_ticks=20_000)
+    theta = jnp.array([0.04, 3.0, 0.5])
+    keys = _keys(3, 2, seed=1)
+    res = fleet.run(theta, keys=keys)
+    ref = simulate_bank(
+        fleet.bank, make_theta_mapper(fleet.bank, "webdav")(theta), keys
+    )
+    _assert_bitwise_equal(res, ref, msg="theta run ")
+
+
+def test_run_replica_key_split():
+    fleet = Fleet.from_scenarios(n=2, seed=2, max_ticks=10_000)
+    key = jax.random.PRNGKey(7)
+    res = fleet.run(replicas=3, key=key)
+    keys = jax.random.split(key, 2 * 3).reshape(2, 3, 2)
+    ref = fleet.run(keys=keys)
+    _assert_bitwise_equal(res, ref, msg="key split ")
+
+
+def test_resolve_params_rejects_garbage():
+    fleet = Fleet.from_scenarios(n=2, seed=0, max_ticks=5_000)
+    with pytest.raises(TypeError, match="params_or_theta"):
+        fleet.run(jnp.zeros((4,)))
+
+
+# ---------------------------------------------------------------------------
+# streaming: fixed pads, one shared trace, bit-matching chunks
+# ---------------------------------------------------------------------------
+
+def test_stream_reuses_first_chunk_trace_and_bit_matches():
+    """>= 3 chunks through one fixed-pad trace; every chunk reproducible
+    standalone via the documented key schedule."""
+    pairs = sample_scenarios(n=12, seed=3)
+    fleet = Fleet.from_pairs(pairs, max_ticks=20_000)
+    key0 = jax.random.PRNGKey(11)
+
+    reset_bank_trace_count()
+    with count_bank_traces() as first:
+        chunks = [
+            c for c in fleet.stream(iter(pairs[:4]), chunk=4, key=key0,
+                                    replicas=2, leap=True, max_ticks=20_000)
+        ]
+    first_count = first.count
+    assert first_count >= 1
+
+    with count_bank_traces() as rest:
+        chunks = [
+            c for c in fleet.stream(iter(pairs), chunk=4, key=key0,
+                                    replicas=2, leap=True, max_ticks=20_000)
+        ]
+    assert len(chunks) == 3
+    assert rest.count == 0, "chunks 1..K must all reuse the first-chunk trace"
+    assert all(isinstance(c, StreamChunk) and len(c.names) == 4 for c in chunks)
+
+    # per-chunk bit-match under the documented key schedule
+    key = key0
+    for i, chunk in enumerate(chunks):
+        key, sub = jax.random.split(key)
+        keys = jax.random.split(sub, 4 * 2).reshape(4, 2, 2)
+        cbank = compile_bank(
+            pairs[4 * i: 4 * (i + 1)], max_ticks=20_000,
+            pad_legs=fleet.pad_legs, pad_procs=fleet.pad_procs,
+            pad_links=fleet.pad_links,
+        )
+        ref = simulate_bank(cbank, make_bank_params(cbank), keys, leap=True)
+        _assert_bitwise_equal(chunk.result, ref, msg=f"chunk {i} ")
+        assert chunk.names == [c.name for _, c in pairs[4 * i: 4 * (i + 1)]]
+
+
+def test_stream_partial_tail_chunk_keeps_shape_and_trace():
+    pairs = sample_scenarios(n=10, seed=4)
+    fleet = Fleet.from_pairs(pairs, max_ticks=20_000)
+    reset_bank_trace_count()
+    with count_bank_traces() as tr:
+        chunks = list(fleet.stream(iter(pairs), chunk=4, leap=True))
+    assert [len(c.names) for c in chunks] == [4, 4, 2]
+    # the padded tail ran through the same 4-wide trace, then was sliced
+    assert chunks[-1].result.transfer_time.shape[0] == 2
+    with count_bank_traces() as again:
+        list(fleet.stream(iter(pairs), chunk=4, leap=True))
+    assert again.count == 0
+
+
+def test_stream_default_ticks_do_not_truncate_long_scenarios():
+    """A fleet compiled with a tiny tick bound must not silently truncate
+    streamed campaigns: the default max_ticks=None resolves to each
+    streamed scenario's safe upper bound, so every real leg finishes."""
+    pairs = sample_scenarios(n=4, seed=14)
+    fleet = Fleet.from_pairs(pairs, max_ticks=3)  # would cut everything off
+    truncated = fleet.run(leap=True)
+    valid = np.asarray(fleet.bank.leg_valid)[:, None, :]
+    assert not np.asarray(truncated.done)[np.broadcast_to(valid, truncated.done.shape)].all()
+    for chunk in fleet.stream(iter(pairs), chunk=2, leap=True):
+        v = np.asarray(chunk.bank.leg_valid)[: len(chunk.names), None, :]
+        done = np.asarray(chunk.result.done)
+        assert done[np.broadcast_to(v, done.shape)].all(), chunk.names
+
+
+def test_stream_rejects_oversized_scenario_and_fixed_params():
+    small = Fleet.from_pairs(sample_scenarios(n=2, seed=5), max_ticks=5_000)
+    big_pairs = sample_scenarios(n=8, seed=6, scale=3.0)
+    with pytest.raises(ValueError, match="outgrew the fleet pads"):
+        list(small.stream(iter(big_pairs), chunk=2))
+    # argument validation is eager, not deferred to the first next()
+    with pytest.raises(TypeError, match="per chunk"):
+        small.stream(iter(big_pairs), chunk=2, params_or_theta=small.params())
+    with pytest.raises(ValueError, match="chunk must be positive"):
+        small.stream(iter(big_pairs), chunk=0)
+
+
+def test_stream_theta_tolerates_protocol_free_chunks():
+    """A theta stream over chunks whose local protocol namespace lacks the
+    calibrated protocol must apply a no-op overhead mask (like such
+    scenarios get inside a union-namespace bank), not raise mid-stream."""
+    pairs = sample_scenarios(["stagein", "placement"], n=2, seed=15)
+    fleet = Fleet.from_pairs(pairs, max_ticks=20_000)
+    theta = jnp.array([0.05, 2.0, 0.0])
+    assert "s3" not in fleet.bank.protocol_names  # the hazard case
+    params = make_theta_mapper(fleet.bank, "s3", missing_ok=True)(theta)
+    ref = simulate_bank(fleet.bank, params, _keys(2, 1, seed=15), leap=True)
+    chunks = list(fleet.stream(iter(pairs), chunk=2, params_or_theta=theta,
+                               protocol="s3", leap=True, max_ticks=20_000))
+    for i in range(2):
+        nt = int(fleet.bank.n_legs[i])
+        # sigma=0 theta: deterministic, so different key schedules agree
+        np.testing.assert_allclose(
+            np.asarray(chunks[0].result.transfer_time)[i, 0, :nt],
+            np.asarray(ref.transfer_time)[i, 0, :nt],
+            rtol=1e-5, atol=1e-5,
+        )
+
+
+def test_theta_mapper_rejects_wrong_source_type():
+    fleet = Fleet.from_scenarios(n=2, seed=16, max_ticks=5_000, n_buckets=2)
+    with pytest.raises(TypeError, match="LegTable, ScenarioBank, or Fleet"):
+        make_theta_mapper(fleet.bank.buckets[0])  # BankBucket, not a bank
+    with pytest.raises(ValueError, match="missing_ok"):
+        make_theta_mapper(fleet.bank, "no-such-protocol")
+
+
+def test_run_rejects_mismatched_keys():
+    fleet = Fleet.from_pairs(sample_scenarios(n=4, seed=5), max_ticks=5_000,
+                             n_buckets=2)
+    with pytest.raises(ValueError, match="n_scenarios=4"):
+        fleet.run(keys=_keys(3, 2))  # bucketed scatter would clamp silently
+    with pytest.raises(ValueError, match="replicas=8"):
+        fleet.run(replicas=8, keys=_keys(4, 2))  # keys win; conflict is loud
+
+
+def test_from_scenarios_cache_hit_skips_sampling(monkeypatch):
+    from repro.core import fleet as fleet_mod
+
+    f1 = Fleet.from_scenarios(n=2, seed=17, max_ticks=5_000)
+    def boom(*a, **kw):  # the memoized hit path must not regenerate pairs
+        raise AssertionError("sample_scenarios called on cache hit")
+    monkeypatch.setattr(fleet_mod, "sample_scenarios", boom)
+    f2 = Fleet.from_scenarios(n=2, seed=17, max_ticks=5_000)
+    assert f2.bank is f1.bank
+
+
+# ---------------------------------------------------------------------------
+# persistence
+# ---------------------------------------------------------------------------
+
+def test_save_load_roundtrips_bucketed_bank(tmp_path):
+    fleet = Fleet.from_pairs(
+        sample_scenarios(n=8, seed=7), max_ticks=20_000, n_buckets=3,
+        leap=True, lowering="vmap",
+    )
+    assert isinstance(fleet.bank, BucketedBank)
+    path = fleet.save(str(tmp_path / "fleet"))
+    loaded = Fleet.load(path)
+
+    # run defaults persist; bank arrays and bucket structure are bit-equal
+    assert loaded.leap is True and loaded.lowering == "vmap"
+    assert isinstance(loaded.bank, BucketedBank)
+    assert loaded.names == fleet.names
+    assert loaded.bank.protocol_names == fleet.bank.protocol_names
+    np.testing.assert_array_equal(loaded.bank.bucket_of, fleet.bank.bucket_of)
+    np.testing.assert_array_equal(loaded.bank.slot_of, fleet.bank.slot_of)
+    assert loaded.bucket_pad_floors == fleet.bucket_pad_floors
+    for lb, fb in zip(loaded.bank.buckets, fleet.bank.buckets):
+        np.testing.assert_array_equal(lb.scenario_ids, fb.scenario_ids)
+        np.testing.assert_array_equal(lb.bank.size_mb, fb.bank.size_mb)
+        np.testing.assert_array_equal(lb.bank.max_ticks, fb.bank.max_ticks)
+
+    # simulate_bank output bit-matches the original compile
+    keys = _keys(8, 2, seed=7)
+    res_orig = simulate_bank(
+        fleet.bank, make_bank_params(fleet.bank), keys, leap=True
+    )
+    res_load = simulate_bank(
+        loaded.bank, make_bank_params(loaded.bank), keys, leap=True
+    )
+    _assert_bitwise_equal(res_orig, res_load, msg="save/load ")
+
+    # source tables are not persisted: oracle access fails loudly
+    with pytest.raises(ValueError, match="no source tables"):
+        loaded.bank.scenario_table(0)
+
+
+def test_save_load_roundtrips_monolithic_bank(tmp_path):
+    fleet = Fleet.from_scenarios(n=3, seed=8, max_ticks=10_000)
+    loaded = Fleet.load(fleet.save(str(tmp_path / "mono")))
+    assert isinstance(loaded.bank, ScenarioBank)
+    assert not isinstance(loaded.bank, BucketedBank)
+    keys = _keys(3, 1, seed=8)
+    _assert_bitwise_equal(
+        fleet.run(keys=keys), loaded.run(keys=keys), msg="mono save/load "
+    )
+
+
+# ---------------------------------------------------------------------------
+# fleet-level compile cache
+# ---------------------------------------------------------------------------
+
+def test_from_scenarios_memoizes_bank_until_reset():
+    f1 = Fleet.from_scenarios(n=2, seed=9, max_ticks=5_000)
+    f2 = Fleet.from_scenarios(n=2, seed=9, max_ticks=5_000)
+    assert f2.bank is f1.bank, "same recipe must reuse the compiled bank"
+    f3 = Fleet.from_scenarios(n=2, seed=9, max_ticks=6_000)
+    assert f3.bank is not f1.bank, "different recipe must recompile"
+    reset_bank_trace_count()  # clear_caches=True drops the compile cache too
+    f4 = Fleet.from_scenarios(n=2, seed=9, max_ticks=5_000)
+    assert f4.bank is not f1.bank
+
+
+def test_from_pairs_cache_key_and_from_table_identity():
+    pairs = sample_scenarios(n=2, seed=10)
+    f1 = Fleet.from_pairs(pairs, max_ticks=5_000, cache_key="bench-fleet")
+    f2 = Fleet.from_pairs(pairs, max_ticks=5_000, cache_key="bench-fleet")
+    assert f2.bank is f1.bank
+    table = f1.bank.scenario_table(0)
+    t1 = Fleet.from_table(table, max_ticks=5_000)
+    t2 = Fleet.from_table(table, max_ticks=5_000)
+    assert t2.bank is t1.bank
+    assert t1.n_scenarios == 1 and t1.pad_legs == table.n_legs
+
+
+def test_compile_cache_is_bounded_fifo():
+    from repro.core import fleet as fleet_mod
+
+    reset_bank_trace_count()  # start from an empty cache
+    for i in range(fleet_mod._COMPILE_CACHE_MAX + 8):
+        fleet_mod._cache_put(("unit", i), i)
+    assert len(fleet_mod._compile_cache) == fleet_mod._COMPILE_CACHE_MAX
+    # oldest entries evicted first, newest retained
+    assert ("unit", 0) not in fleet_mod._compile_cache
+    assert ("unit", fleet_mod._COMPILE_CACHE_MAX + 7) in fleet_mod._compile_cache
+    reset_bank_trace_count()
+    assert not fleet_mod._compile_cache
+
+
+def test_from_pairs_cache_key_folds_compile_knobs():
+    """One cache_key reused with different ticks/pads/bucketing must
+    recompile, never alias the first compile."""
+    pairs = sample_scenarios(n=4, seed=11)
+    f1 = Fleet.from_pairs(pairs, max_ticks=5_000, cache_key="k")
+    f2 = Fleet.from_pairs(pairs, max_ticks=6_000, cache_key="k")
+    f3 = Fleet.from_pairs(pairs, max_ticks=5_000, cache_key="k", n_buckets=2)
+    f4 = Fleet.from_pairs(pairs, max_ticks=5_000, cache_key="k",
+                          pad_floors=(64, 64, 8))
+    assert f2.bank is not f1.bank
+    assert f3.bank is not f1.bank and isinstance(f3.bank, BucketedBank)
+    assert f4.bank is not f1.bank and f4.pad_legs == 64
+
+
+def test_subset_bank_rejects_pads_beyond_parent():
+    from repro.core.workload import subset_bank
+
+    bank = Fleet.from_scenarios(n=3, seed=12, max_ticks=5_000).bank
+    with pytest.raises(ValueError, match="exceed the parent pads"):
+        subset_bank(bank, [0, 1], pad_legs=bank.pad_legs + 7)
+
+
+def test_calibration_shims_honor_fleet_leap_default():
+    """presimulate_bank/validate_bank with a Fleet must inherit the fleet's
+    leap setting when leap is not given (bare banks keep the old defaults)."""
+    from repro.core.calibration import PriorBox, presimulate_bank
+
+    fleet = Fleet.from_scenarios(["wlcg-remote"], n=2, seed=13,
+                                 max_ticks=20_000, leap=True)
+    key = jax.random.PRNGKey(0)
+    t1, x1, _ = presimulate_bank(fleet, PriorBox.paper(), key, 2, batch=2)
+    t2, x2, _ = presimulate_bank(fleet, PriorBox.paper(), key, 2, batch=2,
+                                 leap=True)
+    np.testing.assert_array_equal(np.asarray(x1), np.asarray(x2))
+    v1 = fleet.validate(jnp.array([0.02, 2.0, 0.0]), jnp.asarray(x1[0]),
+                        key, n_sims=2)
+    v2 = fleet.validate(jnp.array([0.02, 2.0, 0.0]), jnp.asarray(x1[0]),
+                        key, n_sims=2, leap=True)
+    np.testing.assert_array_equal(v1["coefficients"], v2["coefficients"])
