@@ -1,56 +1,91 @@
-"""End-to-end Section-5 reproduction at laptop scale through the ``Fleet``
-façade: compile the production workload, presimulate + train the AALR
-classifier + run likelihood-free MCMC (``fleet.calibrate``), validate
-against x_true (``fleet.validate``).
+"""Amortized Section-5 calibration at laptop scale through the ``Fleet``
+façade: compile a small fleet of production-workload *variants* (different
+sampling seeds / observation budgets -> different campaign shapes), generate
+per-scenario observations from a known theta, then train ONE
+scenario-conditioned AALR classifier (``fleet.calibrate(amortized=True)``)
+whose conditional MCMC yields a per-scenario theta* table — no per-scenario
+retraining — and validate that table (``fleet.validate``).
 
-    PYTHONPATH=src python examples/calibrate_wlcg.py [--fast]
+    PYTHONPATH=src python examples/calibrate_wlcg.py [--fast | --smoke]
 
-Full-paper-scale settings (12.7M presims, 263 epochs, 1.1M MCMC states,
-16k validation sims) are flags on repro.launch.calibrate.
+``--smoke`` is the CI guard: tiny presim/MCMC budgets, asserts the amortized
+pipeline end to end. Full-paper-scale settings (12.7M presims, 263 epochs,
+1.1M MCMC states, 16k validation sims) are flags on repro.launch.calibrate.
 """
 import argparse
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import CalibrationConfig, Fleet
-from repro.core.workload import wlcg_production_workload
+from repro import AmortizedPosterior, CalibrationConfig, Fleet
+from repro.core.workload import SUMMARY_FEATURE_NAMES, wlcg_production_workload
 
 ap = argparse.ArgumentParser()
-ap.add_argument("--fast", action="store_true", help="CI-speed settings")
+ap.add_argument("--fast", action="store_true", help="reduced settings")
+ap.add_argument("--smoke", action="store_true",
+                help="CI-speed budgets + assertions")
 args = ap.parse_args()
 
-# compile -> simulate -> calibrate, one session object
+# one production workload per scenario family: vary the sampling seed and the
+# observation budget so every member has a distinct campaign shape — the
+# heterogeneity the amortized posterior conditions on
+variants = [(0, 106), (1, 80), (2, 54)] if not args.smoke else [(0, 30), (1, 20)]
+pairs = []
+for s, o in variants:
+    grid, camp = wlcg_production_workload(seed=s, n_observations=o)
+    pairs.append((grid, dataclasses.replace(camp, name=f"wlcg-prod-s{s}-n{o}")))
 fleet = Fleet.from_pairs(
-    [wlcg_production_workload(seed=0)], max_ticks=30_000, leap=True
+    pairs,
+    max_ticks=30_000 if not args.smoke else 10_000,
+    leap=True,
 )
+print(fleet)
+print("scenario context features",
+      dict(zip(("scenarios", "features"), fleet.summary_features().shape)),
+      "(columns:", ", ".join(SUMMARY_FEATURE_NAMES[:3]), "...)")
 
 theta_true = jnp.array([0.02, 36.9, 14.4])  # the "true system"
-# Eq.-1 coefficients of the true system, averaged over stochastic replicas
-# to stabilize the observation. Intentional asymmetry vs the old per-table
-# example: fleet.calibrate trains the AALR ratio on single-realization
-# presim coefficients (scenario diversity, not replicate averaging, is the
-# fleet path's variance control), so the ratio is evaluated at a
-# lower-variance observed statistic than it was trained on.
+# per-scenario Eq.-1 observations of the true system, replicate-averaged to
+# stabilize x_true (the presim tuples stay single-realization; scenario
+# diversity is the fleet path's variance control)
 x_true = jnp.asarray(
-    fleet.coefficients(theta_true, replicas=8, key=jax.random.PRNGKey(42))
-).mean(axis=1)[0]
-print("x_true (a, b, c) =", np.asarray(x_true))
+    fleet.coefficients(theta_true, replicas=8 if not args.smoke else 2,
+                       key=jax.random.PRNGKey(42))
+).mean(axis=1)  # [N, 3]
+print("x_true per scenario (a, b, c):\n", np.asarray(x_true))
 
-cfg = (CalibrationConfig(n_presim=4096, epochs=100, batch_size=1024, lr=3e-4,
-                         n_chains=4, n_mcmc=5000, burn_in=1000, step_size=0.1)
-       if args.fast else
-       CalibrationConfig(n_presim=8192, epochs=160, batch_size=2048, lr=3e-4,
-                         n_chains=4, n_mcmc=10_000, burn_in=2000,
-                         step_size=0.1))
-result = fleet.calibrate(x_true, jax.random.PRNGKey(0), cfg)
-print("theta* (marginal modes) =", np.asarray(result.theta_star))
-print("theta_MAP (ratio argmax) =", np.asarray(result.theta_map),
-      "   [true: 0.02, 36.9, 14.4]")
+if args.smoke:
+    cfg = CalibrationConfig(n_presim=192, epochs=8, batch_size=128, lr=3e-4,
+                            n_chains=2, n_mcmc=500, burn_in=200)
+elif args.fast:
+    cfg = CalibrationConfig(n_presim=4096, epochs=100, batch_size=1024,
+                            lr=3e-4, n_chains=4, n_mcmc=5000, burn_in=1000)
+else:
+    cfg = CalibrationConfig(n_presim=8192, epochs=160, batch_size=2048,
+                            lr=3e-4, n_chains=4, n_mcmc=10_000, burn_in=2000)
 
-val = fleet.validate(result.theta_map, x_true, jax.random.PRNGKey(9),
-                     n_sims=16 if args.fast else 64)
-print("validation median coef:", val["median_coef"][0],
-      " mean |E|:", val["mean_abs_error"][0],
-      " best sum E: {:.1f}%".format(100 * val["sum_error"].min()))
+# ONE conditional classifier over every scenario variant; each scenario's
+# posterior is then a cheap MCMC against the shared net
+post = fleet.calibrate(x_true, jax.random.PRNGKey(0), cfg, amortized=True)
+assert isinstance(post, AmortizedPosterior)
+print(f"conditional classifier: acc={post.train_accuracy:.3f} "
+      f"({post.n_scenarios} scenarios, {post.n_features} context features)")
+
+theta_star = post.theta_star_all(jax.random.PRNGKey(1))  # [N, 3]
+print("amortized theta* per scenario   [true: 0.02, 36.9, 14.4]")
+for name, row in zip(post.scenario_names, np.asarray(theta_star)):
+    print(f"  {name}: {row}")
+
+val = fleet.validate(theta_star, x_true, jax.random.PRNGKey(9),
+                     n_sims=4 if args.smoke else (16 if args.fast else 64))
+print("validation mean |E| per scenario:\n", val["mean_abs_error"])
+print("best sum E: {:.1f}%".format(100 * val["sum_error"].min()))
+
+if args.smoke:
+    ts = np.asarray(theta_star)
+    assert ts.shape == (fleet.n_scenarios, 3)
+    assert np.isfinite(ts).all()
+    assert np.isfinite(val["mean_abs_error"]).all()
+    print("amortized smoke OK")

@@ -17,6 +17,7 @@ __version__ = "0.1.0"
 # primitives it composes, importable without reaching into ``repro.core.*``.
 # (Must come after the RNG pin above so every entry point inherits it.)
 from repro.core.calibration import (  # noqa: E402
+    AmortizedPosterior,
     CalibrationConfig,
     PriorBox,
     calibrate,
@@ -51,6 +52,7 @@ from repro.core.workload import (  # noqa: E402
     ScenarioBank,
     compile_bank,
     compile_campaign,
+    summary_features,
     wlcg_production_workload,
 )
 
@@ -71,6 +73,7 @@ __all__ = [
     "make_scenario",
     "sample_scenarios",
     "family_names",
+    "summary_features",
     "wlcg_production_workload",
     # engine
     "SimSpec",
@@ -86,6 +89,7 @@ __all__ = [
     # calibration
     "PriorBox",
     "CalibrationConfig",
+    "AmortizedPosterior",
     "calibrate",
     "make_theta_mapper",
     "presimulate_bank",

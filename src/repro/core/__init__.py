@@ -33,8 +33,11 @@ Architecture (model -> compile -> engine -> fleet façade -> consumers):
    ``calibrate`` / ``validate`` / ``coefficients``).
 5. **Consumers** — :mod:`calibration` (likelihood-free inference over theta
    *and* scenario variants; its bank entry points accept fleets and
-   dispatch through ``Fleet.run``), :mod:`scheduler` (access-profile
-   optimization; population fitness is one fleet run over a super-table),
-   :mod:`dataset` / :mod:`regression` (the paper's observation datasets and
-   Eq. 1-2 fits).
+   dispatch through ``Fleet.run``; ``calibrate(amortized=True)`` conditions
+   the AALR classifier on ``workload.summary_features`` so one
+   :class:`~repro.core.calibration.AmortizedPosterior` serves every
+   scenario family — per-scenario theta* via conditional MCMC, no
+   retraining), :mod:`scheduler` (access-profile optimization; population
+   fitness is one fleet run over a super-table), :mod:`dataset` /
+   :mod:`regression` (the paper's observation datasets and Eq. 1-2 fits).
 """

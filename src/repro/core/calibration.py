@@ -33,7 +33,12 @@ from repro.core.engine import (
     simulate,
 )
 from repro.core.regression import coefficient_error, fit_eq1
-from repro.core.workload import LegTable, ProfileTag, ScenarioBank
+from repro.core.workload import (
+    LegTable,
+    ProfileTag,
+    ScenarioBank,
+    summary_features,
+)
 from repro.utils import get_logger
 
 log = get_logger("calibration")
@@ -42,6 +47,7 @@ __all__ = [
     "PriorBox",
     "CalibrationConfig",
     "CalibrationResult",
+    "AmortizedPosterior",
     "simulate_coefficients",
     "presimulate",
     "presimulate_bank",
@@ -104,6 +110,111 @@ class CalibrationResult(NamedTuple):
     rhat: jax.Array = None  # [3] split-R-hat convergence diagnostic
 
 
+@dataclasses.dataclass
+class AmortizedPosterior:
+    """One scenario-conditioned AALR posterior serving every scenario family.
+
+    Produced by ``calibrate(..., amortized=True)`` /
+    ``Fleet.calibrate(amortized=True)``: a single conditional ratio net
+    (``log r(x | theta, s)``, trained once over the whole presimulation
+    fleet) plus the per-scenario context feature table and the prior. Any
+    scenario's posterior is then a (cheap) MCMC over the fixed net — no
+    per-scenario retraining. Scenarios are addressed by bank index or name.
+    """
+
+    classifier_params: dict
+    features: jax.Array  # [N, F] unit-projected scenario context table
+    prior: PriorBox
+    x_true_unit: jax.Array  # [3] shared or [N, 3] per-scenario observation
+    cfg: CalibrationConfig  # MCMC budget knobs for the sampling methods
+    scenario_names: Tuple[str, ...]
+    train_loss: float = float("nan")
+    train_accuracy: float = float("nan")
+
+    @property
+    def n_scenarios(self) -> int:
+        return int(self.features.shape[0])
+
+    @property
+    def n_features(self) -> int:
+        return int(self.features.shape[1])
+
+    def _index(self, scenario) -> int:
+        if isinstance(scenario, str):
+            try:
+                return self.scenario_names.index(scenario)
+            except ValueError:
+                raise KeyError(
+                    f"unknown scenario {scenario!r}; known: "
+                    f"{list(self.scenario_names)}"
+                ) from None
+        i = int(scenario)
+        if not 0 <= i < self.n_scenarios:
+            raise IndexError(
+                f"scenario {i} out of range for {self.n_scenarios} scenarios"
+            )
+        return i
+
+    def _x_unit(self, i: int) -> jax.Array:
+        x = jnp.asarray(self.x_true_unit)
+        return x[i] if x.ndim == 2 else x
+
+    def mcmc(
+        self,
+        scenario,
+        key: Optional[jax.Array] = None,
+        *,
+        n_samples: Optional[int] = None,
+        burn_in: Optional[int] = None,
+    ) -> Tuple[mcmc_lib.MCMCResult, jax.Array]:
+        """Raw conditional chains for one scenario: the pooled unit-box
+        :class:`~repro.core.mcmc.MCMCResult` plus the split-R-hat vector."""
+        i = self._index(scenario)
+        key = jax.random.PRNGKey(0) if key is None else key
+        cfg = self.cfg
+        return mcmc_lib.run_chains(
+            self.classifier_params,
+            self._x_unit(i),
+            key,
+            n_chains=cfg.n_chains,
+            n_samples=cfg.n_mcmc if n_samples is None else n_samples,
+            burn_in=cfg.burn_in if burn_in is None else burn_in,
+            step_size=cfg.step_size,
+            adaptive=cfg.adaptive_mcmc,
+            context=self.features[i],
+        )
+
+    def sample(self, scenario, key: Optional[jax.Array] = None, **mcmc_opts) -> jax.Array:
+        """Posterior samples for one scenario in physical units ``[S, 3]``."""
+        res, _ = self.mcmc(scenario, key, **mcmc_opts)
+        return self.prior.from_unit(res.samples)
+
+    def theta_star(self, scenario, key: Optional[jax.Array] = None, **mcmc_opts) -> jax.Array:
+        """Per-axis marginal posterior modes (the paper's theta*) for one
+        scenario, in physical units ``[3]``."""
+        res, rhat = self.mcmc(scenario, key, **mcmc_opts)
+        if float(jnp.max(rhat)) > 1.2:
+            log.warning(
+                "amortized MCMC for scenario %r may not have converged "
+                "(max R-hat %.2f) — increase n_mcmc/burn_in",
+                scenario, float(jnp.max(rhat)),
+            )
+        return self.prior.from_unit(mcmc_lib.posterior_mode(res.samples))
+
+    def theta_star_all(self, key: Optional[jax.Array] = None, **mcmc_opts) -> jax.Array:
+        """theta* for every scenario of the fleet: ``[N, 3]`` physical units
+        (one conditional MCMC per scenario over the same trained net; the
+        chain shapes are identical so every scenario after the first reuses
+        the jit trace). Feed this matrix straight into ``Fleet.validate``."""
+        key = jax.random.PRNGKey(0) if key is None else key
+        return jnp.stack(
+            [
+                self.theta_star(i, jax.random.fold_in(key, i), **mcmc_opts)
+                for i in range(self.n_scenarios)
+            ]
+        )
+
+
 def _theta_to_params(keep: jax.Array, protocol_mask: jax.Array,
                      link_scale: jax.Array, theta: jax.Array) -> SimParams:
     """Map theta = (overhead, mu, sigma) onto SimParams: the calibrated
@@ -113,8 +224,21 @@ def _theta_to_params(keep: jax.Array, protocol_mask: jax.Array,
     One mapper serves both layouts: per-campaign (``keep``/``mask`` = [T],
     ``link_scale`` = ones [L]) and bank-wide (``[N, T]`` / ``[N, L]`` with
     ``link_scale`` = the validity mask, so padded links keep zero moments and
-    their — already zero-bandwidth — fair shares stay untouched)."""
-    overhead, mu, sigma = theta[0], theta[1], theta[2]
+    their — already zero-bandwidth — fair shares stay untouched). On the
+    bank-wide layout ``theta`` may also be a **per-scenario** ``[N, 3]``
+    matrix (e.g. ``AmortizedPosterior.theta_star_all()``): row ``i`` then
+    parameterizes scenario ``i`` alone."""
+    theta = jnp.asarray(theta)
+    if theta.ndim == 2:
+        if protocol_mask.ndim != 2 or theta.shape[0] != protocol_mask.shape[0]:
+            raise ValueError(
+                f"per-scenario theta {theta.shape} needs a bank-wide mapper "
+                f"over {protocol_mask.shape[0] if protocol_mask.ndim == 2 else 1} "
+                "scenarios"
+            )
+        overhead, mu, sigma = theta[:, 0:1], theta[:, 1:2], theta[:, 2:3]
+    else:
+        overhead, mu, sigma = theta[0], theta[1], theta[2]
     return SimParams(
         keep_frac=jnp.where(protocol_mask, 1.0 - overhead, keep),
         bg_mu=mu * link_scale,
@@ -362,7 +486,10 @@ def validate_bank(
 ) -> dict:
     """Validation sweep over scenario variants: ``n_sims`` stochastic
     replicas of every scenario under theta*, per-sim Eq.-1 fits, Eq.-6
-    errors. The whole (scenario x replica) sweep is one banked batch;
+    errors. ``theta_star`` may be one shared ``[3]`` vector or the
+    per-scenario ``[N, 3]`` matrix of ``AmortizedPosterior.theta_star_all()``
+    (row ``i`` parameterizes scenario ``i``), mirroring the ``x_true``
+    broadcast. The whole (scenario x replica) sweep is one banked batch;
     ``bank`` may be a bank or a :class:`~repro.core.fleet.Fleet`
     (:meth:`Fleet.validate` is the façade entry point). ``leap=None``
     resolves to the fleet's run default; a bare bank keeps the historical
@@ -397,6 +524,22 @@ def validate_bank(
     }
 
 
+def _feature_source(table) -> ScenarioBank:
+    """The bank whose scenarios define the amortized context table (accepts
+    a :class:`ScenarioBank`/:class:`BucketedBank` or a fleet)."""
+    from repro.core.fleet import Fleet  # deferred: fleet sits above us
+
+    if isinstance(table, Fleet):
+        return table.bank
+    if isinstance(table, ScenarioBank):
+        return table
+    raise TypeError(
+        "amortized calibration needs a ScenarioBank/Fleet to derive scenario "
+        f"features from (or an explicit features=[N, F] table); got "
+        f"{type(table)!r}"
+    )
+
+
 def calibrate(
     spec: SimSpec,
     table: LegTable,
@@ -407,19 +550,39 @@ def calibrate(
     *,
     protocol: str = "webdav",
     backend: Optional[str] = None,
-    presim: Optional[Tuple[jax.Array, jax.Array]] = None,
-) -> CalibrationResult:
+    presim: Optional[Tuple[jax.Array, ...]] = None,
+    amortized: bool = False,
+    features: Optional[jax.Array] = None,
+) -> "CalibrationResult | AmortizedPosterior":
     """Full likelihood-free calibration of (overhead, mu, sigma).
 
     With an externally supplied ``presim = (theta, x_sim)`` the simulation
     stage is skipped entirely: ``spec`` may then be ``None`` and ``table``
     may be any :func:`make_theta_mapper` source (a bank/fleet included) —
     this is how :meth:`repro.Fleet.calibrate` reuses the pipeline over
-    scenario variants."""
+    scenario variants.
+
+    ``amortized=True`` trains a **scenario-conditioned** ratio net instead:
+    ``presim`` must then be the 3-tuple ``(theta, x_sim, scenario_id)``
+    (:func:`presimulate_bank`'s layout), each tuple is paired with its
+    scenario's context row — ``features[scenario_id]``, where ``features``
+    defaults to :func:`repro.core.workload.summary_features` of ``table``
+    (a bank or fleet) — and the return value is an
+    :class:`AmortizedPosterior` whose sampling methods run the per-scenario
+    conditional MCMC on demand (no retraining per scenario). A trailing
+    ``scenario_id`` column in ``presim`` is ignored when ``amortized`` is
+    False, so ``Fleet.presimulate`` output can be passed through verbatim."""
     prior = prior or PriorBox.paper()
     key, k_pre, k_train, k_mcmc = jax.random.split(key, 4)
 
+    scenario_id = None
     if presim is None:
+        if amortized:
+            raise ValueError(
+                "amortized calibration needs presim=(theta, x_sim, "
+                "scenario_id) — presimulate over a fleet first "
+                "(Fleet.calibrate(amortized=True) does both)"
+            )
         log.info("presimulating %d tuples (x%d replicates)",
                  cfg.n_presim, cfg.n_replicates)
         theta, x_sim = presimulate(
@@ -427,8 +590,15 @@ def calibrate(
             cfg.n_presim, backend=backend,
             n_replicates=cfg.n_replicates, leap=cfg.use_leap,
         )
+    elif len(presim) == 3:
+        theta, x_sim, scenario_id = presim
     else:
         theta, x_sim = presim
+    if amortized and scenario_id is None:
+        raise ValueError(
+            "amortized calibration needs the scenario_id column: pass "
+            "presim=(theta, x_sim, scenario_id)"
+        )
 
     x_low = jnp.asarray(cfg.x_low)
     x_high = jnp.asarray(cfg.x_high)
@@ -437,15 +607,68 @@ def calibrate(
     theta_u = prior.to_unit(theta)
     x_u = proj_x(x_sim)
 
-    log.info("training AALR classifier (%d tuples, %d epochs)",
-             theta.shape[0], cfg.epochs)
-    clf_cfg = ClassifierConfig(theta_dim=3, x_dim=3, lr=cfg.lr)
+    # one training block serves both modes: the unconditional path is the
+    # context_dim=0 special case (pinned bit-compatible by the tests)
+    feats = context = None
+    names = ()
+    if amortized:
+        if features is not None:
+            feats = jnp.asarray(features, jnp.float32)
+            try:  # a bank/fleet still labels the scenarios, if one was given
+                names = tuple(_feature_source(table).names)
+            except TypeError:
+                names = ()
+        else:
+            source = _feature_source(table)
+            feats = jnp.asarray(summary_features(source), jnp.float32)
+            names = tuple(source.names)
+        if len(names) != feats.shape[0]:
+            names = tuple(f"scenario{i}" for i in range(feats.shape[0]))
+        scenario_id = jnp.asarray(scenario_id, jnp.int32)
+        if (
+            int(jnp.min(scenario_id)) < 0  # negative ids would wrap silently
+            or int(jnp.max(scenario_id)) >= feats.shape[0]
+        ):
+            raise ValueError(
+                f"scenario_id spans [{int(jnp.min(scenario_id))}, "
+                f"{int(jnp.max(scenario_id))}] but the feature table has "
+                f"{feats.shape[0]} scenarios"
+            )
+        x_true = jnp.asarray(x_true)
+        if x_true.ndim not in (1, 2) or x_true.shape[-1] != 3 or (
+            x_true.ndim == 2 and x_true.shape[0] != feats.shape[0]
+        ):
+            raise ValueError(
+                "amortized x_true must be one shared [3] observation or a "
+                f"per-scenario [{feats.shape[0]}, 3] matrix (row i pairs "
+                f"with scenario i); got shape {x_true.shape}"
+            )
+        context = feats[scenario_id]  # [n, F], paired with (theta, x) rows
+
+    ctx_dim = 0 if feats is None else int(feats.shape[1])
+    log.info("training %sAALR classifier (%d tuples, %d epochs%s)",
+             "conditional " if amortized else "", theta.shape[0], cfg.epochs,
+             f", {ctx_dim} context features" if amortized else "")
+    clf_cfg = ClassifierConfig(theta_dim=3, x_dim=3, context_dim=ctx_dim,
+                               lr=cfg.lr)
     params, metrics = train_classifier(
-        k_train, clf_cfg, theta_u, x_u,
+        k_train, clf_cfg, theta_u, x_u, context,
         epochs=cfg.epochs, batch_size=cfg.batch_size,
     )
     log.info("classifier: loss=%.4f acc=%.3f",
              float(metrics.loss), float(metrics.accuracy))
+
+    if amortized:
+        return AmortizedPosterior(
+            classifier_params=params,
+            features=feats,
+            prior=prior,
+            x_true_unit=proj_x(x_true),
+            cfg=cfg,
+            scenario_names=names,
+            train_loss=float(metrics.loss),
+            train_accuracy=float(metrics.accuracy),
+        )
 
     res, rhat = mcmc_lib.run_chains(
         params, proj_x(x_true), k_mcmc,

@@ -21,8 +21,11 @@ WLCG-like workloads — previously required wiring four layers by hand:
   cross-process reuse;
 - **calibrate** — :meth:`Fleet.presimulate` / :meth:`Fleet.calibrate` /
   :meth:`Fleet.validate` run the likelihood-free pipeline over the fleet's
-  scenario variants; :meth:`Fleet.coefficients` is the Eq.-1 summary
-  statistic of any run.
+  scenario variants; ``calibrate(amortized=True)`` conditions the ratio net
+  on :meth:`Fleet.summary_features` and returns an
+  :class:`~repro.core.calibration.AmortizedPosterior` (per-scenario theta*
+  from one trained net, no retraining); :meth:`Fleet.coefficients` is the
+  Eq.-1 summary statistic of any run.
 
 The compile cache is registered with
 :func:`repro.core.engine.register_cache_clear_hook`, so
@@ -67,6 +70,7 @@ from repro.core.workload import (
     compile_bank,
     compile_campaign,
     subset_bank,
+    summary_features,
 )
 
 __all__ = ["Fleet", "StreamChunk", "clear_compile_cache"]
@@ -357,9 +361,10 @@ class Fleet:
         self, params_or_theta, protocol: str, bank: Optional[ScenarioBank] = None
     ) -> SimParams:
         """``None`` -> base bank params; ``SimParams`` -> as given; a
-        ``[3]`` theta vector -> the calibration mapper; a callable ->
-        ``params_or_theta(bank)`` (the hook :meth:`stream` uses to rebuild
-        chunk-shaped params)."""
+        ``[3]`` theta vector (or per-scenario ``[N, 3]`` matrix, e.g.
+        ``AmortizedPosterior.theta_star_all()``) -> the calibration mapper;
+        a callable -> ``params_or_theta(bank)`` (the hook :meth:`stream`
+        uses to rebuild chunk-shaped params)."""
         target = bank if bank is not None else self.bank
         if params_or_theta is None:
             if bank is None:
@@ -370,9 +375,10 @@ class Fleet:
         if callable(params_or_theta):
             return params_or_theta(target)
         theta = jnp.asarray(params_or_theta)
-        if theta.shape != (3,):
+        if theta.shape not in ((3,), (target.n_scenarios, 3)):
             raise TypeError(
                 "params_or_theta must be SimParams, a theta [3] vector, a "
+                f"per-scenario theta [{target.n_scenarios}, 3] matrix, a "
                 f"callable bank -> SimParams, or None; got shape {theta.shape}"
             )
         if bank is None:
@@ -684,6 +690,12 @@ class Fleet:
             backend=self.backend if backend is None else backend,
         )
 
+    def summary_features(self) -> np.ndarray:
+        """Per-scenario campaign summary features ``[N, F]`` (the amortized
+        calibration's context table; see
+        :func:`repro.core.workload.summary_features`)."""
+        return summary_features(self.bank)
+
     def calibrate(
         self,
         x_true: jax.Array,
@@ -693,13 +705,22 @@ class Fleet:
         *,
         protocol: str = "webdav",
         batch: int = 128,
-    ) -> "calibration_lib.CalibrationResult":
+        amortized: bool = False,
+    ) -> "calibration_lib.CalibrationResult | calibration_lib.AmortizedPosterior":
         """Likelihood-free calibration of theta = (overhead, mu, sigma)
         against ``x_true``, presimulating over **all** scenario variants of
         the fleet (``cfg.n_presim`` total tuples, scenario-major) so the
         learned ratio is robust to campaign shape. Classifier training, MCMC
         and the theta* extraction follow
         :func:`repro.core.calibration.calibrate`.
+
+        ``amortized=True`` keeps the ``scenario_id`` column paired with each
+        tuple and conditions the classifier on
+        :meth:`summary_features` — the return value is then an
+        :class:`~repro.core.calibration.AmortizedPosterior`: one trained net
+        whose ``theta_star(scenario)`` / ``theta_star_all()`` serve every
+        scenario family of the fleet without retraining (``x_true`` may be
+        one shared ``[3]`` observation or per-scenario ``[N, 3]``).
 
         The banked presimulation draws single-realization coefficient
         tuples: ``cfg.n_replicates > 1`` (the per-campaign variance
@@ -716,7 +737,7 @@ class Fleet:
         prior = prior if prior is not None else calibration_lib.PriorBox.paper()
         key, k_pre = jax.random.split(key)
         n_per = max(1, -(-cfg.n_presim // self.n_scenarios))
-        theta, x_sim, _sid = self.presimulate(
+        theta, x_sim, sid = self.presimulate(
             prior, k_pre, n_per, protocol=protocol,
             batch=min(batch, n_per), leap=cfg.use_leap,
         )
@@ -728,7 +749,8 @@ class Fleet:
             cfg,
             prior,
             protocol=protocol,
-            presim=(theta, x_sim),
+            presim=(theta, x_sim, sid) if amortized else (theta, x_sim),
+            amortized=amortized,
         )
 
     def validate(
@@ -743,8 +765,10 @@ class Fleet:
         backend: Optional[str] = None,
     ) -> dict:
         """Validation sweep under theta* across every scenario (see
-        :func:`repro.core.calibration.validate_bank`); ``leap=None``
-        resolves to this fleet's run default."""
+        :func:`repro.core.calibration.validate_bank`). ``theta_star`` may be
+        one shared ``[3]`` vector or the per-scenario ``[N, 3]`` matrix of
+        ``AmortizedPosterior.theta_star_all()``, and ``x_true`` broadcasts
+        the same way; ``leap=None`` resolves to this fleet's run default."""
         return calibration_lib.validate_bank(
             self,
             theta_star,

@@ -9,6 +9,12 @@ the trained AALR classifier (paper Section 5):
 
 with a uniform (box) prior, so the prior term reduces to a bounds check.
 The chain is a ``jax.lax.scan``; multiple chains are ``vmap``-ed.
+
+A scenario-conditional classifier (``ClassifierConfig(context_dim > 0)``)
+is served by passing the scenario's fixed ``context`` feature vector: every
+ratio evaluation of the chain set then conditions on that scenario, turning
+one trained net into a per-scenario posterior sampler (the amortized path of
+:class:`repro.core.calibration.AmortizedPosterior`).
 """
 from __future__ import annotations
 
@@ -29,6 +35,14 @@ class MCMCResult(NamedTuple):
     log_ratios: jax.Array  # [n_samples]
 
 
+def _ratio_fn(params, x_true_unit, context):
+    """theta -> log r; late-binds the module's ``log_ratio`` (tests stub it
+    with 3-arg callables, so the context is only passed when present)."""
+    if context is None:
+        return lambda t: log_ratio(params, t, x_true_unit)
+    return lambda t: log_ratio(params, t, x_true_unit, context)
+
+
 @functools.partial(
     jax.jit, static_argnames=("n_samples", "burn_in")
 )
@@ -41,23 +55,26 @@ def run_chain(
     burn_in: int = 1_000,
     step_size: float = 0.05,
     init: jax.Array | None = None,
+    context: jax.Array | None = None,
 ) -> MCMCResult:
     """One Metropolis-Hastings chain in the unit-box theta space.
 
     The paper starts "in the middle of the prior bounds" (init=0.5), samples
     100k burn-in states and 1M samples at full scale; callers choose the
-    scale.
+    scale. ``context`` is the fixed scenario feature vector of a conditional
+    classifier (None for the unconditional net).
     """
     theta_dim = 3 if init is None else init.shape[-1]
     theta0 = jnp.full((theta_dim,), 0.5) if init is None else init
-    lr0 = log_ratio(params, theta0, x_true_unit)
+    ratio = _ratio_fn(params, x_true_unit, context)
+    lr0 = ratio(theta0)
 
     def step(carry, k):
         theta_t, lr_t = carry
         k1, k2 = jax.random.split(k)
         prop = theta_t + step_size * jax.random.normal(k1, theta_t.shape)
         in_prior = jnp.all((prop > 0.0) & (prop < 1.0))
-        lr_prop = log_ratio(params, prop, x_true_unit)
+        lr_prop = ratio(prop)
         log_alpha = jnp.where(in_prior, lr_prop - lr_t, -jnp.inf)
         accept = jnp.log(jax.random.uniform(k2)) < log_alpha
         theta_new = jnp.where(accept, prop, theta_t)
@@ -83,24 +100,28 @@ def run_chains(
     burn_in: int = 1_000,
     step_size: float = 0.05,
     adaptive: bool = False,
+    context: jax.Array | None = None,
 ) -> Tuple[MCMCResult, jax.Array]:
     """vmap-ed independent chains with dispersed inits. Returns the pooled
     result plus the split-R-hat per dimension (overdispersed starts make it a
-    meaningful convergence check)."""
+    meaningful convergence check). ``context`` (one fixed vector for the
+    whole chain set) selects the scenario of a conditional classifier."""
     keys = jax.random.split(key, n_chains + 1)
-    theta_dim = params["w0"].shape[0] - x_true_unit.shape[-1]
+    ctx_dim = 0 if context is None else context.shape[-1]
+    theta_dim = params["w0"].shape[0] - x_true_unit.shape[-1] - ctx_dim
     inits = jax.random.uniform(
         keys[0], (n_chains, theta_dim), minval=0.2, maxval=0.8
     )
     if adaptive:
         chain = lambda k, i: run_chain_adaptive(
             params, x_true_unit, k,
-            n_samples=n_samples, burn_in=burn_in, init=i,
+            n_samples=n_samples, burn_in=burn_in, init=i, context=context,
         )
     else:
         chain = lambda k, i: run_chain(
             params, x_true_unit, k,
             n_samples=n_samples, burn_in=burn_in, step_size=step_size, init=i,
+            context=context,
         )
     res = jax.vmap(chain)(keys[1:], inits)
     rhat = gelman_rubin(res.samples)
@@ -141,13 +162,16 @@ def run_chain_adaptive(
     burn_in: int = 1_000,
     target: float = 0.44,  # optimal 1-3d Metropolis acceptance
     init: jax.Array | None = None,
+    context: jax.Array | None = None,
 ) -> MCMCResult:
     """Metropolis-Hastings with Robbins-Monro step-size adaptation during
     burn-in (frozen afterwards, preserving detailed balance for the kept
-    samples). Beyond-paper: removes the hand-tuned step_size knob."""
+    samples). Beyond-paper: removes the hand-tuned step_size knob.
+    ``context`` follows :func:`run_chain`."""
     theta_dim = 3 if init is None else init.shape[-1]
     theta0 = jnp.full((theta_dim,), 0.5) if init is None else init
-    lr0 = log_ratio(params, theta0, x_true_unit)
+    ratio = _ratio_fn(params, x_true_unit, context)
+    lr0 = ratio(theta0)
 
     def step(carry, inp):
         theta_t, lr_t, log_step, i = carry
@@ -155,7 +179,7 @@ def run_chain_adaptive(
         step_size = jnp.exp(log_step)
         prop = theta_t + step_size * jax.random.normal(k1, theta_t.shape)
         in_prior = jnp.all((prop > 0.0) & (prop < 1.0))
-        lr_prop = log_ratio(params, prop, x_true_unit)
+        lr_prop = ratio(prop)
         log_alpha = jnp.where(in_prior, lr_prop - lr_t, -jnp.inf)
         accept = jnp.log(jax.random.uniform(k2)) < log_alpha
         theta_new = jnp.where(accept, prop, theta_t)

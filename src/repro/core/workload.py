@@ -39,6 +39,8 @@ __all__ = [
     "compile_bank",
     "bank_from_tables",
     "subset_bank",
+    "summary_features",
+    "SUMMARY_FEATURE_NAMES",
     "wlcg_production_workload",
     "ProfileTag",
     "PAD_PROFILE",
@@ -715,6 +717,82 @@ def subset_bank(
         names=[bank.names[int(i)] for i in ids],
         tables=[bank.tables[int(i)] for i in ids] if bank.tables else [],
     )
+
+
+# ---------------------------------------------------------------------------
+# Scenario summary features (the amortized-calibration context vector)
+# ---------------------------------------------------------------------------
+
+#: Names of the per-scenario campaign summary features, in column order.
+SUMMARY_FEATURE_NAMES = (
+    "log1p_n_remote_legs",
+    "log1p_n_stagein_legs",
+    "log1p_n_placement_legs",
+    "log1p_total_mb",
+    "log1p_remote_mb",
+    "log1p_n_links",
+    "log1p_bw_mean",
+    "log1p_bw_std",
+    "log1p_max_ticks",
+)
+
+# Fixed, data-independent projection bounds onto (0, 1) — the context-space
+# twin of ``CalibrationConfig.x_low/x_high``: a classifier trained on one
+# fleet must see the same normalization when conditioned on any other
+# fleet's scenarios, so the bounds cannot depend on the bank at hand. All
+# features are log1p-compressed first; the highs cover ~1e5 legs, ~1e9 MB,
+# ~1e4 links, ~1e7 MB/s link bandwidth, and ~1e9 ticks.
+_SUMMARY_LOW = np.zeros(len(SUMMARY_FEATURE_NAMES), np.float32)
+_SUMMARY_HIGH = np.array(
+    [12.0, 12.0, 12.0, 21.0, 21.0, 10.0, 17.0, 17.0, 21.0], np.float32
+)
+
+
+def summary_features(bank: ScenarioBank) -> np.ndarray:
+    """Per-scenario campaign summary features ``[N, F]`` projected to (0, 1).
+
+    The scenario context vector of the amortized (scenario-conditioned) AALR
+    calibration: per-profile leg counts, total/remote transferred bytes, link
+    count, bandwidth moments over valid links, and the per-scenario
+    ``max_ticks`` bound — every column ``log1p``-compressed and clipped onto
+    (0, 1) with the fixed bounds above (see :data:`SUMMARY_FEATURE_NAMES`).
+
+    Works on any bank layout: a monolithic :class:`ScenarioBank`, a
+    :class:`BucketedBank` (its inherited stacked arrays keep the original
+    scenario order, so no scatter is needed — bucket sub-banks agree column
+    for column), and banks loaded from disk via ``Fleet.load`` (only the
+    persisted dense arrays are touched, never the source tables).
+    """
+    lv = np.asarray(bank.leg_valid, bool)  # [N, T]
+    prof = np.asarray(bank.profile)
+    size = np.asarray(bank.size_mb, np.float64)
+    linkv = np.asarray(bank.link_valid, bool)  # [N, L]
+    bw = np.asarray(bank.bandwidth, np.float64)
+
+    remote = lv & (prof == ProfileTag.REMOTE)
+    stagein = lv & (prof == ProfileTag.STAGE_IN)
+    placement = lv & (prof == ProfileTag.PLACEMENT)
+    n_links = linkv.sum(axis=1)
+    denom = np.maximum(n_links, 1).astype(np.float64)
+    bw_mean = (bw * linkv).sum(axis=1) / denom
+    bw_var = (((bw - bw_mean[:, None]) ** 2) * linkv).sum(axis=1) / denom
+    raw = np.stack(
+        [
+            remote.sum(axis=1),
+            stagein.sum(axis=1),
+            placement.sum(axis=1),
+            (size * lv).sum(axis=1),
+            (size * remote).sum(axis=1),
+            n_links,
+            bw_mean,
+            np.sqrt(np.maximum(bw_var, 0.0)),
+            np.asarray(bank.max_ticks, np.float64),
+        ],
+        axis=1,
+    )
+    f = np.log1p(raw)
+    unit = (f - _SUMMARY_LOW) / (_SUMMARY_HIGH - _SUMMARY_LOW)
+    return np.clip(unit, 0.0, 1.0).astype(np.float32)
 
 
 # ---------------------------------------------------------------------------

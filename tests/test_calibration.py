@@ -13,16 +13,20 @@ from repro.core.calibration import (
     calibrate,
     make_theta_mapper,
     presimulate,
+    presimulate_bank,
     simulate_coefficients,
     validate,
 )
 from repro.core.classifier import (
     ClassifierConfig,
     classifier_logit,
+    epoch_batch_starts,
     init_classifier,
     train_classifier,
 )
 from repro.core.engine import SimSpec
+from repro.core.fleet import Fleet
+from repro.core.scenarios import sample_scenarios
 from repro.core.workload import compile_campaign, wlcg_production_workload
 
 
@@ -128,6 +132,107 @@ def test_end_to_end_calibration_recovers_theta():
     # at this reduced budget (paper reaches ~5% at 12.7M presims)
     assert val["mean_abs_error"][0] < 0.35, val["mean_abs_error"]
     assert val["mean_abs_error"][1] < 0.50, val["mean_abs_error"]
+
+
+def test_gelman_rubin_known_value():
+    """Closed-form split-R-hat on hand-built chains. With chains whose split
+    halves are [0,2,0,2]-patterned (within-var 4/3) and half-chain means
+    (1, 1, 6, 6): B = 100/3, var_hat = 28/3, R-hat = sqrt(7). Means
+    (1, 1, 2, 2) give var_hat = W = 4/3, R-hat exactly 1."""
+    base = np.tile([0.0, 2.0], 4)  # one chain of 8: halves are [0,2,0,2]
+    dim0 = np.stack([base, base + 5.0])  # half-chain means 1, 1, 6, 6
+    dim1 = np.stack([base, base + 1.0])  # half-chain means 1, 1, 2, 2
+    chains = jnp.asarray(np.stack([dim0, dim1], axis=-1))  # [2, 8, 2]
+    rhat = np.asarray(mcmc_lib.gelman_rubin(chains))
+    np.testing.assert_allclose(rhat, [np.sqrt(7.0), 1.0], rtol=1e-6)
+
+
+def test_posterior_mode_bimodal():
+    """The per-axis mode must pick the taller peak of a bimodal posterior,
+    not the (prior-ward) mean."""
+    rng = np.random.RandomState(0)
+    col0 = np.concatenate(
+        [0.25 + 0.02 * rng.standard_normal(3000),
+         0.75 + 0.02 * rng.standard_normal(1000)]
+    )
+    col1 = np.concatenate(
+        [0.25 + 0.02 * rng.standard_normal(1000),
+         0.75 + 0.02 * rng.standard_normal(3000)]
+    )
+    samples = jnp.asarray(np.clip(np.stack([col0, col1], axis=1), 0.0, 1.0))
+    mode = np.asarray(mcmc_lib.posterior_mode(samples))
+    np.testing.assert_allclose(mode, [0.25, 0.75], atol=0.05)
+    # the mean would sit between the modes — the estimator must not
+    assert abs(float(samples[:, 0].mean()) - mode[0]) > 0.08
+
+
+def test_epoch_batch_starts_covers_the_tail():
+    """``n % batch_size`` tail tuples must train every epoch: the final
+    step shifts back to end at n instead of being dropped."""
+    np.testing.assert_array_equal(epoch_batch_starts(10, 4), [0, 4, 6])
+    np.testing.assert_array_equal(epoch_batch_starts(8, 4), [0, 4])  # legacy
+    np.testing.assert_array_equal(epoch_batch_starts(5, 5), [0])
+    for n, b in [(10, 4), (1000, 512), (7, 3), (4097, 4096), (512, 512)]:
+        starts = epoch_batch_starts(n, b)
+        assert len(starts) == -(-n // b), (n, b)
+        covered = np.zeros(n, bool)
+        for s in starts:
+            assert 0 <= s and s + b <= n, (n, b, s)
+            covered[s:s + b] = True
+        assert covered.all(), (n, b)
+    with pytest.raises(ValueError):
+        epoch_batch_starts(3, 4)
+
+
+def test_train_epoch_runs_the_tail_step():
+    """The epoch scan takes ceil(n / batch) optimizer steps — observable on
+    the AdamW step counter — so the tail minibatch is actually trained."""
+    from repro.core.classifier import _train_epoch
+    from repro.train.optimizer import AdamWConfig, adamw_init
+
+    cfg = ClassifierConfig(hidden=8, depth=2)
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    params = init_classifier(k1, cfg)
+    opt = adamw_init(params, AdamWConfig(lr=1e-3))
+    n, b = 10, 4
+    theta = jax.random.uniform(k2, (n, 3))
+    x = jax.random.uniform(k3, (n, 3))
+    ctx = jnp.zeros((n, 0))
+    _, opt2, metrics = _train_epoch(
+        params, opt, theta, x, ctx, jax.random.PRNGKey(1),
+        jnp.asarray(1e-3), batch_size=b,
+    )
+    assert int(opt2.step) == 3  # ceil(10/4): 2 full steps + the tail step
+    assert np.isfinite(float(metrics.loss))
+
+
+def test_presimulate_bank_scenario_major_layout_and_bucket_parity():
+    """Regression pin for the presim layout the amortized training pairs
+    contexts by: ``(theta, x_sim, scenario_id)`` is scenario-major
+    (scenario i owns rows [i*n_per, (i+1)*n_per)), and the bucketed layout
+    reproduces the monolithic scenario_id/theta columns exactly — a silent
+    reorder here would mispair contexts and poison the conditional net."""
+    pairs = sample_scenarios(["wlcg-remote"], n=4, seed=0)
+    mono = Fleet.from_pairs(pairs, max_ticks=6_000, leap=True)
+    buck = Fleet.from_pairs(pairs, max_ticks=6_000, n_buckets=2, leap=True)
+    prior = PriorBox.paper()
+    key = jax.random.PRNGKey(3)
+    n_per = 6
+    t1, x1, s1 = presimulate_bank(mono, prior, key, n_per, batch=3)
+    t2, x2, s2 = presimulate_bank(buck, prior, key, n_per, batch=3)
+
+    assert t1.shape == (4 * n_per, 3) and x1.shape == (4 * n_per, 3)
+    np.testing.assert_array_equal(
+        np.asarray(s1), np.repeat(np.arange(4, dtype=np.int32), n_per)
+    )
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    # same key -> identical prior draws, in the identical scenario-major
+    # order, on both layouts
+    np.testing.assert_array_equal(np.asarray(t1), np.asarray(t2))
+    # and the simulated coefficients agree across layouts row for row
+    np.testing.assert_allclose(
+        np.asarray(x1), np.asarray(x2), rtol=1e-4, atol=1e-4
+    )
 
 
 def test_gelman_rubin_detects_mixing():

@@ -1,0 +1,271 @@
+"""Amortized (scenario-conditioned) calibration: one conditional AALR net
+serving every scenario family.
+
+Pins the three contracts of the amortized subsystem:
+
+- the conditional classifier with ``context_dim=0`` is **bit-compatible**
+  with the historical unconditional classifier;
+- ``workload.summary_features`` produces one (0,1)-projected context table
+  per scenario, identical across bank layouts (monolithic / bucketed /
+  loaded from disk);
+- a single conditional net trained over a two-family toy problem yields
+  **distinct, correct** per-family posteriors through
+  ``AmortizedPosterior.theta_star_all()`` — no per-scenario retraining.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.calibration import (
+    AmortizedPosterior,
+    CalibrationConfig,
+    PriorBox,
+    calibrate,
+)
+from repro.core.classifier import (
+    ClassifierConfig,
+    classifier_logit,
+    init_classifier,
+    train_classifier,
+)
+from repro.core.fleet import Fleet
+from repro.core.workload import (
+    SUMMARY_FEATURE_NAMES,
+    compile_bank,
+    summary_features,
+)
+from repro.core.scenarios import sample_scenarios
+
+
+def _toy_two_family(n_per=4096, noise=0.05, seed=0):
+    """Two synthetic scenario families with opposite theta -> x maps:
+    family 0 simulates ``x = theta + eps``, family 1 ``x = 1 - theta + eps``.
+    A shared observation x_true therefore implies *different* true thetas
+    per family — exactly what an unconditional ratio cannot represent."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    theta = jax.random.uniform(k1, (2 * n_per, 3))
+    eps = noise * jax.random.normal(k2, (2 * n_per, 3))
+    sid = jnp.repeat(jnp.arange(2, dtype=jnp.int32), n_per)
+    x = jnp.where((sid == 0)[:, None], theta + eps, 1.0 - theta + eps)
+    feats = jnp.array([[0.0], [1.0]], jnp.float32)
+    return theta, x, sid, feats, k3
+
+
+# ---------------------------------------------------------------------------
+# context_dim=0 bit-compatibility with the unconditional classifier
+# ---------------------------------------------------------------------------
+
+def test_context_dim_zero_is_bitwise_unconditional():
+    """The refactored (conditional-capable) trainer with no context must
+    reproduce the unconditional path bitwise — same init, same key stream,
+    same logits — whether context is omitted or passed as a zero-width
+    array."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    n = 2048
+    theta = jax.random.uniform(k1, (n, 3))
+    x = theta + 0.05 * jax.random.normal(k2, (n, 3))
+    cfg = ClassifierConfig()
+    assert cfg.context_dim == 0 and cfg.in_dim == 6
+
+    p_none, m_none = train_classifier(k3, cfg, theta, x, epochs=2, batch_size=512)
+    p_zero, m_zero = train_classifier(
+        k3, cfg, theta, x, jnp.zeros((n, 0)), epochs=2, batch_size=512
+    )
+    for name in p_none:
+        np.testing.assert_array_equal(
+            np.asarray(p_none[name]), np.asarray(p_zero[name]), err_msg=name
+        )
+    assert float(m_none.loss) == float(m_zero.loss)
+
+    logits_none = np.asarray(classifier_logit(p_none, theta[:64], x[:64]))
+    logits_zero = np.asarray(
+        classifier_logit(p_none, theta[:64], x[:64], jnp.zeros((64, 0)))
+    )
+    np.testing.assert_array_equal(logits_none, logits_zero)
+
+
+def test_conditional_logit_uses_context():
+    """A conditional net's logit must actually depend on the context input
+    (the conditioning is wired through, not dropped)."""
+    cfg = ClassifierConfig(context_dim=4)
+    assert cfg.in_dim == 10
+    params = init_classifier(jax.random.PRNGKey(0), cfg)
+    theta = jnp.full((3,), 0.4)
+    x = jnp.full((3,), 0.6)
+    l0 = float(classifier_logit(params, theta, x, jnp.zeros((4,))))
+    l1 = float(classifier_logit(params, theta, x, jnp.ones((4,))))
+    assert l0 != l1
+
+
+def test_train_classifier_rejects_mismatched_context():
+    theta = jnp.zeros((32, 3))
+    x = jnp.zeros((32, 3))
+    with pytest.raises(ValueError, match="context_dim"):
+        train_classifier(
+            jax.random.PRNGKey(0), ClassifierConfig(context_dim=2),
+            theta, x, jnp.zeros((32, 5)), epochs=1, batch_size=16,
+        )
+    with pytest.raises(ValueError, match="context must be"):
+        train_classifier(
+            jax.random.PRNGKey(0), ClassifierConfig(context_dim=2),
+            theta, x, jnp.zeros((8, 2)), epochs=1, batch_size=16,
+        )
+
+
+# ---------------------------------------------------------------------------
+# scenario summary features
+# ---------------------------------------------------------------------------
+
+def test_summary_features_shape_range_and_layout_parity():
+    """[N, F] in (0, 1); identical for the monolithic and the bucketed
+    layout of one fleet (the bucketed bank's inherited arrays keep the
+    original scenario order), and for each bucket's own sub-bank rows."""
+    pairs = sample_scenarios(n=6, seed=3)
+    mono = compile_bank(pairs, max_ticks=10_000)
+    buck = compile_bank(pairs, max_ticks=10_000, n_buckets=2)
+
+    f_mono = summary_features(mono)
+    assert f_mono.shape == (6, len(SUMMARY_FEATURE_NAMES))
+    assert f_mono.dtype == np.float32
+    assert (f_mono >= 0.0).all() and (f_mono <= 1.0).all()
+    # distinct campaign shapes must map to distinct context rows
+    assert len({tuple(row) for row in f_mono.round(6)}) > 1
+
+    f_buck = summary_features(buck)
+    np.testing.assert_array_equal(f_mono, f_buck)
+    for bucket in buck.buckets:
+        np.testing.assert_allclose(
+            summary_features(bucket.bank), f_mono[bucket.scenario_ids],
+            rtol=0, atol=0,
+        )
+
+
+def test_summary_features_survive_save_load(tmp_path):
+    """Loaded fleets carry no source tables; features must come out of the
+    persisted dense arrays bit for bit."""
+    fleet = Fleet.from_pairs(sample_scenarios(n=4, seed=5), max_ticks=8_000)
+    f0 = fleet.summary_features()
+    fleet.save(str(tmp_path / "fleet"))
+    loaded = Fleet.load(str(tmp_path / "fleet"))
+    np.testing.assert_array_equal(f0, loaded.summary_features())
+
+
+# ---------------------------------------------------------------------------
+# the amortized posterior (acceptance: two-family toy)
+# ---------------------------------------------------------------------------
+
+def test_amortized_recovers_scenario_dependent_posterior():
+    """One conditional net, two synthetic families with different true
+    thetas for the same observation: ``theta_star_all()`` must separate the
+    families and land each near its truth. An unconditional ratio would
+    average the two maps and recover neither."""
+    theta, x, sid, feats, key = _toy_two_family()
+    prior = PriorBox(low=jnp.zeros(3), high=jnp.ones(3))
+    cfg = CalibrationConfig(
+        epochs=60, batch_size=1024, lr=3e-4, n_chains=4, n_mcmc=4000,
+        burn_in=1500, x_low=(0.0, 0.0, 0.0), x_high=(1.0, 1.0, 1.0),
+    )
+    x_true = jnp.full((3,), 0.3)  # family 0 truth: 0.3; family 1 truth: 0.7
+    post = calibrate(
+        None, None, x_true, key, cfg, prior,
+        presim=(theta, x, sid), amortized=True, features=feats,
+    )
+    assert isinstance(post, AmortizedPosterior)
+    assert post.n_scenarios == 2 and post.n_features == 1
+    assert post.train_accuracy > 0.9  # conditional dependence is learnable
+
+    ts = np.asarray(post.theta_star_all(jax.random.PRNGKey(5)))
+    assert ts.shape == (2, 3)
+    # each family lands within tolerance of its own truth ...
+    np.testing.assert_allclose(ts[0], 0.3, atol=0.17)
+    np.testing.assert_allclose(ts[1], 0.7, atol=0.17)
+    # ... and the amortized posterior separates the families decisively
+    assert (ts[1] - ts[0] > 0.25).all()
+
+    # posterior samples concentrate relative to the uniform prior (std 0.289)
+    s0 = np.asarray(post.sample(0, jax.random.PRNGKey(7)))
+    assert s0.shape[1] == 3
+    assert (s0.std(axis=0) < 0.2).all()
+
+    # scenario addressing: by index and by (default) name
+    t_by_name = np.asarray(post.theta_star("scenario0", jax.random.PRNGKey(9)))
+    t_by_idx = np.asarray(post.theta_star(0, jax.random.PRNGKey(9)))
+    np.testing.assert_array_equal(t_by_name, t_by_idx)
+    with pytest.raises(IndexError):
+        post.theta_star(2)
+
+
+def test_amortized_requires_scenario_ids():
+    theta = jnp.zeros((16, 3))
+    x = jnp.zeros((16, 3))
+    with pytest.raises(ValueError, match="scenario_id"):
+        calibrate(
+            None, None, jnp.zeros(3), jax.random.PRNGKey(0),
+            CalibrationConfig(), PriorBox(low=jnp.zeros(3), high=jnp.ones(3)),
+            presim=(theta, x), amortized=True,
+            features=jnp.zeros((1, 2)),
+        )
+    # out-of-range ids (negative ones would wrap in the feature gather)
+    for bad_sid in (jnp.full((16,), -1, jnp.int32),
+                    jnp.full((16,), 7, jnp.int32)):
+        with pytest.raises(ValueError, match="scenario_id spans"):
+            calibrate(
+                None, None, jnp.zeros(3), jax.random.PRNGKey(0),
+                CalibrationConfig(),
+                PriorBox(low=jnp.zeros(3), high=jnp.ones(3)),
+                presim=(theta, x, bad_sid), amortized=True,
+                features=jnp.zeros((2, 2)),
+            )
+
+
+def test_amortized_rejects_mispaired_x_true():
+    """A per-scenario observation matrix whose row count disagrees with the
+    feature table would silently condition scenarios on the wrong x_true —
+    reject it at train time."""
+    theta = jnp.zeros((16, 3))
+    x = jnp.zeros((16, 3))
+    sid = jnp.zeros((16,), jnp.int32)
+    prior = PriorBox(low=jnp.zeros(3), high=jnp.ones(3))
+    for bad in (jnp.zeros((3, 3)), jnp.zeros((2, 4, 3)), jnp.zeros((4,))):
+        with pytest.raises(ValueError, match="amortized x_true"):
+            calibrate(
+                None, None, bad, jax.random.PRNGKey(0),
+                CalibrationConfig(epochs=1, batch_size=16), prior,
+                presim=(theta, x, sid), amortized=True,
+                features=jnp.zeros((2, 2)),
+            )
+
+
+@pytest.mark.slow
+def test_amortized_fleet_end_to_end():
+    """A mixed fleet of real scenario variants through
+    ``Fleet.calibrate(amortized=True)``: one trained net yields a
+    per-scenario theta* table that ``Fleet.validate`` consumes via the
+    [N, 3] broadcast path."""
+    fleet = Fleet.from_pairs(
+        sample_scenarios(["wlcg-remote"], n=3, seed=0),
+        max_ticks=6_000, leap=True,
+    )
+    theta_true = jnp.array([0.02, 36.9, 14.4])
+    x_true = jnp.asarray(
+        fleet.coefficients(theta_true, replicas=4, key=jax.random.PRNGKey(1))
+    ).mean(axis=1)  # [N, 3] per-scenario observations
+    cfg = CalibrationConfig(
+        n_presim=384, epochs=30, batch_size=256, lr=3e-4,
+        n_chains=2, n_mcmc=1500, burn_in=500,
+    )
+    post = fleet.calibrate(x_true, jax.random.PRNGKey(0), cfg, amortized=True)
+    assert isinstance(post, AmortizedPosterior)
+    assert post.n_scenarios == fleet.n_scenarios
+    assert tuple(post.scenario_names) == tuple(fleet.names)
+
+    ts = post.theta_star_all(jax.random.PRNGKey(2))
+    assert ts.shape == (fleet.n_scenarios, 3)
+    prior = PriorBox.paper()
+    assert (np.asarray(ts) >= np.asarray(prior.low)).all()
+    assert (np.asarray(ts) <= np.asarray(prior.high)).all()
+
+    val = fleet.validate(ts, x_true, jax.random.PRNGKey(3), n_sims=4)
+    assert val["mean_abs_error"].shape == (fleet.n_scenarios, 3)
+    assert np.isfinite(val["mean_abs_error"]).all()

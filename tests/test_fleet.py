@@ -353,3 +353,27 @@ def test_calibration_shims_honor_fleet_leap_default():
     v2 = fleet.validate(jnp.array([0.02, 2.0, 0.0]), jnp.asarray(x1[0]),
                         key, n_sims=2, leap=True)
     np.testing.assert_array_equal(v1["coefficients"], v2["coefficients"])
+
+
+def test_run_accepts_per_scenario_theta_matrix():
+    """Fleet.run / the theta mapper take the amortized posterior's [N, 3]
+    theta* matrix: row i parameterizes scenario i alone, and rows equal to
+    a shared [3] theta reproduce the shared-theta run exactly."""
+    fleet = Fleet.from_scenarios(["wlcg-remote"], n=3, seed=21,
+                                 max_ticks=2_000, leap=True)
+    shared = jnp.array([0.02, 36.9, 14.4])
+    per_scn = jnp.tile(shared[None], (3, 1)).at[1, 1].set(80.0)
+    res_shared = fleet.run(shared, replicas=2)
+    res_matrix = fleet.run(per_scn, replicas=2)
+    for i in (0, 2):  # rows identical to the shared theta
+        np.testing.assert_allclose(
+            np.asarray(res_matrix.transfer_time[i]),
+            np.asarray(res_shared.transfer_time[i]), rtol=1e-5, atol=1e-5,
+        )
+    # the row with different background moments must actually differ
+    assert not np.allclose(
+        np.asarray(res_matrix.transfer_time[1]),
+        np.asarray(res_shared.transfer_time[1]),
+    )
+    with pytest.raises(TypeError, match="per-scenario theta"):
+        fleet.run(jnp.zeros((2, 3)))
