@@ -14,13 +14,18 @@ harness now drives end to end: compile with shared pad floors, run, stream).
 
 Emits ``BENCH_bank.json`` with cold (trace included — the cost scenario
 diversity actually incurs) and warm (all traces cached) walls, per-bucket
-warm throughput, the manual-banked-kernel vs vmap lowering delta on the
-monolithic bank, streaming-fleet walls, and the speedups future PRs must
-not regress: ``speedup_warm`` (bucketed warm vs cached loop),
-``speedup_fresh_fleet`` (steady-state scenario diversity),
-``bank_fresh_fleet_retraces`` and ``stream_retraces_after_first`` (both
-must stay 0 for fixed pad/bucket shapes). ``--smoke`` runs a tiny fleet
-through every section and the assertions without rewriting the JSON.
+warm throughput (tick bound, realized final tick, resolved window), the
+fused-window sweep (``window_sweep``) with
+``fused_vs_per_tick_speedup`` (auto window vs window=1 on the bucketed
+fleet), the manual-banked-kernel vs vmap lowering delta on the monolithic
+bank, streaming-fleet walls, and the speedups future PRs must not regress:
+``speedup_warm`` (bucketed warm vs cached loop), ``speedup_fresh_fleet``
+(steady-state scenario diversity), ``bank_fresh_fleet_retraces`` and
+``stream_retraces_after_first`` (both must stay 0 for fixed pad/bucket
+shapes). Windowed-vs-per-tick **bitwise** parity is asserted on every run.
+``--smoke`` runs a tiny fleet through every section and every assertion,
+writing the report to ``BENCH_smoke.json`` (the tracked
+``BENCH_bank.json`` is only rewritten by full runs).
 """
 from __future__ import annotations
 
@@ -39,26 +44,33 @@ def main() -> None:
     ap.add_argument("--replicas", type=int, default=4)
     ap.add_argument("--buckets", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--max-ticks", type=int, default=20_000)
+    ap.add_argument("--max-ticks", type=int, default=None,
+                    help="uniform tick cap; default: each scenario's own "
+                         "(bandwidth-aware) safe upper bound, which is what "
+                         "makes max_ticks bucketing meaningful")
     ap.add_argument("--leap", action=argparse.BooleanOptionalAction, default=True)
     ap.add_argument("--stream-chunks", type=int, default=4,
                     help="chunks the streaming section splits the fleet into")
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny fleet, all sections + assertions, no JSON write")
-    ap.add_argument("--out", default="BENCH_bank.json")
+                    help="tiny fleet, all sections + assertions; writes "
+                         "BENCH_smoke.json instead of the tracked report")
+    ap.add_argument("--out", default=None)
     args = ap.parse_args()
     if args.smoke:
         args.scenarios, args.replicas, args.buckets = 8, 2, 2
-        args.max_ticks = 2_000
         args.stream_chunks = 2
+    if args.out is None:
+        args.out = "BENCH_smoke.json" if args.smoke else "BENCH_bank.json"
 
     import jax
     import numpy as np
 
     from repro import Fleet
+    from repro.core import engine as engine_lib
     from repro.core.engine import (
         SimSpec,
         count_bank_traces,
+        default_tick_window,
         make_params,
         reset_bank_trace_count,
         simulate_batch,
@@ -145,21 +157,55 @@ def main() -> None:
     _, bank_warm = timed_warm(run_fleet)
     bank_traces = cold_traces.count
 
+    # ---- windowed vs per-tick: parity (bitwise) + the fused speedup -------
+    # parity is asserted at an explicit K>1 (not the auto default, which
+    # resolves to 1 on CPU hosts and would compare a program to itself);
+    # the reported window is the one the timed runs actually resolved
+    # (REPRO_TICK_WINDOW included), not just the backend default
+    window = engine_lib._resolve_window(None, args.leap)
+    res_k1 = fleet.run(keys=keys, window=1)
+    res_kw = fleet.run(keys=keys, window=16)
+    for f in ("transfer_time", "conth_mb", "conpr_mb", "done", "ticks",
+              "start_tick"):
+        for name, res in (("auto", bank_res), ("K=16", res_kw)):
+            a = np.asarray(getattr(res, f))
+            b = np.asarray(getattr(res_k1, f))
+            assert (a == b).all(), (
+                f"windowed ({name}) vs per-tick (K=1) mismatch in {f}: "
+                f"max |delta| = "
+                f"{np.abs(a.astype(np.float64) - b.astype(np.float64)).max()}"
+            )
+    _, bank_warm_k1 = timed_warm(lambda: fleet.run(keys=keys, window=1))
+
+    sweep_ks = [1, 16] if args.smoke else [1, 4, 8, 16, 32, 64]
+    window_sweep = []
+    for k in sweep_ks:
+        run_k = lambda: fleet.run(keys=keys, window=k)
+        timed(run_k)  # pay the per-window-size trace outside the timing
+        _, warm_k = timed_warm(run_k)
+        window_sweep.append({"window": k, "warm_s": round(warm_k, 4)})
+
     # per-bucket warm throughput: each sub-bank timed as its own dispatch
+    bank_ticks = np.asarray(bank_res.ticks)  # [N, R] realized final ticks
     per_bucket = []
     for bucket in bank.buckets:
         sub_fleet = Fleet(bucket.bank, leap=args.leap)
-        sub_keys = keys[np.asarray(bucket.scenario_ids)]
+        ids = np.asarray(bucket.scenario_ids)
+        sub_keys = keys[ids]
         run_sub = lambda: sub_fleet.run(keys=sub_keys)
         timed(run_sub)  # warm the (already cached) shape + params transfer
         _, sub_warm = timed_warm(run_sub)
         sub = bucket.bank
+        bound = int(sub.max_ticks.max())
         per_bucket.append({
             "scenarios": len(bucket.scenario_ids),
             "pad_legs": sub.pad_legs,
             "pad_procs": sub.pad_procs,
             "pad_links": sub.pad_links,
-            "tick_bound": int(sub.max_ticks.max()),
+            "tick_bound": bound,
+            "realized_ticks": int(bank_ticks[ids].max()),
+            # the window the engine actually resolved for this bucket
+            "window": engine_lib._clamp_window(window, bound),
             "warm_s": round(sub_warm, 4),
             "scenarios_per_sec": round(len(bucket.scenario_ids) / sub_warm, 2),
         })
@@ -206,14 +252,19 @@ def main() -> None:
         "pad_procs": bank.pad_procs,
         "pad_links": bank.pad_links,
         "leap": bool(args.leap),
+        "window": window,
         "bank_traces": bank_traces,
         "loop_cold_s": round(loop_cold, 3),
         "loop_warm_s": round(loop_warm, 3),
         "bank_cold_s": round(bank_cold, 3),
         "bank_warm_s": round(bank_warm, 3),
+        "bank_warm_k1_s": round(bank_warm_k1, 3),
+        "fused_vs_per_tick_speedup": round(bank_warm_k1 / bank_warm, 2),
+        "window_sweep": window_sweep,
         "vmap_mono_warm_s": round(vmap_mono_warm, 3),
         "banked_mono_warm_s": round(banked_mono_warm, 3),
         "banked_vs_vmap_speedup": round(vmap_mono_warm / banked_mono_warm, 2),
+        "realized_ticks": int(bank_ticks.max()),
         "per_bucket_warm": per_bucket,
         "scenarios_per_sec_loop_cold": round(n / loop_cold, 2),
         "scenarios_per_sec_bank_cold": round(n / bank_cold, 2),
@@ -232,9 +283,8 @@ def main() -> None:
         "speedup_warm": round(loop_warm / bank_warm, 2),
         "speedup_fresh_fleet": round(loop_fresh / bank_fresh, 2),
     }
-    if not args.smoke:
-        with open(args.out, "w") as f:
-            json.dump(report, f, indent=2)
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
     print(json.dumps(report, indent=2))
     # identically-shaped buckets share one jit trace, so the cold trace count
     # equals the number of *distinct* bucket shapes, not the bucket count

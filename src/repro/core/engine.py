@@ -35,6 +35,8 @@ __all__ = [
     "bank_spec",
     "make_bank_params",
     "simulate_bank",
+    "simulate_bank_stepped",
+    "default_tick_window",
     "bank_trace_count",
     "reset_bank_trace_count",
     "count_bank_traces",
@@ -132,7 +134,13 @@ class _Carry(NamedTuple):
     key: jax.Array
 
 
-def _leap_body(spec: SimSpec, params: SimParams, backend: Optional[str], c: _Carry) -> _Carry:
+def _leap_body(
+    spec: SimSpec,
+    params: SimParams,
+    backend: Optional[str],
+    c: _Carry,
+    alive: Optional[jax.Array] = None,
+) -> _Carry:
     """Event-leap tick body (beyond-paper, semantics-exact).
 
     Between events (a leg completing, a release tick, a background-load
@@ -142,16 +150,29 @@ def _leap_body(spec: SimSpec, params: SimParams, backend: Optional[str], c: _Car
     evaluation plus two small one-hot matmuls per window replaces ``dt``
     full tick evaluations; results are bit-comparable to the tick loop for
     deterministic background loads (see tests/benchmarks: ~10x).
+
+    ``alive`` (a scalar bool, batched under vmap) folds the while-loop
+    freeze into the update masks for windowed execution: with ``alive``
+    False the carry — clock, RNG key and background loads included — passes
+    through bit-identically to a frozen iteration, because a leg that is
+    forced inactive transfers nothing and every accumulator update is a
+    fixed point. ``None`` (the per-tick while loop) skips the masking.
     """
     t = c.t
     # background-load resample due at this tick (same order as _tick_body)
     key, sub = jax.random.split(c.key)
     noise = jax.random.normal(sub, c.bg.shape, jnp.float32)
     fresh = jnp.maximum(params.bg_mu + params.bg_sigma * noise, 0.0)
-    bg = jnp.where(t % spec.bg_period == 0, fresh, c.bg)
+    due = t % spec.bg_period == 0
+    if alive is not None:
+        due &= alive
+        key = jnp.where(alive, key, c.key)
+    bg = jnp.where(due, fresh, c.bg)
 
     dep_done = jnp.where(spec.dep >= 0, c.done[jnp.maximum(spec.dep, 0)], True)
     active = (~c.done) & (spec.release <= t) & dep_done
+    if alive is not None:
+        active &= alive
     a = active.astype(jnp.float32)
 
     # unclipped fair-share rates (chunk per tick) under the current loads
@@ -168,7 +189,15 @@ def _leap_body(spec: SimSpec, params: SimParams, backend: Optional[str], c: _Car
     )
     pending = (~c.done) & (spec.release > t)
     t_rel = jnp.where(pending, (spec.release - t).astype(jnp.float32), jnp.inf)
-    t_bg = (spec.bg_period - t % spec.bg_period).astype(jnp.float32)  # >= 1
+    # background-resample events only matter for stochastic links: a
+    # sigma=0 link holds bg = max(mu, 0) from its t=0 resample forever, so
+    # its period ticks are rate no-ops and skipping them keeps the
+    # closed-form leap exact (deterministic links no longer throttle dt)
+    t_bg = jnp.where(
+        params.bg_sigma > 0,
+        (spec.bg_period - t % spec.bg_period).astype(jnp.float32),  # >= 1
+        jnp.inf,
+    )
     dt = jnp.minimum(jnp.minimum(jnp.min(ttc), jnp.min(t_rel)), jnp.min(t_bg))
     dt = jnp.where(jnp.isfinite(dt), jnp.maximum(dt, 1.0), 1.0)
 
@@ -194,8 +223,11 @@ def _leap_body(spec: SimSpec, params: SimParams, backend: Optional[str], c: _Car
     started = c.started | active
     t_end = jnp.where(newly_done, t + dt.astype(jnp.int32), c.t_end)
 
+    adv = dt.astype(jnp.int32)
+    if alive is not None:
+        adv *= alive.astype(jnp.int32)
     return _Carry(
-        t=t + dt.astype(jnp.int32),
+        t=t + adv,
         remaining=remaining,
         done=done,
         started=started,
@@ -208,16 +240,30 @@ def _leap_body(spec: SimSpec, params: SimParams, backend: Optional[str], c: _Car
     )
 
 
-def _tick_body(spec: SimSpec, params: SimParams, backend: Optional[str], c: _Carry) -> _Carry:
+def _tick_body(
+    spec: SimSpec,
+    params: SimParams,
+    backend: Optional[str],
+    c: _Carry,
+    alive: Optional[jax.Array] = None,
+) -> _Carry:
+    """One simulation tick. ``alive`` folds the while-loop freeze into the
+    update masks for windowed execution (see :func:`_leap_body`)."""
     t = c.t
     # background-load resampling, once per link update period (paper Sec. 4)
     key, sub = jax.random.split(c.key)
     noise = jax.random.normal(sub, c.bg.shape, jnp.float32)
     fresh = jnp.maximum(params.bg_mu + params.bg_sigma * noise, 0.0)
-    bg = jnp.where(t % spec.bg_period == 0, fresh, c.bg)
+    due = t % spec.bg_period == 0
+    if alive is not None:
+        due &= alive
+        key = jnp.where(alive, key, c.key)
+    bg = jnp.where(due, fresh, c.bg)
 
     dep_done = jnp.where(spec.dep >= 0, c.done[jnp.maximum(spec.dep, 0)], True)
     active = (~c.done) & (spec.release <= t) & dep_done
+    if alive is not None:
+        active &= alive
     a = active.astype(jnp.float32)
 
     xfer, proc_xfer, link_xfer = ops.grid_tick(
@@ -249,8 +295,9 @@ def _tick_body(spec: SimSpec, params: SimParams, backend: Optional[str], c: _Car
     started = c.started | active
     t_end = jnp.where(newly_done, t + 1, c.t_end)
 
+    adv = 1 if alive is None else alive.astype(jnp.int32)
     return _Carry(
-        t=t + 1,
+        t=t + adv,
         remaining=remaining,
         done=done,
         started=started,
@@ -263,7 +310,7 @@ def _tick_body(spec: SimSpec, params: SimParams, backend: Optional[str], c: _Car
     )
 
 
-@functools.partial(jax.jit, static_argnames=("backend", "leap"))
+@functools.partial(jax.jit, static_argnames=("backend", "leap", "window"))
 def simulate(
     spec: SimSpec,
     params: SimParams,
@@ -271,6 +318,7 @@ def simulate(
     *,
     backend: Optional[str] = None,
     leap: bool = False,
+    window: Optional[int] = 1,
 ) -> SimResult:
     """Run one stochastic simulation of the campaign.
 
@@ -282,7 +330,18 @@ def simulate(
     event-leap acceleration (identical results for deterministic background
     loads; statistically equivalent — same per-event sampling — for
     stochastic ones).
+
+    ``window=K`` fuses ``K`` ticks (or, under ``leap``, ``K`` event leaps —
+    windows leap, they never degrade to dt=1) into each while-loop
+    iteration via an inner ``lax.scan`` whose per-tick freeze mask
+    replicates the loop condition, so results are **bit-identical** to the
+    per-tick loop for every ``K`` — including the stochastic background
+    stream and the final ``ticks`` clock — while the loop dispatch/cond
+    overhead amortizes ``K``-fold (see ``tests/test_tick_window.py``).
+    ``window=None`` resolves the auto default, like every other window
+    entry point.
     """
+    window = _resolve_window(window, leap) if window is None else int(window)
     n = spec.n_legs
     born_done = jnp.zeros((n,), bool)
     if params.enabled is not None:
@@ -304,12 +363,23 @@ def simulate(
     )
 
     if leap:
-        body = functools.partial(_leap_body, spec, params, backend)
+        base = functools.partial(_leap_body, spec, params, backend)
     else:
-        body = functools.partial(_tick_body, spec, params, backend)
+        base = functools.partial(_tick_body, spec, params, backend)
 
     def cond(c: _Carry) -> jax.Array:
         return (c.t < spec.max_ticks) & (~jnp.all(c.done))
+
+    if window > 1:
+        def body(c: _Carry) -> _Carry:
+            def inner(cc: _Carry, _):
+                # the freeze mask re-evaluates the loop condition per inner
+                # tick, so a sim finishing mid-window stops exactly there
+                return base(cc, alive=cond(cc)), None
+
+            return jax.lax.scan(inner, c, None, length=window)[0]
+    else:
+        body = base
 
     final = jax.lax.while_loop(cond, body, init)
     return SimResult(
@@ -341,7 +411,7 @@ def _params_axes(params: SimParams, base_ndim: int = 1) -> SimParams:
     )
 
 
-@functools.partial(jax.jit, static_argnames=("backend", "leap"))
+@functools.partial(jax.jit, static_argnames=("backend", "leap", "window"))
 def simulate_batch(
     spec: SimSpec,
     params: SimParams,
@@ -349,15 +419,18 @@ def simulate_batch(
     *,
     backend: Optional[str] = None,
     leap: bool = False,
+    window: Optional[int] = 1,
 ) -> SimResult:
     """Vectorized batch of stochastic simulations.
 
     Each ``params`` field may carry a leading batch dim (one theta and/or one
     ``enabled`` mask per sim) or be unbatched (shared theta, e.g. the 16k
-    validation runs of Section 5).
+    validation runs of Section 5). ``window`` fuses K ticks per loop
+    iteration (bit-identical results; see :func:`simulate`).
     """
     return jax.vmap(
-        lambda p, k: simulate(spec, p, k, backend=backend, leap=leap),
+        lambda p, k: simulate(spec, p, k, backend=backend, leap=leap,
+                              window=window),
         in_axes=(_params_axes(params), 0),
     )(params, keys)
 
@@ -411,6 +484,7 @@ def reset_bank_trace_count(*, clear_caches: bool = True) -> None:
         _simulate_bank.clear_cache()
         _simulate_bank_banked.clear_cache()
         _simulate_bank_bucketed_impl.clear_cache()
+        _banked_window_step.clear_cache()
         for fn in list(_cache_clear_hooks):
             fn()
 
@@ -505,7 +579,7 @@ def make_bank_params(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("backend", "leap"))
+@functools.partial(jax.jit, static_argnames=("backend", "leap", "window"))
 def _simulate_bank(
     spec: SimSpec,  # stacked [N, ...]
     params: SimParams,  # fields [N, ...] or [N, R, ...]
@@ -513,13 +587,15 @@ def _simulate_bank(
     *,
     backend: Optional[str],
     leap: bool,
+    window: int = 1,
 ) -> SimResult:
     global _bank_traces
     _bank_traces += 1  # executes at trace time only
 
     def one_scenario(spec_i: SimSpec, params_i: SimParams, keys_i: jax.Array):
         return jax.vmap(
-            lambda p, k: simulate(spec_i, p, k, backend=backend, leap=leap),
+            lambda p, k: simulate(spec_i, p, k, backend=backend, leap=leap,
+                                  window=window),
             in_axes=(_params_axes(params_i), 0),
         )(params_i, keys_i)
 
@@ -551,178 +627,9 @@ def _rep3(field: Optional[jax.Array]) -> Optional[jax.Array]:
     return field[:, None, :]
 
 
-def _bank_dep_done(dep: jax.Array, done: jax.Array) -> jax.Array:
-    """``done[s, r, dep[s, t]]`` with -1 mapping to True: [S, R, T]."""
-    idx = jnp.broadcast_to(jnp.maximum(dep, 0)[:, None, :], done.shape)
-    gathered = jnp.take_along_axis(done, idx, axis=2)
-    return jnp.where(dep[:, None, :] >= 0, gathered, True)
-
-
-def _bank_bg_resample(
-    spec: SimSpec, params: SimParams, c: _Carry
-) -> Tuple[jax.Array, jax.Array]:
-    """Split every (scenario, replica) key and resample background loads due
-    at this tick — element-for-element the same draws as the per-scenario
-    body under vmap. Returns ``(bg [S, R, L], key [S, R, 2])``."""
-    n_links = c.bg.shape[-1]
-    pair = jax.vmap(jax.vmap(jax.random.split))(c.key)  # [S, R, 2, 2]
-    key, sub = pair[:, :, 0], pair[:, :, 1]
-    noise = jax.vmap(jax.vmap(lambda k: jax.random.normal(k, (n_links,))))(sub)
-    fresh = jnp.maximum(
-        _rep3(params.bg_mu) + _rep3(params.bg_sigma) * noise, 0.0
-    )
-    due = c.t[:, :, None] % spec.bg_period[:, None, :] == 0
-    return jnp.where(due, fresh, c.bg), key
-
-
-def _bank_tick_body(
-    spec: SimSpec, params: SimParams, backend: Optional[str], c: _Carry
-) -> _Carry:
-    """One tick of the whole bank: [S, R, ...] state, per-scenario spec rows
-    — the manual analogue of vmap(vmap(_tick_body))."""
-    t = c.t  # [S, R]
-    bg, key = _bank_bg_resample(spec, params, c)
-
-    dep_done = _bank_dep_done(spec.dep, c.done)
-    active = (~c.done) & (spec.release[:, None, :] <= t[:, :, None]) & dep_done
-    a = active.astype(jnp.float32)
-
-    xfer, proc_xfer, link_xfer = ops.grid_tick_bank(
-        a,
-        c.remaining,
-        params.keep_frac,
-        bg,
-        spec.bandwidth,
-        spec.leg_proc,
-        spec.proc_link,
-        spec.leg_link,
-        backend=backend,
-    )
-
-    remaining = c.remaining - xfer
-    newly_done = active & (remaining <= 1e-6)
-    done = c.done | newly_done
-
-    own_proc_xfer = jnp.einsum("stp,srp->srt", spec.leg_proc, proc_xfer)
-    own_link_xfer = jnp.einsum("stl,srl->srt", spec.leg_link, link_xfer)
-    conth = c.conth + a * (own_proc_xfer - xfer)
-    conpr = c.conpr + a * (own_link_xfer - own_proc_xfer)
-
-    t3 = t[:, :, None]
-    t_start = jnp.where(active & (~c.started), t3, c.t_start)
-    started = c.started | active
-    t_end = jnp.where(newly_done, t3 + 1, c.t_end)
-
-    return _Carry(
-        t=t + 1,
-        remaining=remaining,
-        done=done,
-        started=started,
-        t_start=t_start,
-        t_end=t_end,
-        conth=conth,
-        conpr=conpr,
-        bg=bg,
-        key=key,
-    )
-
-
-def _bank_leap_body(
-    spec: SimSpec, params: SimParams, backend: Optional[str], c: _Carry
-) -> _Carry:
-    """Event-leap window for the whole bank: each (scenario, replica) leaps
-    by its own ``dt`` — the manual analogue of vmap(vmap(_leap_body))."""
-    t = c.t  # [S, R]
-    bg, key = _bank_bg_resample(spec, params, c)
-
-    dep_done = _bank_dep_done(spec.dep, c.done)
-    active = (~c.done) & (spec.release[:, None, :] <= t[:, :, None]) & dep_done
-    a = active.astype(jnp.float32)
-
-    inf_rem = jnp.full_like(c.remaining, jnp.inf)
-    rate, proc_rate, link_rate = ops.grid_tick_bank(
-        a, inf_rem, params.keep_frac, bg, spec.bandwidth,
-        spec.leg_proc, spec.proc_link, spec.leg_link, backend=backend,
-    )
-
-    ttc = jnp.where(
-        active & (rate > 0), jnp.ceil(c.remaining / jnp.maximum(rate, 1e-30)),
-        jnp.inf,
-    )
-    pending = (~c.done) & (spec.release[:, None, :] > t[:, :, None])
-    t_rel = jnp.where(
-        pending,
-        (spec.release[:, None, :] - t[:, :, None]).astype(jnp.float32),
-        jnp.inf,
-    )
-    t_bg = (
-        spec.bg_period[:, None, :] - t[:, :, None] % spec.bg_period[:, None, :]
-    ).astype(jnp.float32)  # >= 1
-    dt = jnp.minimum(
-        jnp.minimum(jnp.min(ttc, axis=-1), jnp.min(t_rel, axis=-1)),
-        jnp.min(t_bg, axis=-1),
-    )  # [S, R]
-    dt = jnp.where(jnp.isfinite(dt), jnp.maximum(dt, 1.0), 1.0)
-    dt3 = dt[:, :, None]
-
-    rem_mid = c.remaining - a * rate * (dt3 - 1.0)
-    xfer_f = jnp.minimum(rem_mid, rate) * a
-    proc_xfer_f = jnp.einsum("srt,stp->srp", xfer_f, spec.leg_proc)
-    link_xfer_f = jnp.einsum("srt,stl->srl", xfer_f, spec.leg_link)
-    remaining = rem_mid - xfer_f
-
-    own_proc_rate = jnp.einsum("stp,srp->srt", spec.leg_proc, proc_rate)
-    own_link_rate = jnp.einsum("stl,srl->srt", spec.leg_link, link_rate)
-    own_proc_f = jnp.einsum("stp,srp->srt", spec.leg_proc, proc_xfer_f)
-    own_link_f = jnp.einsum("stl,srl->srt", spec.leg_link, link_xfer_f)
-    conth = c.conth + a * ((own_proc_rate - rate) * (dt3 - 1.0)
-                           + (own_proc_f - xfer_f))
-    conpr = c.conpr + a * ((own_link_rate - own_proc_rate) * (dt3 - 1.0)
-                           + (own_link_f - own_proc_f))
-
-    newly_done = active & (remaining <= 1e-6)
-    done = c.done | newly_done
-    t3 = t[:, :, None]
-    t_start = jnp.where(active & (~c.started), t3, c.t_start)
-    started = c.started | active
-    t_end = jnp.where(newly_done, t3 + dt3.astype(jnp.int32), c.t_end)
-
-    return _Carry(
-        t=t + dt.astype(jnp.int32),
-        remaining=remaining,
-        done=done,
-        started=started,
-        t_start=t_start,
-        t_end=t_end,
-        conth=conth,
-        conpr=conpr,
-        bg=bg,
-        key=key,
-    )
-
-
-@functools.partial(jax.jit, static_argnames=("backend", "leap"))
-def _simulate_bank_banked(
-    spec: SimSpec,  # stacked [S, ...]
-    params: SimParams,  # fields [S, ...] or [S, R, ...]
-    keys: jax.Array,  # [S, R, 2]
-    *,
-    backend: Optional[str],
-    leap: bool,
-) -> SimResult:
-    """Manual banked lowering: the tick/leap loop carries ``[S, R, ...]``
-    state and calls :func:`repro.kernels.ops.grid_tick_bank` directly, so the
-    TPU hot path hits the bank-tiled kernel (per-scenario incidences resident
-    in VMEM) instead of the per-sim kernel under a double vmap.
-
-    Semantics are element-for-element those of :func:`_simulate_bank`: each
-    (scenario, replica) advances under its own condition (its carry freezes
-    once it finishes or hits its scenario's ``max_ticks``), and the RNG
-    splits follow the per-scenario body exactly.
-    """
-    global _bank_traces
-    _bank_traces += 1  # executes at trace time only
-
+def _banked_init_carry(spec: SimSpec, params: SimParams, keys: jax.Array) -> _Carry:
+    """Initial ``[S, R, ...]`` carry of the banked lowering (padded and
+    disabled legs born done)."""
     S, T = spec.size_mb.shape
     L = spec.bandwidth.shape[-1]
     R = keys.shape[1]
@@ -733,7 +640,7 @@ def _simulate_bank_banked(
     if spec.leg_valid is not None:
         born_done |= ~spec.leg_valid[:, None, :].astype(bool)
 
-    init = _Carry(
+    return _Carry(
         t=jnp.zeros((S, R), jnp.int32),
         remaining=jnp.broadcast_to(spec.size_mb[:, None, :], (S, R, T)),
         done=born_done,
@@ -746,25 +653,13 @@ def _simulate_bank_banked(
         key=keys,
     )
 
-    body_fn = _bank_leap_body if leap else _bank_tick_body
 
-    def live(c: _Carry) -> jax.Array:  # [S, R]
-        return (c.t < spec.max_ticks[:, None]) & ~jnp.all(c.done, axis=-1)
+def _banked_live(spec: SimSpec, c: _Carry) -> jax.Array:  # [S, R]
+    return (c.t < spec.max_ticks[:, None]) & ~jnp.all(c.done, axis=-1)
 
-    def cond(c: _Carry) -> jax.Array:
-        return jnp.any(live(c))
 
-    def body(c: _Carry) -> _Carry:
-        # matching vmap-of-while semantics: finished (scenario, replica)
-        # elements keep their carry (including the RNG key) frozen
-        alive = live(c)
-        new = body_fn(spec, params, backend, c)
-        sel = lambda n, o: jnp.where(
-            alive.reshape(alive.shape + (1,) * (n.ndim - 2)), n, o
-        )
-        return jax.tree.map(sel, new, c)
-
-    final = jax.lax.while_loop(cond, body, init)
+def _banked_result(spec: SimSpec, final: _Carry) -> SimResult:
+    S, R, T = final.remaining.shape
     return SimResult(
         transfer_time=jnp.where(
             final.done, (final.t_end - final.t_start).astype(jnp.float32), 0.0
@@ -779,7 +674,213 @@ def _simulate_bank_banked(
     )
 
 
+def _bank_window_body(
+    spec: SimSpec,
+    params: SimParams,
+    backend: Optional[str],
+    leap: bool,
+    window: int,
+    c: _Carry,
+) -> _Carry:
+    """Advance the whole bank by one fused ``window``-tick step.
+
+    One :func:`repro.kernels.ops.grid_tick_bank_fused` dispatch — a single
+    kernel launch on the Pallas backend — advances every (scenario, replica)
+    element by up to ``window`` ticks. The carried RNG keys ride along in
+    ``key=`` mode: each element's key advances by exactly its alive-step
+    count (split in-step on XLA, chain-resynchronized around the fused
+    kernel), so frozen carries stay frozen bit for bit, keys included.
+    """
+    state = (
+        c.t, jnp.zeros_like(c.t), c.remaining, c.done, c.started,
+        c.t_start, c.t_end, c.conth, c.conpr, c.bg,
+    )
+    (t, steps, remaining, done, started, t_start, t_end, conth, conpr,
+     bg), key = ops.grid_tick_bank_fused(
+        state, _rep3(params.bg_mu), _rep3(params.bg_sigma),
+        spec.release, spec.dep, spec.bg_period, spec.max_ticks,
+        params.keep_frac, spec.bandwidth,
+        spec.leg_proc, spec.proc_link, spec.leg_link,
+        window=window, leap=leap, backend=backend, key=c.key,
+    )
+    return _Carry(
+        t=t, remaining=remaining, done=done, started=started,
+        t_start=t_start, t_end=t_end, conth=conth, conpr=conpr, bg=bg,
+        key=key,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "leap", "window"))
+def _simulate_bank_banked(
+    spec: SimSpec,  # stacked [S, ...]
+    params: SimParams,  # fields [S, ...] or [S, R, ...]
+    keys: jax.Array,  # [S, R, 2]
+    *,
+    backend: Optional[str],
+    leap: bool,
+    window: int = 1,
+) -> SimResult:
+    """Manual banked lowering: the tick/leap loop carries ``[S, R, ...]``
+    state and calls :func:`repro.kernels.ops.grid_tick_bank` (or, for
+    ``window > 1``, the fused multi-tick
+    :func:`repro.kernels.ops.grid_tick_bank_fused`) directly, so the TPU hot
+    path hits the bank-tiled kernel (per-scenario incidences — and, fused,
+    the whole carry — resident in VMEM) instead of the per-sim kernel under
+    a double vmap.
+
+    Semantics are element-for-element those of :func:`_simulate_bank`: each
+    (scenario, replica) advances under its own condition (its carry freezes
+    once it finishes or hits its scenario's ``max_ticks``), and the RNG
+    splits follow the per-scenario body exactly — for every ``window``,
+    bit-identically to the per-tick loop.
+    """
+    global _bank_traces
+    _bank_traces += 1  # executes at trace time only
+
+    init = _banked_init_carry(spec, params, keys)
+
+    def cond(c: _Carry) -> jax.Array:
+        return jnp.any(_banked_live(spec, c))
+
+    # every window size runs the same fused body (window=1 is a length-1
+    # window): windowed-vs-per-tick parity is then structural — the K-tick
+    # and 1-tick programs share one inner step, so XLA's per-expression
+    # rounding (FMA contraction in the noise/fair-share math) cannot drift
+    # between them the way it does between separately-written loop bodies
+    body = functools.partial(
+        _bank_window_body, spec, params, backend, leap, window
+    )
+    final = jax.lax.while_loop(cond, body, init)
+    return _banked_result(spec, final)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("backend", "leap", "window"),
+    donate_argnames=("carry",),
+)
+def _banked_window_step(
+    spec: SimSpec,
+    params: SimParams,
+    carry: _Carry,
+    *,
+    backend: Optional[str],
+    leap: bool,
+    window: int,
+) -> _Carry:
+    """One donated window step: the host-driven twin of the while-loop body.
+
+    ``carry`` is **donated** — XLA reuses its buffers for the output carry,
+    so a host-driven window loop runs with zero per-step carry allocations
+    (verified warning-free on CPU; see ``tests/test_tick_window.py``). Do
+    not reuse a carry after passing it here.
+    """
+    return _bank_window_body(spec, params, backend, leap, window, carry)
+
+
+def simulate_bank_stepped(
+    bank: Union[ScenarioBank, SimSpec],
+    params: SimParams,
+    keys: jax.Array,  # [S, R, 2]
+    *,
+    backend: Optional[str] = None,
+    leap: bool = False,
+    window: Optional[int] = None,
+    sync_every: Optional[int] = 8,
+) -> SimResult:
+    """Banked simulation as a host-driven loop of donated window steps.
+
+    Runs up to ``ceil(max_ticks / window)`` dispatches of
+    :func:`_banked_window_step` instead of one ``lax.while_loop`` program:
+    the trip count is bounded statically and the carry buffers are donated
+    into every step, so the loop state is updated in place. Windows past an
+    element's completion are frozen no-ops, which makes the result
+    **bit-identical** to ``simulate_bank(..., lowering="banked")`` at the
+    same ``window``. Every ``sync_every`` windows the host checks whether
+    any element is still live and stops early — ``max_ticks`` is a safe
+    *upper bound*, often far above the realized length, and without the
+    check every post-completion window would still execute its masked
+    no-op math. The check is a device sync, so it is amortized rather than
+    per-step (``sync_every=None`` disables it for fully-async pipelines).
+
+    This is the introspectable/streaming execution mode — callers can stop
+    early, checkpoint the carry, or interleave host work between windows;
+    the fused while-loop program remains the faster fire-and-forget path.
+    """
+    spec = bank_spec(bank) if isinstance(bank, ScenarioBank) else bank
+    window = _resolve_window(window, leap)
+    bound = int(np.max(np.asarray(bank.max_ticks)))
+    # the carry embeds the keys and is donated into the first step — copy
+    # so the caller's keys buffer survives
+    carry = _banked_init_carry(spec, params, jnp.array(keys, copy=True))
+    for i in range(max(1, -(-bound // window))):
+        carry = _banked_window_step(
+            spec, params, carry, backend=backend, leap=leap, window=window
+        )
+        if (
+            sync_every is not None
+            and (i + 1) % sync_every == 0
+            and not bool(jnp.any(_banked_live(spec, carry)))
+        ):
+            break
+    return _banked_result(spec, carry)
+
+
 _VALID_LOWERINGS = ("auto", "banked", "vmap")
+
+# auto-tuned fused-window defaults per backend platform, (tick, leap).
+# On TPU every window is one fused-kernel launch, so K amortizes the
+# launch + HBM carry round-trip + cond evaluation K-fold (VMEM window
+# block scales with K — see grid_tick_bank_fused_pallas). Off-TPU the
+# window lowers to a lax.scan that does not shorten the op chain — it only
+# adds the tail window's masked no-op ticks — and the
+# ``benchmarks/bank_throughput.py`` window sweep shows K=1 winning on the
+# CPU bench host for both modes, so the off-TPU auto default stays
+# per-tick. (The CPU wins of the window rework come from the restructured
+# body itself: aliveness folded into the update masks instead of a
+# 10-array carry select, index-gather one-hot contractions, and
+# sigma=0 background-resample events dropped from the leap schedule.)
+# Leap windows hold K *events*, each already covering many ticks, so their
+# K is kept smaller to bound tail waste.
+_WINDOW_DEFAULTS = {"tpu": (32, 16)}
+_WINDOW_DEFAULT_OTHER = (1, 1)
+
+
+def default_tick_window(leap: bool = False) -> int:
+    """The auto-tuned fused-window size for this process's backend (what
+    ``window=None`` resolves to, absent ``REPRO_TICK_WINDOW``)."""
+    pair = _WINDOW_DEFAULTS.get(ops._platform(), _WINDOW_DEFAULT_OTHER)
+    return pair[1] if leap else pair[0]
+
+
+def _resolve_window(window: Optional[int], leap: bool = False) -> int:
+    """``None`` -> ``REPRO_TICK_WINDOW`` or the per-backend auto default;
+    explicit values are validated (>= 1)."""
+    if window is None:
+        env = os.environ.get("REPRO_TICK_WINDOW", "").strip()
+        if not env:
+            return default_tick_window(leap)
+        window = env
+    w = int(window)
+    if w < 1:
+        raise ValueError(f"tick window must be >= 1: {window!r}")
+    return w
+
+
+def _clamp_window(window: int, tick_bound: int) -> int:
+    """Cap a window at a bank/bucket tick bound, **quantized to the next
+    power of two** of the bound. The window is a jit-static argument, so a
+    raw ``min(window, bound)`` would bake content-dependent tick bounds
+    into the trace key and retrace fleets/chunks that share pad shapes but
+    differ in bounds below the window — eroding the pinned zero-retrace
+    contracts. Quantizing keeps the cap (a bucket bounded at 40 ticks never
+    pays a 64-tick window... it pays at most its bound's pow2 bracket) while
+    collapsing nearby bounds onto one static value; bounds at or above the
+    window resolve to the window itself, the common case."""
+    cap = 1
+    while cap < tick_bound:
+        cap *= 2
+    return max(1, min(window, cap))
 
 
 def _resolve_lowering(lowering: Optional[str]) -> str:
@@ -789,11 +890,14 @@ def _resolve_lowering(lowering: Optional[str]) -> str:
             f"bank lowering must be one of {_VALID_LOWERINGS}: {lowering!r}"
         )
     if lowering == "auto":
-        # the manual banked body exists for the bank-tiled TPU kernel
-        # (per-scenario incidences resident in VMEM); on CPU/GPU the
-        # vmap-of-simulate program lowers to the same math with less
-        # batched-gather overhead, so auto keeps it there
-        return "banked" if ops._platform() == "tpu" else "vmap"
+        # the banked window body is the fast path everywhere since the
+        # fused-window rework: on TPU it drives the bank-tiled fused kernel
+        # (carry resident in VMEM), off-TPU its index-based tick replaces
+        # the tiny one-hot matmuls with gathers — measurably ahead of the
+        # vmap-of-simulate program on CPU too (BENCH_bank.json:
+        # banked_vs_vmap_speedup). The vmap program remains as the
+        # cross-check lowering (REPRO_BANK_LOWERING=vmap).
+        return "banked"
     return lowering
 
 
@@ -805,18 +909,24 @@ def _dispatch_bank(
     backend: Optional[str],
     leap: bool,
     lowering: Optional[str],
+    window: int = 1,
 ) -> SimResult:
     if keys.ndim != 3:
         raise ValueError(f"keys must be [n_scenarios, n_replicas, 2]: {keys.shape}")
     if _resolve_lowering(lowering) == "vmap":
-        return _simulate_bank(spec, params, keys, backend=backend, leap=leap)
-    return _simulate_bank_banked(spec, params, keys, backend=backend, leap=leap)
+        return _simulate_bank(
+            spec, params, keys, backend=backend, leap=leap, window=window
+        )
+    return _simulate_bank_banked(
+        spec, params, keys, backend=backend, leap=leap, window=window
+    )
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "bucket_legs", "bucket_links", "pad_legs", "backend", "leap", "lowering",
+        "bucket_legs", "bucket_links", "pad_legs", "backend", "leap",
+        "lowering", "windows",
     ),
 )
 def _simulate_bank_bucketed_impl(
@@ -831,6 +941,7 @@ def _simulate_bank_bucketed_impl(
     backend: Optional[str],
     leap: bool,
     lowering: str,
+    windows: Tuple[int, ...] = (),
 ) -> SimResult:
     """One fused program over every sub-bank: gather the bucket's params
     rows, simulate, scatter into the caller's ``[N, R]`` order. Fusing keeps
@@ -849,7 +960,11 @@ def _simulate_bank_bucketed_impl(
         profile=jnp.full((n, r, pad_legs), PAD_PROFILE, jnp.int32),
         start_tick=jnp.zeros((n, r, pad_legs), jnp.float32),
     )
-    for spec_b, ids, t_b, l_b in zip(specs, idx, bucket_legs, bucket_links):
+    if not windows:
+        windows = (1,) * len(specs)
+    for spec_b, ids, t_b, l_b, w_b in zip(
+        specs, idx, bucket_legs, bucket_links, windows
+    ):
         legs = lambda f: None if f is None else f[ids][..., :t_b]
         links = lambda f: None if f is None else f[ids][..., :l_b]
         sub_params = SimParams(
@@ -858,7 +973,8 @@ def _simulate_bank_bucketed_impl(
             bg_sigma=links(params.bg_sigma),
             enabled=legs(params.enabled),
         )
-        res = sim(spec_b, sub_params, keys[ids], backend=backend, leap=leap)
+        res = sim(spec_b, sub_params, keys[ids], backend=backend, leap=leap,
+                  window=w_b)
         out = SimResult(
             transfer_time=out.transfer_time.at[ids, :, :t_b].set(res.transfer_time),
             size_mb=out.size_mb.at[ids, :, :t_b].set(res.size_mb),
@@ -880,10 +996,15 @@ def _simulate_bank_bucketed(
     backend: Optional[str],
     leap: bool,
     lowering: Optional[str],
+    window: int = 1,
 ) -> SimResult:
     """Run each max_ticks-bucketed sub-bank under its own cached trace and
     scatter the per-bucket results back into the caller's ``[N, R]`` order
-    (global pads; the tail beyond a bucket's pad reports inert padding)."""
+    (global pads; the tail beyond a bucket's pad reports inert padding).
+    The fused window is resolved **per bucket** against its realized tick
+    bound (pow2-quantized; see :func:`_clamp_window`) — a bucket bounded at
+    5 ticks never pays a 32-tick window, and the quantization keeps the
+    static window from retracing on content-dependent bounds."""
     if keys.ndim != 3:
         raise ValueError(f"keys must be [n_scenarios, n_replicas, 2]: {keys.shape}")
     specs = tuple(bank_spec(b.bank) for b in bank.buckets)
@@ -900,6 +1021,10 @@ def _simulate_bank_bucketed(
         backend=backend,
         leap=leap,
         lowering=_resolve_lowering(lowering),
+        windows=tuple(
+            _clamp_window(window, int(np.max(b.bank.max_ticks)))
+            for b in bank.buckets
+        ),
     )
 
 
@@ -912,6 +1037,7 @@ def simulate_bank(
     leap: bool = False,
     lowering: Optional[str] = None,
     bucketed: bool = True,
+    window: Optional[int] = None,
 ) -> SimResult:
     """Simulate every scenario of the bank x ``R`` stochastic replicas.
 
@@ -936,18 +1062,38 @@ def simulate_bank(
     throughput no longer gated by the slowest scenario of the whole fleet.
     Pass ``bucketed=False`` to force the monolithic single-trace path.
 
+    ``window=K`` fuses ``K`` ticks (``K`` event leaps under ``leap``) into
+    every loop iteration of whichever lowering runs — one
+    ``grid_tick_bank_fused`` kernel launch per window on the banked TPU
+    path, an inner ``lax.scan`` elsewhere — with results **bit-identical**
+    to per-tick execution for every ``K`` (the windowed freeze mask
+    replicates the loop condition tick for tick, RNG streams included).
+    ``None`` resolves ``REPRO_TICK_WINDOW`` or the per-backend auto default
+    (:func:`default_tick_window`); bucketed banks additionally cap each
+    bucket's window at its own tick bound's power-of-two bracket (the
+    quantization keeps the jit-static window independent of exact
+    content-dependent bounds, preserving the zero-retrace contracts).
+
     The flattened ``N*R`` batch is embarrassingly parallel: under a device
     mesh, shard ``keys`` (and any per-replica params) over the scenario axis
     and XLA partitions the whole tick program with zero collectives (see
     ``tests/test_bank.py`` and ``benchmarks/bank_throughput.py``).
     """
+    w = _resolve_window(window, leap)
+    if isinstance(bank, ScenarioBank):
+        # never scan far past the fleet's longest simulation in one window
+        # (pow2-quantized so the static window doesn't retrace on
+        # content-dependent bounds; see _clamp_window)
+        w = _clamp_window(w, int(np.max(np.asarray(bank.max_ticks))))
     if bucketed and isinstance(bank, BucketedBank):
         return _simulate_bank_bucketed(
-            bank, params, keys, backend=backend, leap=leap, lowering=lowering
+            bank, params, keys, backend=backend, leap=leap, lowering=lowering,
+            window=w,
         )
     spec = bank_spec(bank) if isinstance(bank, ScenarioBank) else bank
     return _dispatch_bank(
-        spec, params, keys, backend=backend, leap=leap, lowering=lowering
+        spec, params, keys, backend=backend, leap=leap, lowering=lowering,
+        window=w,
     )
 
 

@@ -123,7 +123,8 @@ PairsLike = Sequence[Tuple[Grid, Campaign]]
 
 
 class Fleet:
-    """A compiled scenario fleet with its run policy (lowering/leap/backend).
+    """A compiled scenario fleet with its run policy
+    (lowering/leap/backend/window).
 
     Construct via :meth:`from_pairs` (explicit ``(grid, campaign)`` pairs),
     :meth:`from_scenarios` (the generator registry), :meth:`from_table`
@@ -138,6 +139,7 @@ class Fleet:
         lowering: Optional[str] = None,
         leap: bool = False,
         backend: Optional[str] = None,
+        window: Optional[int] = None,
     ) -> None:
         if not isinstance(bank, ScenarioBank):
             raise TypeError(f"Fleet wraps a compiled ScenarioBank, got {type(bank)!r}")
@@ -145,6 +147,7 @@ class Fleet:
         self.lowering = lowering
         self.leap = leap
         self.backend = backend
+        self.window = window
         self._base_params: Optional[SimParams] = None
         self._mappers: dict = {}
 
@@ -164,6 +167,7 @@ class Fleet:
         lowering: Optional[str] = None,
         leap: bool = False,
         backend: Optional[str] = None,
+        window: Optional[int] = None,
     ) -> "Fleet":
         """Compile ``(grid, campaign)`` pairs into a fleet.
 
@@ -210,7 +214,8 @@ class Fleet:
             )
             if key is not None:
                 _cache_put(key, bank)
-        return cls(bank, lowering=lowering, leap=leap, backend=backend)
+        return cls(bank, lowering=lowering, leap=leap, backend=backend,
+                   window=window)
 
     @classmethod
     def from_scenarios(
@@ -229,6 +234,7 @@ class Fleet:
         lowering: Optional[str] = None,
         leap: bool = False,
         backend: Optional[str] = None,
+        window: Optional[int] = None,
     ) -> "Fleet":
         """Sample ``n`` scenarios from the generator registry and compile
         them. The sampling recipe (families, n, seed, scale) is hashable and
@@ -256,6 +262,7 @@ class Fleet:
             lowering=lowering,
             leap=leap,
             backend=backend,
+            window=window,
         )
 
     @classmethod
@@ -268,6 +275,7 @@ class Fleet:
         lowering: Optional[str] = None,
         leap: bool = False,
         backend: Optional[str] = None,
+        window: Optional[int] = None,
     ) -> "Fleet":
         """Lift one compiled :class:`LegTable` into a single-scenario fleet
         (pads equal the table's own shape, so nothing is padded). This is how
@@ -283,7 +291,8 @@ class Fleet:
         else:
             bank = bank_from_tables([table], [name], max_ticks=max_ticks)
             _cache_put(key, (table, bank))
-        return cls(bank, lowering=lowering, leap=leap, backend=backend)
+        return cls(bank, lowering=lowering, leap=leap, backend=backend,
+                   window=window)
 
     # -- introspection ------------------------------------------------------
 
@@ -334,7 +343,7 @@ class Fleet:
         return (
             f"Fleet({kind}: {self.n_scenarios} scenarios, pads={self.pads}, "
             f"buckets={self.n_buckets}, lowering={self.lowering!r}, "
-            f"leap={self.leap})"
+            f"leap={self.leap}, window={self.window})"
         )
 
     # -- params -------------------------------------------------------------
@@ -404,6 +413,7 @@ class Fleet:
         leap: Optional[bool] = None,
         backend: Optional[str] = None,
         bucketed: bool = True,
+        window: Optional[int] = None,
     ) -> SimResult:
         """Simulate every scenario x ``replicas`` stochastic replicas.
 
@@ -412,9 +422,11 @@ class Fleet:
         ``[N, R, 2]`` ``keys`` are given — the replica count then comes
         from the keys, and a conflicting explicit ``replicas`` raises
         rather than being silently ignored. Dispatches to
-        ``engine.simulate_bank`` with the fleet's lowering/leap/backend
-        defaults (each overridable per call); results come back in stable
-        scenario order regardless of bucketing.
+        ``engine.simulate_bank`` with the fleet's lowering/leap/backend/
+        window defaults (each overridable per call; ``window=None`` lets
+        the engine pick the fused-tick window per backend and bucket —
+        results are bit-identical across window sizes); results come back
+        in stable scenario order regardless of bucketing.
         """
         params = self._resolve_params(params_or_theta, protocol)
         if keys is None:
@@ -442,6 +454,7 @@ class Fleet:
             leap=self.leap if leap is None else leap,
             lowering=self.lowering if lowering is None else lowering,
             bucketed=bucketed,
+            window=self.window if window is None else window,
         )
 
     def stream(
@@ -457,6 +470,7 @@ class Fleet:
         lowering: Optional[str] = None,
         leap: Optional[bool] = None,
         backend: Optional[str] = None,
+        window: Optional[int] = None,
     ) -> Iterator[StreamChunk]:
         """Pipeline an iterator of ``(grid, campaign)`` pairs through
         fixed-pad chunk banks — the streaming-fleet path for campaign sets
@@ -503,12 +517,12 @@ class Fleet:
             raise ValueError(f"chunk must be positive: {chunk}")
         return self._stream_chunks(
             pairs, chunk, params_or_theta, replicas, key, protocol,
-            max_ticks, lowering, leap, backend,
+            max_ticks, lowering, leap, backend, window,
         )
 
     def _stream_chunks(
         self, pairs, chunk, params_or_theta, replicas, key, protocol,
-        max_ticks, lowering, leap, backend,
+        max_ticks, lowering, leap, backend, window,
     ) -> Iterator[StreamChunk]:
         key = jax.random.PRNGKey(0) if key is None else key
         it = iter(pairs)
@@ -549,6 +563,7 @@ class Fleet:
                 backend=self.backend if backend is None else backend,
                 leap=self.leap if leap is None else leap,
                 lowering=self.lowering if lowering is None else lowering,
+                window=self.window if window is None else window,
             )
             if real < chunk:
                 res = jax.tree.map(lambda a: a[:real], res)
@@ -577,6 +592,7 @@ class Fleet:
                 "lowering": self.lowering,
                 "leap": self.leap,
                 "backend": self.backend,
+                "window": self.window,
             },
             "bucketed": isinstance(bank, BucketedBank),
         }

@@ -160,11 +160,70 @@ class LegTable:
         m[np.arange(self.n_legs), self.link_id] = 1.0
         return m
 
-    def max_ticks_upper_bound(self, min_share_mb: float = 0.05) -> int:
-        """A safe cap on simulation length: every leg would finish even if it
-        only ever received ``min_share_mb`` per tick, run serially."""
-        total = float(self.size_mb.sum())
-        return int(total / min_share_mb) + int(self.release.max()) + 16
+    def max_ticks_upper_bound(
+        self,
+        min_share_mb: float = 0.05,
+        *,
+        bg_headroom: float = 6.0,
+        bg_override_cap: float = 256.0,
+        slack: float = 2.0,
+    ) -> int:
+        """A safe cap on simulation length, bandwidth-aware.
+
+        Work-conserving argument: at every tick before completion at least
+        one released, unblocked leg transfers at no less than its *floor
+        rate* ``keep * bandwidth / (procs_on_link + bg_cap) / threads_on_proc``
+        (the fair share when every process of its link is active and the
+        background load sits at ``bg_cap``), and ticks with no active leg
+        only occur before the last release. Charging each tick to the first
+        active leg bounds the total at ``release_max + sum_i
+        ceil(size_i / floor_i)``; the sum is multiplied by ``slack`` and the
+        result clamped by the legacy ``total / min_share_mb`` floor bound so
+        the cap is never looser than before.
+
+        ``bg_cap = max(mu + bg_headroom * sigma, bg_override_cap)``: the
+        first term covers the compiled table's own stochastic draws, the
+        ``bg_override_cap`` floor keeps default-compiled banks safe when
+        **calibration overrides** the background moments — theta sweeps
+        draw mu up to the paper prior's high of 100, far above any table's
+        compiled moments, and a bound fitted only to the table would
+        silently truncate exactly the bg-heavy region the posterior must
+        resolve. (An unbounded Gaussian can always exceed any cap; extreme
+        upper-tail draws may still truncate, and truncated legs are
+        dropped from the regressions as before.)
+
+        The tightening is what makes ``max_ticks`` bucketing meaningful:
+        campaigns resolve bounds spread over orders of magnitude instead of
+        everything saturating one global cap. Under ``leap=True`` the engine
+        reaches any bound in O(#events) iterations, so a generous cap costs
+        nothing at runtime — it only decides where truncated (never-
+        finishing) simulations stop.
+        """
+        release_max = int(self.release.max())
+        legacy = int(self.size_mb.sum() / min_share_mb) + release_max + 16
+
+        links = self.links
+        link_of_proc = np.zeros(self.n_procs, np.int64)
+        link_of_proc[self.proc_id] = self.link_id
+        procs_on_link = np.bincount(link_of_proc, minlength=self.n_links)
+        threads_on_proc = np.bincount(self.proc_id, minlength=self.n_procs)
+        bg_cap = np.maximum(
+            links.bg_mu + bg_headroom * links.bg_sigma, bg_override_cap
+        )
+        denom = np.maximum(procs_on_link + bg_cap, 1.0)[self.link_id]
+        floor = (
+            self.keep_frac
+            * links.bandwidth[self.link_id]
+            / denom
+            / np.maximum(threads_on_proc[self.proc_id], 1)
+        )
+        floor = np.maximum(floor, 1e-9)
+        tight = (
+            release_max
+            + int(slack * np.ceil(self.size_mb / floor).sum())
+            + 16
+        )
+        return max(1, min(legacy, tight))
 
 
 def compile_campaign(grid: Grid, campaign: Campaign) -> LegTable:
@@ -542,8 +601,11 @@ def compile_bank(
     lane-friendly kernel operands).
 
     **Bucketing contract** (``n_buckets > 1`` returns a
-    :class:`BucketedBank`): scenarios are sorted by the key ``(resolved
-    max_ticks, max_ticks_upper_bound(), n_legs)`` and split into
+    :class:`BucketedBank`): scenarios are sorted by the key
+    ``(min(resolved max_ticks, table-typical bound), resolved max_ticks,
+    n_legs)`` — the typical bound is ``max_ticks_upper_bound(
+    bg_override_cap=0.0)``, which tracks realized simulated length where
+    the resolved (override-robust) cap does not — and split into
     ``n_buckets`` contiguous, near-equal-count groups, so each sub-bank
     groups scenarios of similar simulated length and size. Each bucket is
     padded to **its own** member maxima (optionally raised by
@@ -551,6 +613,10 @@ def compile_bank(
     ``pad_multiple``), and its engine trace runs only until the bucket's own
     slowest scenario finishes — no scenario ticks past its bucket's bound,
     which is what closes the warm-bank throughput gap of monolithic padding.
+    The engine also resolves its fused tick window per bucket (capped at
+    the bucket's tick bound's power-of-two bracket), so the bandwidth-aware
+    :meth:`LegTable.max_ticks_upper_bound` both groups scenarios of similar
+    simulated length and keeps short buckets from paying long windows.
 
     The **scenario index map is stable**: within each bucket, scenarios keep
     ascending original order, so ``bucket_of[i]`` / ``slot_of[i]`` are
@@ -584,11 +650,22 @@ def compile_bank(
             f"got {len(bucket_pad_floors)}"
         )
 
-    # sort by simulated length (resolved cap, then the compile-time upper
-    # bound, then leg count) and split into near-equal contiguous groups
-    bounds = np.array([t.max_ticks_upper_bound() for t in tables], np.int64)
+    # sort by *expected* simulated length and split into near-equal
+    # contiguous groups. The resolved cap is robust to calibration bg
+    # overrides (see max_ticks_upper_bound's bg_override_cap) and therefore
+    # a poor predictor of how long a scenario actually runs; the
+    # table-typical bound (override cap 0 — the compiled moments only)
+    # tracks realized length, which is what groups buckets so no fast
+    # scenario waits on a slow one's tick chain. Binding explicit caps
+    # still dominate via the min.
+    typical = np.array(
+        [t.max_ticks_upper_bound(bg_override_cap=0.0) for t in tables],
+        np.int64,
+    )
+    resolved = np.array(ticks, np.int64)
+    expected = np.minimum(resolved, typical)
     legs = np.array([t.n_legs for t in tables], np.int64)
-    order = np.lexsort((legs, bounds, np.array(ticks, np.int64)))
+    order = np.lexsort((legs, resolved, expected))
     groups = [g for g in np.array_split(order, n_buckets) if len(g)]
 
     bucket_of = np.zeros(n, np.int32)

@@ -26,6 +26,7 @@ __all__ = [
     "default_backend",
     "grid_tick",
     "grid_tick_bank",
+    "grid_tick_bank_fused",
     "flash_attention",
     "decode_attention",
     "mlstm_chunk",
@@ -149,6 +150,124 @@ def grid_tick_bank(
         leg_proc, proc_link, leg_link,
         interpret=(b == "pallas_interpret"),
     )
+
+
+def _bank_noise_chain(
+    n_links: int, key: jax.Array, window: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Pre-draw one window of background noise for the fused kernel:
+    ``window`` unconditional replays of :func:`repro.kernels.ref.bank_split_draw`
+    — the exact per-tick split-and-draw stream — collected as
+    ``noise [K, S, R, L]`` plus the key chain ``[K + 1, S, R, 2]`` (entry
+    ``j`` = the carry key after ``j`` splits, so an element that runs ``j``
+    alive ticks inside the window resumes from ``chain[j]``, keys of frozen
+    elements included)."""
+
+    def draw(k, _):
+        nk, noise = ref.bank_split_draw(k, n_links)
+        return nk, (nk, noise)
+
+    _, (keys_k, noise_k) = jax.lax.scan(draw, key, None, length=window)
+    chain = jnp.concatenate([key[None], keys_k], axis=0)
+    return chain, noise_k
+
+
+def grid_tick_bank_fused(
+    state: Tuple[jax.Array, ...],  # ref.BANK_WINDOW_STATE_FIELDS layout
+    bg_mu: jax.Array,  # [S, 1, L] or [S, R, L]
+    bg_sigma: jax.Array,  # [S, 1, L] or [S, R, L]
+    release: jax.Array,  # [S, T] i32
+    dep: jax.Array,  # [S, T] i32 (-1 = none)
+    bg_period: jax.Array,  # [S, L] i32
+    max_ticks: jax.Array,  # [S] i32
+    keep_frac: jax.Array,  # [S, T] or [S, R, T]
+    bandwidth: jax.Array,  # [S, L]
+    leg_proc: jax.Array,  # [S, T, P]
+    proc_link: jax.Array,  # [S, P, L]
+    leg_link: jax.Array,  # [S, T, L]
+    *,
+    window: int,
+    leap: bool = False,
+    backend: Optional[str] = None,
+    key: Optional[jax.Array] = None,  # [S, R, 2] carried PRNG keys
+    noise: Optional[jax.Array] = None,  # [K, S, R, L] predrawn normals
+):
+    """``window`` fused simulation ticks of a scenario bank in one dispatch.
+
+    This is the hot body of the windowed banked engine: instead of one
+    ``grid_tick_bank`` launch (plus a full HBM round-trip of the carry and a
+    ``while_loop`` cond evaluation) *per tick*, one call advances every
+    (scenario, replica) element by up to ``window`` ticks, freezing elements
+    that finish or hit their scenario's ``max_ticks`` mid-window. ``state``
+    follows :data:`repro.kernels.ref.BANK_WINDOW_STATE_FIELDS`.
+
+    RNG modes (exactly one): with ``key=`` the per-element keys ride along —
+    split in-step on the XLA scan (bitwise-stable across window sizes), or
+    pre-drawn into a key chain for the Pallas kernel and re-synchronized
+    from its alive-step counts — and the call returns ``(state, key)``.
+    With ``noise=`` the predrawn rows are consumed as-is and the ``state``
+    tuple alone returns (the raw kernel contract, used by the parity tests).
+
+    Backend dispatch: ``xla`` runs the :func:`repro.kernels.ref.grid_tick_bank_window`
+    scan over the reference tick; ``pallas`` / ``pallas_interpret`` run the
+    fused kernel (``grid_tick_bank_fused_pallas``) that keeps the whole carry
+    resident in VMEM for all ``window`` ticks and early-exits when a tile's
+    replicas all finish. ``leap=True`` makes every inner step an event leap;
+    the Pallas path then falls back to the reference scan driving the
+    per-tick bank kernel (the leap body's data-dependent event search does
+    not pay off inside one kernel), so leap windows still leap.
+    """
+    if len(state) != len(ref.BANK_WINDOW_STATE_FIELDS):
+        raise ValueError(
+            f"grid_tick_bank_fused: state must carry "
+            f"{len(ref.BANK_WINDOW_STATE_FIELDS)} arrays "
+            f"({', '.join(ref.BANK_WINDOW_STATE_FIELDS)}): got {len(state)}"
+        )
+    if window < 1:
+        raise ValueError(f"grid_tick_bank_fused: window must be >= 1: {window}")
+    if (key is None) == (noise is None):
+        raise ValueError(
+            "grid_tick_bank_fused: pass exactly one of key= or noise="
+        )
+    if noise is not None and (noise.ndim != 4 or noise.shape[0] != window):
+        raise ValueError(
+            f"grid_tick_bank_fused: noise must be [window={window}, S, R, L]: "
+            f"{noise.shape}"
+        )
+    if bg_mu.ndim != 3 or bg_sigma.ndim != 3:
+        raise ValueError(
+            "grid_tick_bank_fused: bg moments must be [S, 1, L] or "
+            f"[S, R, L]: {bg_mu.shape}, {bg_sigma.shape}"
+        )
+    b = _resolve(backend)
+    if b == "xla" or leap:
+        # tick=None selects the reference scan's built-in index-based
+        # fair-share tick (gathers beat tiny one-hot matmuls off-TPU); the
+        # Pallas leap path injects the bank kernel per event step instead
+        tick = None if b == "xla" else functools.partial(grid_tick_bank, backend=b)
+        return ref.grid_tick_bank_window(
+            state, bg_mu, bg_sigma, release, dep, bg_period, max_ticks,
+            keep_frac, bandwidth, leg_proc, proc_link, leg_link,
+            leap=leap, tick=tick, key=key, noise=noise, window=window,
+        )
+    from repro.kernels import grid_tick as _k
+
+    chain = None
+    if key is not None:
+        chain, noise = _bank_noise_chain(bg_mu.shape[-1], key, window)
+    out = _k.grid_tick_bank_fused_pallas(
+        state, noise, bg_mu, bg_sigma, release, dep, bg_period, max_ticks,
+        keep_frac, bandwidth, leg_proc, proc_link, leg_link,
+        interpret=(b == "pallas_interpret"),
+    )
+    if chain is None:
+        return out
+    steps = out[1]
+    s, r = steps.shape
+    key = jnp.take_along_axis(
+        chain, jnp.broadcast_to(steps[None, :, :, None], (1, s, r, 2)), axis=0
+    )[0]
+    return out, key
 
 
 def flash_attention(

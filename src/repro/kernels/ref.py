@@ -7,13 +7,14 @@ backends without Pallas support (CPU dry-run).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 __all__ = [
     "grid_tick",
+    "grid_tick_bank_window",
     "flash_attention",
     "decode_attention",
     "mlstm_chunk",
@@ -66,6 +67,274 @@ def grid_tick(
     proc_xfer = row(xfer, leg_proc)  # [..., P]
     link_xfer = row(xfer, leg_link)  # [..., L]
     return xfer, proc_xfer, link_xfer
+
+
+# ---------------------------------------------------------------------------
+# grid_tick_bank_window: K fused simulation ticks over a scenario bank
+# ---------------------------------------------------------------------------
+
+#: Window-body carry layout shared by the reference scan, the Pallas fused
+#: kernel and the engine: per-(scenario, replica) tick clock and alive-step
+#: count, then the per-leg transfer state, then the per-link background load.
+BANK_WINDOW_STATE_FIELDS = (
+    "t",          # [S, R] i32 current tick of each (scenario, replica)
+    "steps",      # [S, R] i32 alive inner steps taken inside this window
+    "remaining",  # [S, R, T] f32 MB left per leg
+    "done",       # [S, R, T] bool
+    "started",    # [S, R, T] bool
+    "t_start",    # [S, R, T] i32 first active tick
+    "t_end",      # [S, R, T] i32 completion tick
+    "conth",      # [S, R, T] f32 sibling-thread traffic accumulator
+    "conpr",      # [S, R, T] f32 other-process traffic accumulator
+    "bg",         # [S, R, L] f32 current background load
+)
+
+
+def _bank_dep_ok(dep: jax.Array, done: jax.Array) -> jax.Array:
+    """``done[s, r, dep[s, t]]`` with -1 mapping to True: [S, R, T]."""
+    idx = jnp.broadcast_to(jnp.maximum(dep, 0)[:, None, :], done.shape)
+    gathered = jnp.take_along_axis(done, idx, axis=2)
+    return jnp.where(dep[:, None, :] >= 0, gathered, True)
+
+
+def bank_split_draw(
+    key: jax.Array, n_links: int
+) -> Tuple[jax.Array, jax.Array]:
+    """One background-resample draw of the banked RNG stream: split every
+    (scenario, replica) key once and draw its ``[n_links]`` normals —
+    ``([S, R, 2] keys, [S, R, 2] -> ([S, R, 2], [S, R, L]))``.
+
+    This is the **canonical** per-tick split-and-draw sequence: the window
+    scan's ``key=`` mode consumes it in-step, and the fused kernel's
+    key-chain precompute (``ops._bank_noise_chain``) replays it
+    unconditionally — the chain resync from alive-step counts is only
+    correct while both sides draw from this one helper, so any change to
+    the split order or draw shape must happen here.
+    """
+    pair = jax.vmap(jax.vmap(jax.random.split))(key)  # [S, R, 2, 2]
+    nk, sub = pair[:, :, 0], pair[:, :, 1]
+    noise = jax.vmap(
+        jax.vmap(lambda kk: jax.random.normal(kk, (n_links,)))
+    )(sub)
+    return nk, noise
+
+
+def grid_tick_bank_window(
+    state: Tuple[jax.Array, ...],  # see BANK_WINDOW_STATE_FIELDS
+    bg_mu: jax.Array,  # [S, 1, L] or [S, R, L] background-load mean
+    bg_sigma: jax.Array,  # [S, 1, L] or [S, R, L]
+    release: jax.Array,  # [S, T] i32
+    dep: jax.Array,  # [S, T] i32 (-1 = none)
+    bg_period: jax.Array,  # [S, L] i32
+    max_ticks: jax.Array,  # [S] i32 per-scenario tick bound
+    keep_frac: jax.Array,  # [S, T] or [S, R, T]
+    bandwidth: jax.Array,  # [S, L]
+    leg_proc: jax.Array,  # [S, T, P]
+    proc_link: jax.Array,  # [S, P, L]
+    leg_link: jax.Array,  # [S, T, L]
+    *,
+    leap: bool,
+    tick: Optional[Callable[..., Tuple[jax.Array, jax.Array, jax.Array]]] = None,
+    key: Optional[jax.Array] = None,  # [S, R, 2] carried PRNG keys
+    noise: Optional[jax.Array] = None,  # [K, S, R, L] predrawn normals
+    window: Optional[int] = None,  # required with key=
+):
+    """Reference fused window: ``K`` simulation ticks of a whole scenario bank
+    as one ``lax.scan``, element-for-element identical to ``K`` iterations of
+    the per-tick banked body under its alive freeze.
+
+    The freeze is folded into the update masks instead of a post-hoc carry
+    select: a (scenario, replica) element is *alive* while its clock is below
+    its scenario's ``max_ticks`` and it still has unfinished legs. Masking
+    ``active`` (and the clock/background updates) by aliveness is bitwise
+    identical to freezing the whole carry — a frozen element transfers
+    nothing, so every other state array is a fixed point of the tick update.
+
+    Background randomness comes in two modes:
+
+    - ``key=`` (the engine's XLA path): each inner step splits every
+      (scenario, replica) key once and draws its normals in-step — the
+      identical subgraph at the identical ``[S, R, L]`` shape for every
+      window size, which is what keeps results *bitwise* stable across
+      ``K`` (hoisting the draws to a ``[K, ...]`` batch invites XLA to
+      contract the ``mu + sigma * noise`` FMA differently per shape).
+      Frozen elements keep their key: returns ``(state, key)``.
+    - ``noise=`` (the fused-kernel contract): the K predrawn normal rows
+      are consumed one per tick and ``steps`` tells the caller how many
+      splits to advance each element's key chain by. Returns ``state``.
+
+    ``leap=True`` makes every inner step an event leap (the window then
+    covers up to ``K`` *events*, not ticks — windows leap, they never degrade
+    to dt=1). ``tick`` is the bank fair-share kernel to drive (the
+    ``ops.grid_tick_bank`` signature); keeping it injectable lets the
+    interpret-mode kernel and the TPU kernel share this scan. With
+    ``tick=None`` the window runs its built-in **index-based** fair-share
+    tick: because the incidence matrices are one-hot, every gather-direction
+    contraction (process/link quantities back to legs) is a
+    ``take_along_axis`` by the precomputed ``argmax`` index — bit-identical
+    to the one-hot matmul (a dot against a one-hot row sums one term and
+    zeros) but an order of magnitude cheaper than tiny batched matmuls on
+    CPU/GPU — and the two scatter-direction sums share one concatenated
+    incidence matmul. TPU paths keep the MXU-friendly einsum forms.
+    """
+    f32 = jnp.float32
+    i32 = jnp.int32
+    if (key is None) == (noise is None):
+        raise ValueError(
+            "grid_tick_bank_window: pass exactly one of key= (draw in-step) "
+            "or noise= (predrawn rows)"
+        )
+    if key is not None and window is None:
+        raise ValueError("grid_tick_bank_window: key= mode requires window=")
+    n_links = bg_mu.shape[-1]
+
+    if tick is None:
+        # index-based CPU/GPU lowering of the one-hot contractions; the
+        # index tables and the concatenated scatter incidence are computed
+        # once, outside the scan
+        proc_of_leg = jnp.argmax(leg_proc, axis=-1).astype(i32)  # [S, T]
+        link_of_leg = jnp.argmax(leg_link, axis=-1).astype(i32)  # [S, T]
+        m_cat = jnp.concatenate([leg_proc, leg_link], axis=-1)  # [S,T,P+L]
+        n_procs = leg_proc.shape[-1]
+        keep3 = keep_frac if keep_frac.ndim == 3 else keep_frac[:, None]
+
+        def to_legs(v: jax.Array, idx: jax.Array) -> jax.Array:
+            """Gather per-proc/link values back to legs: [S, R, X] -> [S, R, T]."""
+            full = jnp.broadcast_to(
+                idx[:, None, :], v.shape[:2] + idx.shape[-1:]
+            )
+            return jnp.take_along_axis(v, full, axis=2)
+
+        leg_from_proc = lambda v: to_legs(v, proc_of_leg)
+        leg_from_link = lambda v: to_legs(v, link_of_leg)
+
+        def scatter_pl(v: jax.Array) -> Tuple[jax.Array, jax.Array]:
+            """Per-process and per-link sums of a per-leg quantity, as one
+            batched matmul against the concatenated one-hot incidences."""
+            both = jnp.einsum("srt,stx->srx", v, m_cat)
+            return both[..., :n_procs], both[..., n_procs:]
+
+        def tick(a, remaining, _keep, bg, bandwidth_, _lp, _pl, _ll):
+            threads = jnp.einsum("srt,stp->srp", a, leg_proc)
+            proc_active = (threads > 0).astype(f32)
+            campaign = jnp.einsum("srp,spl->srl", proc_active, proc_link)
+            denom = jnp.maximum(campaign + jnp.maximum(bg, 0.0), 1.0)
+            per_proc_bw = bandwidth_[:, None, :] / denom  # [S, R, L]
+            per_proc_bw_leg = leg_from_link(per_proc_bw)
+            threads_leg = jnp.maximum(leg_from_proc(threads), 1.0)
+            chunk = a * keep3 * per_proc_bw_leg / threads_leg
+            xfer = jnp.minimum(remaining, chunk)
+            proc_xfer, link_xfer = scatter_pl(xfer)
+            return xfer, proc_xfer, link_xfer
+    else:
+        leg_from_proc = lambda v: jnp.einsum("stp,srp->srt", leg_proc, v)
+        leg_from_link = lambda v: jnp.einsum("stl,srl->srt", leg_link, v)
+        scatter_pl = lambda v: (
+            jnp.einsum("srt,stp->srp", v, leg_proc),
+            jnp.einsum("srt,stl->srl", v, leg_link),
+        )
+
+    def step(carry, noise_t):
+        (t, steps, remaining, done, started, t_start, t_end, conth, conpr,
+         bg), k = carry
+        alive = (t < max_ticks[:, None]) & ~jnp.all(done, axis=-1)  # [S, R]
+        t3 = t[:, :, None]
+        if k is not None:
+            # the canonical split-and-draw sequence (see bank_split_draw);
+            # frozen elements keep their key (vmap-of-while semantics)
+            nk, noise_t = bank_split_draw(k, n_links)
+            k = jnp.where(alive[:, :, None], nk, k)
+        fresh_t = jnp.maximum(bg_mu + bg_sigma * noise_t, 0.0)
+        due = (t3 % bg_period[:, None, :] == 0) & alive[:, :, None]
+        bg = jnp.where(due, fresh_t, bg)
+
+        dep_done = _bank_dep_ok(dep, done)
+        active = (
+            (~done) & (release[:, None, :] <= t3) & dep_done
+            & alive[:, :, None]
+        )
+        a = active.astype(f32)
+
+        if not leap:
+            xfer, proc_xfer, link_xfer = tick(
+                a, remaining, keep_frac, bg, bandwidth,
+                leg_proc, proc_link, leg_link,
+            )
+            remaining = remaining - xfer
+            newly_done = active & (remaining <= 1e-6)
+            done = done | newly_done
+            own_proc_xfer = leg_from_proc(proc_xfer)
+            own_link_xfer = leg_from_link(link_xfer)
+            conth = conth + a * (own_proc_xfer - xfer)
+            conpr = conpr + a * (own_link_xfer - own_proc_xfer)
+            t_start = jnp.where(active & (~started), t3, t_start)
+            started = started | active
+            t_end = jnp.where(newly_done, t3 + 1, t_end)
+            adv = alive.astype(i32)
+        else:
+            inf_rem = jnp.full_like(remaining, jnp.inf)
+            rate, proc_rate, link_rate = tick(
+                a, inf_rem, keep_frac, bg, bandwidth,
+                leg_proc, proc_link, leg_link,
+            )
+            ttc = jnp.where(
+                active & (rate > 0),
+                jnp.ceil(remaining / jnp.maximum(rate, 1e-30)),
+                jnp.inf,
+            )
+            pending = (~done) & (release[:, None, :] > t3)
+            t_rel = jnp.where(
+                pending, (release[:, None, :] - t3).astype(f32), jnp.inf
+            )
+            # sigma=0 links hold bg = max(mu, 0) from t=0 forever — their
+            # resample ticks are rate no-ops, so they never throttle dt
+            # (mirrors the per-sim leap body; keeps the leap exact)
+            t_bg = jnp.where(
+                bg_sigma > 0,
+                (bg_period[:, None, :] - t3 % bg_period[:, None, :])
+                .astype(f32),  # >= 1
+                jnp.inf,
+            )
+            dt = jnp.minimum(
+                jnp.minimum(jnp.min(ttc, axis=-1), jnp.min(t_rel, axis=-1)),
+                jnp.min(t_bg, axis=-1),
+            )  # [S, R]
+            dt = jnp.where(jnp.isfinite(dt), jnp.maximum(dt, 1.0), 1.0)
+            dt3 = dt[:, :, None]
+
+            rem_mid = remaining - a * rate * (dt3 - 1.0)
+            xfer_f = jnp.minimum(rem_mid, rate) * a
+            proc_xfer_f, link_xfer_f = scatter_pl(xfer_f)
+            remaining = rem_mid - xfer_f
+
+            own_proc_rate = leg_from_proc(proc_rate)
+            own_link_rate = leg_from_link(link_rate)
+            own_proc_f = leg_from_proc(proc_xfer_f)
+            own_link_f = leg_from_link(link_xfer_f)
+            conth = conth + a * ((own_proc_rate - rate) * (dt3 - 1.0)
+                                 + (own_proc_f - xfer_f))
+            conpr = conpr + a * ((own_link_rate - own_proc_rate) * (dt3 - 1.0)
+                                 + (own_link_f - own_proc_f))
+
+            newly_done = active & (remaining <= 1e-6)
+            done = done | newly_done
+            t_start = jnp.where(active & (~started), t3, t_start)
+            started = started | active
+            t_end = jnp.where(newly_done, t3 + dt3.astype(i32), t_end)
+            adv = dt.astype(i32) * alive.astype(i32)
+
+        return ((
+            t + adv, steps + alive.astype(i32), remaining, done, started,
+            t_start, t_end, conth, conpr, bg,
+        ), k), None
+
+    if key is not None:
+        (final, key), _ = jax.lax.scan(
+            step, (tuple(state), key), None, length=window
+        )
+        return final, key
+    (final, _), _ = jax.lax.scan(step, (tuple(state), None), noise)
+    return final
 
 
 # ---------------------------------------------------------------------------

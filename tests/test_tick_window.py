@@ -1,0 +1,337 @@
+"""Parity suite for fused multi-tick simulation windows.
+
+The windowed engine (``window=K``) must be **bit-identical** to per-tick
+execution (``window=1``) for every lowering and every K — including the
+stochastic background RNG stream, frozen carries of finished
+(scenario, replica) elements at window boundaries, and the event-leap
+interaction (leap windows leap, they never degrade to dt=1). Pinned here:
+
+- per-sim ``simulate`` and the vmap bank lowering (inner-scan freeze mask);
+- the manual banked lowering through ``ops.grid_tick_bank_fused``;
+- the bucketed fleet path (per-bucket window resolution) and streamed
+  fleets (shared-trace chunk banks);
+- the fused Pallas kernel against the reference scan under
+  ``interpret=True``;
+- the host-driven stepped program with donated carry buffers.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import (
+    SimSpec,
+    bank_spec,
+    count_bank_traces,
+    default_tick_window,
+    make_bank_params,
+    make_params,
+    reset_bank_trace_count,
+    simulate,
+    simulate_bank,
+    simulate_bank_stepped,
+)
+from repro.core.fleet import Fleet
+from repro.core.scenarios import build_bank, sample_scenarios
+from repro.core.workload import compile_bank
+from repro.kernels import ops
+
+FIELDS = ("transfer_time", "conth_mb", "conpr_mb", "done", "ticks",
+          "start_tick", "profile", "size_mb")
+WINDOWS = (7, 64, 10**6)  # covers K <, ~ and >> every max_ticks used here
+
+
+def _keys(n, r=2, seed=0):
+    return jax.random.split(jax.random.PRNGKey(seed), n * r).reshape(n, r, 2)
+
+
+def _assert_bitwise(a, b, msg=""):
+    for f in FIELDS:
+        x = np.asarray(getattr(a, f))
+        y = np.asarray(getattr(b, f))
+        np.testing.assert_array_equal(x, y, err_msg=f"{msg}{f}")
+
+
+def _assert_close(a, b, msg="", rtol=1e-5, atol=1e-5):
+    for f in FIELDS:
+        np.testing.assert_allclose(
+            np.asarray(getattr(a, f), np.float64),
+            np.asarray(getattr(b, f), np.float64),
+            rtol=rtol, atol=atol, err_msg=f"{msg}{f}",
+        )
+
+
+# ---------------------------------------------------------------------------
+# per-sim and vmap lowering
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("leap", [False, True])
+def test_simulate_windowed_bitwise(leap):
+    """The per-sim loop: K fused ticks == K per-tick iterations, bit for
+    bit, stochastic background included."""
+    bank = build_bank(n=1, seed=3, max_ticks=400)
+    table = bank.scenario_table(0)
+    spec = SimSpec.from_table(table, max_ticks=400)
+    params = make_params(table, bg_mu=4.0, bg_sigma=2.0)
+    key = jax.random.PRNGKey(5)
+    base = simulate(spec, params, key, leap=leap, window=1)
+    for k in (7, 64, 417):
+        win = simulate(spec, params, key, leap=leap, window=k)
+        _assert_bitwise(base, win, msg=f"leap={leap} K={k} ")
+
+
+@pytest.mark.parametrize("leap", [False, True])
+@pytest.mark.parametrize("lowering", ["vmap", "banked"])
+def test_bank_windowed_bitwise(leap, lowering):
+    n = 4
+    bank = build_bank(n=n, seed=8, max_ticks=2_000)
+    params = make_bank_params(bank, bg_mu=5.0, bg_sigma=2.0)
+    keys = _keys(n, 3, seed=8)
+    base = simulate_bank(bank, params, keys, leap=leap, lowering=lowering,
+                         window=1)
+    for k in WINDOWS:
+        win = simulate_bank(bank, params, keys, leap=leap, lowering=lowering,
+                            window=k)
+        _assert_bitwise(base, win, msg=f"{lowering} leap={leap} K={k} ")
+
+
+def test_stochastic_keep_frac_rng_stream_parity():
+    """Per-(scenario, replica) keep fractions — the calibration
+    presimulation shape — keep the exact RNG stream across window sizes,
+    and the windowed lowerings still agree with each other."""
+    n, r = 3, 4
+    bank = build_bank(["wlcg-remote", "bursty"], n=n, seed=9, max_ticks=2_000)
+    base_p = make_bank_params(bank, bg_mu=3.0, bg_sigma=1.5)
+    rng = np.random.RandomState(0)
+    keep = np.broadcast_to(
+        np.asarray(base_p.keep_frac)[:, None, :], (n, r, bank.pad_legs)
+    ) * rng.uniform(0.9, 1.0, (n, r, 1)).astype(np.float32)
+    params = base_p._replace(
+        keep_frac=jnp.asarray(keep),
+        bg_mu=jnp.broadcast_to(base_p.bg_mu[:, None, :], (n, r, bank.pad_links)),
+        bg_sigma=jnp.broadcast_to(
+            base_p.bg_sigma[:, None, :], (n, r, bank.pad_links)
+        ),
+    )
+    keys = _keys(n, r, seed=9)
+    for lowering in ("vmap", "banked"):
+        base = simulate_bank(bank, params, keys, leap=True, lowering=lowering,
+                             window=1)
+        win = simulate_bank(bank, params, keys, leap=True, lowering=lowering,
+                            window=16)
+        _assert_bitwise(base, win, msg=f"{lowering} per-replica ")
+    res_v = simulate_bank(bank, params, keys, leap=True, lowering="vmap",
+                          window=16)
+    res_b = simulate_bank(bank, params, keys, leap=True, lowering="banked",
+                          window=16)
+    _assert_close(res_v, res_b, msg="windowed cross-lowering ")
+
+
+# ---------------------------------------------------------------------------
+# bucketed and streamed fleets
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("leap", [False, True])
+def test_bucketed_fleet_windowed_bitwise(leap):
+    """Bucketed banks resolve the window per bucket (capped at each
+    bucket's own tick bound's pow2 bracket) and stay bit-exact vs
+    per-tick."""
+    bank = compile_bank(sample_scenarios(n=8, seed=4), n_buckets=3)
+    params = make_bank_params(bank, bg_mu=3.0, bg_sigma=1.0)
+    keys = _keys(8, 2, seed=4)
+    base = simulate_bank(bank, params, keys, leap=leap, window=1)
+    for k in WINDOWS:
+        win = simulate_bank(bank, params, keys, leap=leap, window=k)
+        _assert_bitwise(base, win, msg=f"bucketed leap={leap} K={k} ")
+
+
+def test_streamed_fleet_windowed_bitwise():
+    pairs = sample_scenarios(n=6, seed=5)
+    fleet = Fleet.from_pairs(pairs, max_ticks=2_000, leap=True)
+    kw = dict(chunk=2, key=jax.random.PRNGKey(7), replicas=2, max_ticks=2_000)
+    per_tick = [c.result for c in fleet.stream(iter(pairs), window=1, **kw)]
+    windowed = [c.result for c in fleet.stream(iter(pairs), window=16, **kw)]
+    assert len(per_tick) == len(windowed) == 3
+    for i, (a, b) in enumerate(zip(per_tick, windowed)):
+        _assert_bitwise(a, b, msg=f"stream chunk {i} ")
+
+
+def test_fleet_window_default_and_override():
+    fleet = Fleet.from_scenarios(n=2, seed=6, max_ticks=500, window=4)
+    assert fleet.window == 4
+    keys = _keys(2, 2, seed=6)
+    res_default = fleet.run(keys=keys)          # fleet default window=4
+    res_override = fleet.run(keys=keys, window=1)
+    _assert_bitwise(res_default, res_override, msg="fleet window knob ")
+
+
+# ---------------------------------------------------------------------------
+# frozen carries at window boundaries
+# ---------------------------------------------------------------------------
+
+def test_frozen_carry_semantics_at_window_boundaries():
+    """Scenarios with wildly different max_ticks freeze mid-window: the
+    truncated scenario's clock (and every other carry) must stop exactly
+    where the per-tick loop stops, for window sizes that straddle the
+    boundary."""
+    pairs = sample_scenarios(n=4, seed=12)
+    bank = compile_bank(pairs, max_ticks=[5, 37, 2_000, 2_000])
+    params = make_bank_params(bank, bg_mu=4.0, bg_sigma=2.0)
+    keys = _keys(4, 3, seed=12)
+    base = simulate_bank(bank, params, keys, lowering="banked", window=1)
+    ticks = np.asarray(base.ticks)
+    assert (ticks[0] <= 5).all() and (ticks[1] <= 37).all()
+    assert (~np.asarray(base.done)).any(), "fixture must truncate some legs"
+    for k in (2, 5, 7, 64):  # boundaries inside, at, and past the window
+        win = simulate_bank(bank, params, keys, lowering="banked", window=k)
+        _assert_bitwise(base, win, msg=f"frozen carry K={k} ")
+
+
+# ---------------------------------------------------------------------------
+# fused Pallas kernel (interpret mode) vs the reference scan
+# ---------------------------------------------------------------------------
+
+def test_fused_kernel_interpret_matches_ref_engine_level():
+    """The whole banked engine on the fused interpret-mode kernel vs the
+    XLA reference window — windows, freezes, and RNG re-sync included."""
+    n = 4
+    bank = build_bank(n=n, seed=11, max_ticks=2_000)
+    params = make_bank_params(bank, bg_mu=4.0, bg_sigma=1.5)
+    keys = _keys(n, 2, seed=11)
+    res_x = simulate_bank(bank, params, keys, lowering="banked",
+                          backend="xla", window=8)
+    res_p = simulate_bank(bank, params, keys, lowering="banked",
+                          backend="pallas_interpret", window=8)
+    _assert_close(res_x, res_p, rtol=1e-4, atol=1e-3, msg="fused interpret ")
+    # leap windows leap on the kernel path too (ref scan driving the
+    # per-tick bank kernel)
+    res_xl = simulate_bank(bank, params, keys, lowering="banked",
+                           backend="xla", leap=True, window=8)
+    res_pl = simulate_bank(bank, params, keys, lowering="banked",
+                           backend="pallas_interpret", leap=True, window=8)
+    _assert_close(res_xl, res_pl, rtol=1e-4, atol=1e-3, msg="leap interpret ")
+
+
+def test_fused_kernel_interpret_matches_ref_op_level():
+    """Raw ``ops.grid_tick_bank_fused`` in noise= mode: the Pallas kernel
+    and the reference scan consume identical predrawn noise and must agree
+    on every state array, alive-step counts included."""
+    n = 3
+    bank = build_bank(n=n, seed=14, max_ticks=300)
+    spec = bank_spec(bank)
+    params = make_bank_params(bank, bg_mu=2.0, bg_sigma=1.0)
+    S, R, K = n, 2, 6
+    L = bank.pad_links
+    T = bank.pad_legs
+    rng = np.random.RandomState(1)
+    state = (
+        jnp.zeros((S, R), jnp.int32),
+        jnp.zeros((S, R), jnp.int32),
+        jnp.broadcast_to(spec.size_mb[:, None, :], (S, R, T)),
+        jnp.asarray(~np.broadcast_to(bank.leg_valid[:, None, :], (S, R, T))),
+        jnp.zeros((S, R, T), bool),
+        jnp.zeros((S, R, T), jnp.int32),
+        jnp.zeros((S, R, T), jnp.int32),
+        jnp.zeros((S, R, T), jnp.float32),
+        jnp.zeros((S, R, T), jnp.float32),
+        jnp.zeros((S, R, L), jnp.float32),
+    )
+    noise = jnp.asarray(rng.standard_normal((K, S, R, L)), jnp.float32)
+    mu = params.bg_mu[:, None, :]
+    sigma = params.bg_sigma[:, None, :]
+    args = (
+        spec.release, spec.dep, spec.bg_period, spec.max_ticks,
+        params.keep_frac, spec.bandwidth, spec.leg_proc, spec.proc_link,
+        spec.leg_link,
+    )
+    out_x = ops.grid_tick_bank_fused(
+        state, mu, sigma, *args, window=K, backend="xla", noise=noise
+    )
+    out_p = ops.grid_tick_bank_fused(
+        state, mu, sigma, *args, window=K, backend="pallas_interpret",
+        noise=noise,
+    )
+    from repro.kernels.ref import BANK_WINDOW_STATE_FIELDS
+
+    for name, x, p in zip(BANK_WINDOW_STATE_FIELDS, out_x, out_p):
+        np.testing.assert_allclose(
+            np.asarray(x, np.float64), np.asarray(p, np.float64),
+            rtol=1e-5, atol=1e-4, err_msg=name,
+        )
+
+
+def test_fused_op_validates_inputs():
+    state = tuple(jnp.zeros((1, 1)) for _ in range(10))
+    mu = jnp.zeros((1, 1, 2))
+    with pytest.raises(ValueError, match="exactly one of"):
+        ops.grid_tick_bank_fused(
+            state, mu, mu, *([jnp.zeros((1, 2))] * 9), window=4
+        )
+    with pytest.raises(ValueError, match="state must carry"):
+        ops.grid_tick_bank_fused(
+            state[:5], mu, mu, *([jnp.zeros((1, 2))] * 9), window=4,
+            key=jnp.zeros((1, 1, 2), jnp.uint32),
+        )
+
+
+# ---------------------------------------------------------------------------
+# stepped execution: donated carries, host-driven loop
+# ---------------------------------------------------------------------------
+
+def test_stepped_program_matches_and_donates_cleanly():
+    """The host-driven stepped loop (donated carry buffers) reproduces the
+    fused while-loop program bit for bit, emits no donation/copy warnings,
+    and leaves the caller's keys untouched."""
+    bank = build_bank(n=4, seed=11, max_ticks=2_000)
+    params = make_bank_params(bank, bg_mu=4.0, bg_sigma=1.5)
+    keys = _keys(4, 2, seed=11)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        stepped = simulate_bank_stepped(bank, params, keys, window=8)
+        jax.block_until_ready(stepped.ticks)
+    bad = [
+        str(w.message) for w in caught
+        if "donat" in str(w.message).lower() or "copy" in str(w.message).lower()
+    ]
+    assert not bad, f"donation must be warning- and copy-free: {bad}"
+    fused = simulate_bank(bank, params, keys, lowering="banked", window=8)
+    _assert_bitwise(fused, stepped, msg="stepped ")
+    # the caller's keys buffer must survive the donated init carry
+    assert np.asarray(keys).shape == (4, 2, 2)
+
+
+# ---------------------------------------------------------------------------
+# window resolution and trace behavior
+# ---------------------------------------------------------------------------
+
+def test_window_resolution(monkeypatch):
+    assert default_tick_window() >= 1
+    assert default_tick_window(leap=True) >= 1
+    bank = build_bank(n=2, seed=0, max_ticks=200)
+    params = make_bank_params(bank)
+    keys = _keys(2, 1)
+    with pytest.raises(ValueError, match="window"):
+        simulate_bank(bank, params, keys, window=0)
+    monkeypatch.setenv("REPRO_TICK_WINDOW", "3")
+    res_env = simulate_bank(bank, params, keys)  # window=None -> env
+    monkeypatch.delenv("REPRO_TICK_WINDOW")
+    res_3 = simulate_bank(bank, params, keys, window=3)
+    _assert_bitwise(res_env, res_3, msg="env window ")
+
+
+def test_window_sizes_share_no_trace_but_repeat_free():
+    """Each window size is its own static shape (one trace), and repeated
+    runs at one size stay retrace-free."""
+    bank = build_bank(n=2, seed=1, max_ticks=200)
+    params = make_bank_params(bank)
+    keys = _keys(2, 1, seed=1)
+    reset_bank_trace_count()
+    with count_bank_traces() as tr:
+        simulate_bank(bank, params, keys, lowering="banked", window=4)
+        simulate_bank(bank, params, keys, lowering="banked", window=4)
+    assert tr.count == 1
+    with count_bank_traces() as tr2:
+        simulate_bank(bank, params, keys, lowering="banked", window=8)
+    assert tr2.count == 1
