@@ -30,12 +30,134 @@ writing the report to ``BENCH_smoke.json`` (the tracked
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
+import subprocess
 import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# sharded-section grids: scenario counts x virtual device counts (CPU via
+# --xla_force_host_platform_device_count, one worker subprocess per device
+# count so each gets its own XLA device topology)
+SHARDED_FULL_S = [256, 4096, 65536]
+SHARDED_FULL_D = [1, 2, 4, 8]
+SHARDED_SMOKE_S = [32]
+SHARDED_SMOKE_D = [1, 2]
+SHARDED_BASE = 16  # distinct scenarios tiled up to each S
+SHARDED_REPLICAS = 4
+SHARDED_SCALE = 1.0  # workload scale: rows must be heavy enough that
+                     # per-row compute (not per-window dispatch) dominates,
+                     # or per-shard early exit can't pay for D extra loops
+SHARDED_PARITY_MAX_S = 4096  # bitwise sharded-vs-unsharded check cap
+
+
+def _tile_bank(bank, order, reps):
+    """Tile a small bank into a large one: rows reordered by ``order`` then
+    each repeated ``reps`` times **consecutively** (np.repeat), so scenarios
+    of similar simulated length land in contiguous runs. Under shard_map
+    that contiguity is what device-local early exit converts into speedup:
+    a shard holding only short scenarios stops dispatching windows long
+    before the shard holding the stragglers. Source tables are dropped
+    (names are tiled); everything else is a dense-array op."""
+    import numpy as np
+
+    from repro.core.workload import ScenarioBank
+
+    arrays = {}
+    for f in dataclasses.fields(ScenarioBank):
+        if f.name in ("protocol_names", "names", "tables"):
+            continue
+        arrays[f.name] = np.repeat(
+            np.asarray(getattr(bank, f.name))[order], reps, axis=0
+        )
+    names = [
+        f"{bank.names[i]}#{j}" for i in order for j in range(reps)
+    ]
+    return ScenarioBank(
+        **arrays,
+        protocol_names=list(bank.protocol_names),
+        names=names,
+        tables=[],
+    )
+
+
+def sharded_worker(args) -> None:
+    """Child-process body of the ``sharded`` section: time the S-scenario
+    tiled fleet on a ``--devices``-wide mesh (this process was launched with
+    that many virtual CPU devices) and print one JSON line."""
+    import jax
+    import numpy as np
+
+    from repro.core.engine import make_bank_params, simulate_bank
+    from repro.core.scenarios import sample_scenarios
+    from repro.core.workload import compile_bank
+
+    D, S, R = args.devices, args.shard_scenarios, SHARDED_REPLICAS
+    assert len(jax.devices()) == D, (len(jax.devices()), D)
+    pairs = sample_scenarios(n=SHARDED_BASE, seed=args.seed,
+                             scale=SHARDED_SCALE)
+    base = compile_bank(pairs)
+    # ascending tick bound -> contiguous length clusters after tiling
+    order = np.argsort(np.asarray(base.max_ticks), kind="stable")
+    bank = _tile_bank(base, order, max(1, S // SHARDED_BASE))
+    params = make_bank_params(bank)
+    keys = jax.random.split(
+        jax.random.PRNGKey(args.seed), S * R
+    ).reshape(S, R, 2)
+
+    run = lambda: simulate_bank(
+        bank, params, keys, leap=True, bucketed=False, mesh=D
+    )
+    t0 = time.time()
+    jax.block_until_ready(run())
+    cold = time.time() - t0
+    warm = float("inf")
+    for _ in range(3):
+        t0 = time.time()
+        out = run()
+        jax.block_until_ready(out)
+        warm = min(warm, time.time() - t0)
+
+    parity = S <= SHARDED_PARITY_MAX_S
+    if parity:
+        ref = simulate_bank(bank, params, keys, leap=True, bucketed=False)
+        for f in out._fields:
+            a, b = np.asarray(getattr(ref, f)), np.asarray(getattr(out, f))
+            assert np.array_equal(a, b), (
+                f"sharded (D={D}) vs unsharded mismatch in {f}"
+            )
+    print(json.dumps({
+        "scenarios": S,
+        "devices": D,
+        "cold_s": round(cold, 3),
+        "warm_s": round(warm, 4),
+        "scenarios_per_sec": round(S / warm, 2),
+        "parity_checked": parity,
+    }))
+
+
+def _spawn_sharded_worker(d: int, s: int, seed: int) -> dict:
+    env = dict(os.environ)
+    flags = [
+        f for f in env.get("XLA_FLAGS", "").split()
+        if not f.startswith("--xla_force_host_platform_device_count")
+    ]
+    flags.append(f"--xla_force_host_platform_device_count={d}")
+    env["XLA_FLAGS"] = " ".join(flags)
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--sharded-worker",
+         "--devices", str(d), "--shard-scenarios", str(s), "--seed", str(seed)],
+        capture_output=True, text=True, env=env, timeout=1800,
+    )
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"sharded worker (D={d}, S={s}) failed:\n{out.stdout}\n{out.stderr}"
+        )
+    return json.loads(out.stdout.strip().splitlines()[-1])
 
 
 def main() -> None:
@@ -55,7 +177,15 @@ def main() -> None:
                     help="tiny fleet, all sections + assertions; writes "
                          "BENCH_smoke.json instead of the tracked report")
     ap.add_argument("--out", default=None)
+    ap.add_argument("--sharded-worker", action="store_true",
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--devices", type=int, default=1, help=argparse.SUPPRESS)
+    ap.add_argument("--shard-scenarios", type=int, default=256,
+                    help=argparse.SUPPRESS)
     args = ap.parse_args()
+    if args.sharded_worker:
+        sharded_worker(args)
+        return
     if args.smoke:
         args.scenarios, args.replicas, args.buckets = 8, 2, 2
         args.stream_chunks = 2
@@ -184,6 +314,16 @@ def main() -> None:
         timed(run_k)  # pay the per-window-size trace outside the timing
         _, warm_k = timed_warm(run_k)
         window_sweep.append({"window": k, "warm_s": round(warm_k, 4)})
+    # seed the persisted autotuner table from the full sweep (smoke fleets
+    # are too small/noisy to trust); default_tick_window() reads this back
+    window_table_path = None
+    if not args.smoke:
+        best_k = min(window_sweep, key=lambda e: e["warm_s"])["window"]
+        mode = "leap" if args.leap else "tick"
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        window_table_path = os.path.relpath(str(engine_lib.record_window_sweep(
+            jax.default_backend(), **{mode: best_k}
+        )), repo)
 
     # per-bucket warm throughput: each sub-bank timed as its own dispatch
     bank_ticks = np.asarray(bank_res.ticks)  # [N, R] realized final ticks
@@ -239,10 +379,55 @@ def main() -> None:
         _, stream_warm = timed_warm(drain)
     stream_retraces = stream_rest.count
 
+    # ---- sharded fleet: scenarios/sec vs device count ---------------------
+    # each device count needs its own XLA device topology, so every (S, D)
+    # cell runs in a worker subprocess launched with
+    # --xla_force_host_platform_device_count=D; workers assert bitwise
+    # sharded-vs-unsharded parity at S <= SHARDED_PARITY_MAX_S
+    sharded_s = SHARDED_SMOKE_S if args.smoke else SHARDED_FULL_S
+    sharded_d = SHARDED_SMOKE_D if args.smoke else SHARDED_FULL_D
+    sharded_entries = []
+    for s in sharded_s:
+        for d in sharded_d:
+            entry = _spawn_sharded_worker(d, s, args.seed)
+            sharded_entries.append(entry)
+            print(f"sharded S={s} D={d}: "
+                  f"{entry['scenarios_per_sec']} scen/s", file=sys.stderr)
+    s_top = max(sharded_s)
+    tp = {
+        e["devices"]: e["scenarios_per_sec"]
+        for e in sharded_entries if e["scenarios"] == s_top
+    }
+    sharded_speedup = round(tp[max(sharded_d)] / tp[min(sharded_d)], 2)
+    sharded_section = {
+        "base_scenarios": SHARDED_BASE,
+        "replicas": SHARDED_REPLICAS,
+        "scale": SHARDED_SCALE,
+        "leap": True,
+        "device_counts": sharded_d,
+        "entries": sharded_entries,
+        "speedup_at_max_devices": sharded_speedup,
+        "speedup_fleet_scenarios": s_top,
+    }
+
     # simulated work: sum over (scenario, replica) of real legs x ticks run
     legs = np.asarray(bank.n_legs, np.float64)
     bank_ticks = np.asarray(bank_res.ticks, np.float64)  # [N, R]
     work = float((legs[:, None] * bank_ticks).sum())
+
+    # identically-shaped buckets share one jit trace, so the cold trace count
+    # equals the number of *distinct* bucket shapes, not the bucket count
+    # (e.g. with the default full fleet, two of the eight buckets share the
+    # (8, 24, 24, 4) shape -> 7 traces).  The shape key is everything the jit
+    # cache keys on per bucket: the padded scenario count (shard padding
+    # included, hence n_scenarios rather than len(scenario_ids)), the three
+    # pad axes, and the *clamped* window static argument
+    distinct_shapes = len({
+        (b.bank.n_scenarios, b.bank.pad_legs, b.bank.pad_procs,
+         b.bank.pad_links,
+         engine_lib._clamp_window(window, int(b.bank.max_ticks.max())))
+        for b in bank.buckets
+    })
 
     report = {
         "n_scenarios": n,
@@ -253,7 +438,9 @@ def main() -> None:
         "pad_links": bank.pad_links,
         "leap": bool(args.leap),
         "window": window,
+        "window_table": window_table_path,
         "bank_traces": bank_traces,
+        "bank_distinct_bucket_shapes": distinct_shapes,
         "loop_cold_s": round(loop_cold, 3),
         "loop_warm_s": round(loop_warm, 3),
         "bank_cold_s": round(bank_cold, 3),
@@ -279,6 +466,7 @@ def main() -> None:
         "stream_cold_s": round(stream_cold, 3),
         "stream_warm_s": round(stream_warm, 3),
         "stream_retraces_after_first": stream_retraces,
+        "sharded": sharded_section,
         "speedup_cold": round(loop_cold / bank_cold, 2),
         "speedup_warm": round(loop_warm / bank_warm, 2),
         "speedup_fresh_fleet": round(loop_fresh / bank_fresh, 2),
@@ -286,12 +474,6 @@ def main() -> None:
     with open(args.out, "w") as f:
         json.dump(report, f, indent=2)
     print(json.dumps(report, indent=2))
-    # identically-shaped buckets share one jit trace, so the cold trace count
-    # equals the number of *distinct* bucket shapes, not the bucket count
-    distinct_shapes = len({
-        (len(b.scenario_ids), b.bank.pad_legs, b.bank.pad_procs, b.bank.pad_links)
-        for b in bank.buckets
-    })
     assert bank_traces == distinct_shapes, (
         f"bucketed fleet traced {bank_traces} times for "
         f"{distinct_shapes} distinct bucket shapes"
@@ -304,6 +486,11 @@ def main() -> None:
     assert stream_retraces == 0, (
         "streamed chunks must reuse the first chunk's trace"
     )
+    if not args.smoke:
+        assert sharded_speedup > 1.0, (
+            f"sharding the S={s_top} fleet over {max(sharded_d)} devices "
+            f"must beat 1 device, got {sharded_speedup}x"
+        )
     if report["speedup_warm"] < 1.0:
         print(
             f"WARNING: warm bucketed fleet ({bank_warm:.3f}s) still trails the "

@@ -16,27 +16,40 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import functools
+import json
 import os
-from typing import NamedTuple, Optional, Tuple, Union
+from typing import NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec
 
-from repro.core.workload import BucketedBank, LegTable, PAD_PROFILE, ScenarioBank
+from repro.core.workload import (
+    BucketedBank,
+    LegTable,
+    PAD_BG_PERIOD,
+    PAD_PROFILE,
+    PAD_PROTOCOL,
+    ScenarioBank,
+)
 from repro.kernels import ops
 
 __all__ = [
     "SimSpec",
     "SimParams",
     "SimResult",
+    "BankCheckpoint",
     "simulate",
     "simulate_batch",
     "bank_spec",
     "make_bank_params",
     "simulate_bank",
     "simulate_bank_stepped",
+    "resolve_mesh",
     "default_tick_window",
+    "record_window_sweep",
     "bank_trace_count",
     "reset_bank_trace_count",
     "count_bank_traces",
@@ -484,6 +497,7 @@ def reset_bank_trace_count(*, clear_caches: bool = True) -> None:
         _simulate_bank.clear_cache()
         _simulate_bank_banked.clear_cache()
         _simulate_bank_bucketed_impl.clear_cache()
+        _simulate_bank_sharded.clear_cache()
         _banked_window_step.clear_cache()
         for fn in list(_cache_clear_hooks):
             fn()
@@ -579,18 +593,18 @@ def make_bank_params(
     )
 
 
-@functools.partial(jax.jit, static_argnames=("backend", "leap", "window"))
-def _simulate_bank(
-    spec: SimSpec,  # stacked [N, ...]
-    params: SimParams,  # fields [N, ...] or [N, R, ...]
-    keys: jax.Array,  # [N, R, 2]
+def _vmap_bank_core(
+    spec: SimSpec,
+    params: SimParams,
+    keys: jax.Array,
     *,
     backend: Optional[str],
     leap: bool,
     window: int = 1,
 ) -> SimResult:
-    global _bank_traces
-    _bank_traces += 1  # executes at trace time only
+    """Unjitted vmap-of-``simulate`` bank program (shared by the jitted
+    monolithic entry point and the shard_map per-device body — every op is
+    row-local over the scenario axis, so sharding it is collective-free)."""
 
     def one_scenario(spec_i: SimSpec, params_i: SimParams, keys_i: jax.Array):
         return jax.vmap(
@@ -611,6 +625,23 @@ def _simulate_bank(
     return jax.vmap(
         one_scenario, in_axes=(_BANK_SPEC_AXES, outer_params_axes, 0)
     )(spec, params, keys)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "leap", "window"))
+def _simulate_bank(
+    spec: SimSpec,  # stacked [N, ...]
+    params: SimParams,  # fields [N, ...] or [N, R, ...]
+    keys: jax.Array,  # [N, R, 2]
+    *,
+    backend: Optional[str],
+    leap: bool,
+    window: int = 1,
+) -> SimResult:
+    global _bank_traces
+    _bank_traces += 1  # executes at trace time only
+    return _vmap_bank_core(
+        spec, params, keys, backend=backend, leap=leap, window=window
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -736,7 +767,25 @@ def _simulate_bank_banked(
     """
     global _bank_traces
     _bank_traces += 1  # executes at trace time only
+    return _banked_core(
+        spec, params, keys, backend=backend, leap=leap, window=window
+    )
 
+
+def _banked_core(
+    spec: SimSpec,
+    params: SimParams,
+    keys: jax.Array,
+    *,
+    backend: Optional[str],
+    leap: bool,
+    window: int = 1,
+) -> SimResult:
+    """Unjitted banked while-loop program (shared by the jitted monolithic
+    entry point and the shard_map per-device body). Under shard_map the loop
+    condition is evaluated per device shard — no collectives anywhere in
+    cond or body — so a shard whose scenarios all finish early stops
+    dispatching windows while its neighbours keep ticking."""
     init = _banked_init_carry(spec, params, keys)
 
     def cond(c: _Carry) -> jax.Array:
@@ -752,6 +801,134 @@ def _simulate_bank_banked(
     )
     final = jax.lax.while_loop(cond, body, init)
     return _banked_result(spec, final)
+
+
+# ---------------------------------------------------------------------------
+# sharded bank execution: one SPMD program over a 1-D device mesh
+# ---------------------------------------------------------------------------
+
+
+def resolve_mesh(
+    mesh: Union[None, Mesh, int, Sequence],
+) -> Optional[Mesh]:
+    """Normalize a mesh spec to a 1-D :class:`jax.sharding.Mesh` (or None).
+
+    Accepts ``None`` (no sharding), an existing 1-D mesh, a device count
+    (the first ``n`` of ``jax.devices()``) or an explicit device sequence.
+    The scenario axis is named ``"s"`` for meshes built here; an existing
+    mesh keeps its own axis name.
+    """
+    if mesh is None:
+        return None
+    if isinstance(mesh, Mesh):
+        if len(mesh.axis_names) != 1:
+            raise ValueError(
+                f"bank sharding needs a 1-D mesh over the scenario axis, got "
+                f"axes {mesh.axis_names}"
+            )
+        return mesh
+    if isinstance(mesh, int):
+        devs = jax.devices()
+        if not 1 <= mesh <= len(devs):
+            raise ValueError(
+                f"mesh device count {mesh} outside 1..{len(devs)} available"
+            )
+        return Mesh(np.array(devs[:mesh]), ("s",))
+    return Mesh(np.array(list(mesh)), ("s",))
+
+
+def _pad_rows(arr: jax.Array, pad: int, value) -> jax.Array:
+    """Append ``pad`` constant rows along the leading (scenario) axis."""
+    widths = [(0, pad)] + [(0, 0)] * (arr.ndim - 1)
+    return jnp.pad(arr, widths, constant_values=value)
+
+
+def _pad_spec_rows(spec: SimSpec, pad: int) -> SimSpec:
+    """Append ``pad`` inert scenarios to a stacked spec (the same contract
+    as ``workload.compile_bank``'s shard padding: zero-size released legs,
+    all-zero incidences, ``max_ticks=0`` so the rows are never live)."""
+    leg_valid = spec.leg_valid
+    if leg_valid is None:
+        leg_valid = jnp.ones(spec.size_mb.shape, bool)
+    return SimSpec(
+        size_mb=_pad_rows(spec.size_mb, pad, 0.0),
+        release=_pad_rows(spec.release, pad, 0),
+        dep=_pad_rows(spec.dep, pad, -1),
+        profile=_pad_rows(spec.profile, pad, PAD_PROFILE),
+        protocol_id=_pad_rows(spec.protocol_id, pad, PAD_PROTOCOL),
+        leg_proc=_pad_rows(spec.leg_proc, pad, 0.0),
+        proc_link=_pad_rows(spec.proc_link, pad, 0.0),
+        leg_link=_pad_rows(spec.leg_link, pad, 0.0),
+        bandwidth=_pad_rows(spec.bandwidth, pad, 0.0),
+        bg_period=_pad_rows(spec.bg_period, pad, PAD_BG_PERIOD),
+        max_ticks=_pad_rows(spec.max_ticks, pad, 0),
+        leg_valid=_pad_rows(leg_valid, pad, False),
+    )
+
+
+def _pad_params_rows(params: SimParams, pad: int) -> SimParams:
+    return SimParams(
+        keep_frac=_pad_rows(params.keep_frac, pad, 1.0),
+        bg_mu=_pad_rows(params.bg_mu, pad, 0.0),
+        bg_sigma=_pad_rows(params.bg_sigma, pad, 0.0),
+        enabled=(
+            None if params.enabled is None
+            else _pad_rows(params.enabled, pad, False)
+        ),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mesh", "backend", "leap", "window", "lowering")
+)
+def _simulate_bank_sharded(
+    spec: SimSpec,  # stacked [S, ...]
+    params: SimParams,  # fields [S, ...] or [S, R, ...]
+    keys: jax.Array,  # [S, R, 2]
+    *,
+    mesh: Mesh,
+    backend: Optional[str],
+    leap: bool,
+    window: int = 1,
+    lowering: str = "banked",
+) -> SimResult:
+    """One SPMD bank program over a 1-D device mesh.
+
+    The scenario axis is padded (in-trace) to a multiple of the mesh size
+    with inert scenarios and partitioned with ``shard_map``; each device
+    runs the same banked window loop (:func:`_banked_core`) on its local
+    ``[S/D, R, ...]`` carry. Every op in the loop is row-local over the
+    scenario axis and the loop condition reduces over the local shard only,
+    so the program contains **zero collectives**: shards tick independently
+    (a shard whose scenarios finish early stops dispatching windows), the
+    per-element freeze masks and per-element RNG streams are untouched by
+    the partitioning, and the result is **bit-identical** to the unsharded
+    run in stable scenario order (the pad rows are sliced off before
+    returning). ``check_rep=False`` because replication checking has
+    nothing to verify in a collective-free program (and per-shard
+    while-loop trip counts legitimately differ).
+    """
+    global _bank_traces
+    _bank_traces += 1  # executes at trace time only
+
+    n_dev = mesh.devices.size
+    axis = mesh.axis_names[0]
+    s = keys.shape[0]
+    pad = -s % n_dev
+    if pad:
+        spec = _pad_spec_rows(spec, pad)
+        params = _pad_params_rows(params, pad)
+        keys = _pad_rows(keys, pad, 0)
+
+    core = _vmap_bank_core if lowering == "vmap" else _banked_core
+    fn = functools.partial(core, backend=backend, leap=leap, window=window)
+    p = PartitionSpec(axis)
+    out = shard_map(
+        fn, mesh=mesh, in_specs=(p, p, p), out_specs=p, check_rep=False
+    )(spec, params, keys)
+    if pad:
+        out = jax.tree.map(lambda a: a[:s], out)
+    return out
 
 
 @functools.partial(
@@ -775,7 +952,25 @@ def _banked_window_step(
     (verified warning-free on CPU; see ``tests/test_tick_window.py``). Do
     not reuse a carry after passing it here.
     """
+    global _bank_traces
+    _bank_traces += 1  # executes at trace time only
     return _bank_window_body(spec, params, backend, leap, window, carry)
+
+
+class BankCheckpoint(NamedTuple):
+    """Resumable snapshot of a host-driven banked run (see
+    :func:`simulate_bank_stepped`). ``carry`` holds host-side (numpy) copies
+    of the ``[S, R, ...]`` window-loop carry, so a checkpoint survives the
+    donation of the live device carry into the next step and serializes
+    with ``np.savez`` (``Fleet.save_checkpoint`` wraps exactly that)."""
+
+    windows_done: int
+    window: int
+    carry: _Carry
+
+
+def _snapshot_carry(carry: _Carry) -> _Carry:
+    return _Carry(*(np.asarray(a) for a in carry))
 
 
 def simulate_bank_stepped(
@@ -787,6 +982,9 @@ def simulate_bank_stepped(
     leap: bool = False,
     window: Optional[int] = None,
     sync_every: Optional[int] = 8,
+    checkpoint_every: Optional[int] = None,
+    on_checkpoint=None,
+    resume: Optional[BankCheckpoint] = None,
 ) -> SimResult:
     """Banked simulation as a host-driven loop of donated window steps.
 
@@ -803,6 +1001,14 @@ def simulate_bank_stepped(
     no-op math. The check is a device sync, so it is amortized rather than
     per-step (``sync_every=None`` disables it for fully-async pipelines).
 
+    Long runs can snapshot and resume: every ``checkpoint_every`` windows,
+    ``on_checkpoint(BankCheckpoint(...))`` receives a host-side copy of the
+    carry (safe across the donation of the live buffers), and passing such
+    a snapshot back as ``resume=`` re-uploads the carry and continues from
+    the recorded window — bit-identically, because every window is a pure
+    function of the carry. ``Fleet.save_checkpoint`` / ``load_checkpoint``
+    give the snapshots a ``Fleet.save``-compatible on-disk form.
+
     This is the introspectable/streaming execution mode — callers can stop
     early, checkpoint the carry, or interleave host work between windows;
     the fused while-loop program remains the faster fire-and-forget path.
@@ -810,13 +1016,38 @@ def simulate_bank_stepped(
     spec = bank_spec(bank) if isinstance(bank, ScenarioBank) else bank
     window = _resolve_window(window, leap)
     bound = int(np.max(np.asarray(bank.max_ticks)))
-    # the carry embeds the keys and is donated into the first step — copy
-    # so the caller's keys buffer survives
-    carry = _banked_init_carry(spec, params, jnp.array(keys, copy=True))
-    for i in range(max(1, -(-bound // window))):
+    # never scan far past the bank's longest simulation in one window —
+    # the same pow2-quantized cap as simulate_bank (keeps stepped results
+    # comparable with the while-loop path at the same resolved window)
+    window = _clamp_window(window, bound)
+    start = 0
+    if resume is not None:
+        if int(resume.window) != window:
+            raise ValueError(
+                f"checkpoint was taken at window={resume.window}, cannot "
+                f"resume at window={window} (windows_done would not align)"
+            )
+        start = int(resume.windows_done)
+        carry = _Carry(*(jnp.asarray(a) for a in resume.carry))
+    else:
+        # the carry embeds the keys and is donated into the first step —
+        # copy so the caller's keys buffer survives
+        carry = _banked_init_carry(spec, params, jnp.array(keys, copy=True))
+    for i in range(start, max(1, -(-bound // window))):
         carry = _banked_window_step(
             spec, params, carry, backend=backend, leap=leap, window=window
         )
+        if (
+            checkpoint_every is not None
+            and on_checkpoint is not None
+            and (i + 1) % checkpoint_every == 0
+        ):
+            on_checkpoint(
+                BankCheckpoint(
+                    windows_done=i + 1, window=window,
+                    carry=_snapshot_carry(carry),
+                )
+            )
         if (
             sync_every is not None
             and (i + 1) % sync_every == 0
@@ -845,12 +1076,87 @@ _VALID_LOWERINGS = ("auto", "banked", "vmap")
 _WINDOW_DEFAULTS = {"tpu": (32, 16)}
 _WINDOW_DEFAULT_OTHER = (1, 1)
 
+# persisted per-backend window sweep table: measured best-K per platform,
+# written by benchmarks/bank_throughput.py's window_sweep section (full,
+# non-smoke runs) via record_window_sweep and committed alongside the code.
+# The hardcoded pairs above remain the fallback for platforms the sweep has
+# never run on.
+_WINDOW_TABLE_PATH = os.path.join(os.path.dirname(__file__), "window_table.json")
+
+
+def _window_table_path(path: Optional[str] = None) -> str:
+    return (
+        path
+        or os.environ.get("REPRO_WINDOW_TABLE", "").strip()
+        or _WINDOW_TABLE_PATH
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _load_window_table(path: str) -> dict:
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+    except (OSError, ValueError):
+        return {}
+    table = {}
+    for plat, entry in raw.items():
+        if isinstance(entry, dict):
+            table[str(plat)] = {
+                k: int(v) for k, v in entry.items()
+                if k in ("tick", "leap") and int(v) >= 1
+            }
+    return table
+
 
 def default_tick_window(leap: bool = False) -> int:
     """The auto-tuned fused-window size for this process's backend (what
-    ``window=None`` resolves to, absent ``REPRO_TICK_WINDOW``)."""
-    pair = _WINDOW_DEFAULTS.get(ops._platform(), _WINDOW_DEFAULT_OTHER)
+    ``window=None`` resolves to, absent ``REPRO_TICK_WINDOW``).
+
+    Resolution order: the persisted per-backend sweep table
+    (``src/repro/core/window_table.json``, measured by the bench's
+    ``window_sweep`` and overridable via ``REPRO_WINDOW_TABLE=path``), then
+    the hardcoded per-platform fallback. The committed table pins CPU to
+    K=1 — the sweep shows fused windows only amortize real kernel-launch
+    cost, which XLA:CPU does not pay (``fused_vs_per_tick_speedup`` ~1.0).
+    """
+    plat = ops._platform()
+    entry = _load_window_table(_window_table_path()).get(plat, {})
+    key = "leap" if leap else "tick"
+    if key in entry:
+        return entry[key]
+    pair = _WINDOW_DEFAULTS.get(plat, _WINDOW_DEFAULT_OTHER)
     return pair[1] if leap else pair[0]
+
+
+def record_window_sweep(
+    platform: str,
+    *,
+    tick: Optional[int] = None,
+    leap: Optional[int] = None,
+    path: Optional[str] = None,
+) -> str:
+    """Persist measured best window sizes for ``platform`` into the sweep
+    table consulted by :func:`default_tick_window` (read-modify-write; other
+    platforms' entries survive). Returns the table path written."""
+    p = _window_table_path(path)
+    try:
+        with open(p) as f:
+            table = json.load(f)
+        if not isinstance(table, dict):
+            table = {}
+    except (OSError, ValueError):
+        table = {}
+    entry = table.setdefault(platform, {})
+    if tick is not None:
+        entry["tick"] = max(1, int(tick))
+    if leap is not None:
+        entry["leap"] = max(1, int(leap))
+    with open(p, "w") as f:
+        json.dump(table, f, indent=2, sort_keys=True)
+        f.write("\n")
+    _load_window_table.cache_clear()
+    return p
 
 
 def _resolve_window(window: Optional[int], leap: bool = False) -> int:
@@ -910,9 +1216,15 @@ def _dispatch_bank(
     leap: bool,
     lowering: Optional[str],
     window: int = 1,
+    mesh: Optional[Mesh] = None,
 ) -> SimResult:
     if keys.ndim != 3:
         raise ValueError(f"keys must be [n_scenarios, n_replicas, 2]: {keys.shape}")
+    if mesh is not None:
+        return _simulate_bank_sharded(
+            spec, params, keys, mesh=mesh, backend=backend, leap=leap,
+            window=window, lowering=_resolve_lowering(lowering),
+        )
     if _resolve_lowering(lowering) == "vmap":
         return _simulate_bank(
             spec, params, keys, backend=backend, leap=leap, window=window
@@ -926,7 +1238,7 @@ def _dispatch_bank(
     jax.jit,
     static_argnames=(
         "bucket_legs", "bucket_links", "pad_legs", "backend", "leap",
-        "lowering", "windows",
+        "lowering", "windows", "mesh",
     ),
 )
 def _simulate_bank_bucketed_impl(
@@ -942,14 +1254,29 @@ def _simulate_bank_bucketed_impl(
     leap: bool,
     lowering: str,
     windows: Tuple[int, ...] = (),
+    mesh: Optional[Mesh] = None,
 ) -> SimResult:
     """One fused program over every sub-bank: gather the bucket's params
     rows, simulate, scatter into the caller's ``[N, R]`` order. Fusing keeps
     warm dispatch cost at a single call (the eager per-bucket slice/scatter
     ops would otherwise dominate the warm wall on small fleets); each inner
-    banked program still (re)uses its own per-shape trace/counter."""
+    banked program still (re)uses its own per-shape trace/counter.
+
+    Buckets compiled with shard padding (``compile_bank(shards=k)``) carry
+    more spec rows than real ``scenario_ids``; the gather index is extended
+    by repeating the last real id (the pad rows are never live, so their
+    params/keys are irrelevant) and the pad rows are dropped again before
+    the scatter — the caller-visible ``[N, R]`` order never sees them.
+    Under ``mesh`` each bucket's program runs sharded over the scenario
+    axis (:func:`_simulate_bank_sharded`), so the fused windows and the
+    scatter-back stay device-local per bucket."""
     n, r = keys.shape[:2]
-    sim = _simulate_bank if lowering == "vmap" else _simulate_bank_banked
+    if mesh is not None:
+        sim = functools.partial(
+            _simulate_bank_sharded, mesh=mesh, lowering=lowering
+        )
+    else:
+        sim = _simulate_bank if lowering == "vmap" else _simulate_bank_banked
     out = SimResult(
         transfer_time=jnp.zeros((n, r, pad_legs), jnp.float32),
         size_mb=jnp.zeros((n, r, pad_legs), jnp.float32),
@@ -965,16 +1292,27 @@ def _simulate_bank_bucketed_impl(
     for spec_b, ids, t_b, l_b, w_b in zip(
         specs, idx, bucket_legs, bucket_links, windows
     ):
-        legs = lambda f: None if f is None else f[ids][..., :t_b]
-        links = lambda f: None if f is None else f[ids][..., :l_b]
+        n_real = ids.shape[0]
+        s_b = spec_b.size_mb.shape[0]
+        gid = ids
+        if s_b != n_real:
+            # shard-padded bucket: extend the gather with the last real id
+            # (pad rows are born done with max_ticks=0 — never live)
+            gid = jnp.concatenate(
+                [ids, jnp.broadcast_to(ids[-1:], (s_b - n_real,))]
+            )
+        legs = lambda f: None if f is None else f[gid][..., :t_b]
+        links = lambda f: None if f is None else f[gid][..., :l_b]
         sub_params = SimParams(
             keep_frac=legs(params.keep_frac),
             bg_mu=links(params.bg_mu),
             bg_sigma=links(params.bg_sigma),
             enabled=legs(params.enabled),
         )
-        res = sim(spec_b, sub_params, keys[ids], backend=backend, leap=leap,
+        res = sim(spec_b, sub_params, keys[gid], backend=backend, leap=leap,
                   window=w_b)
+        if s_b != n_real:
+            res = jax.tree.map(lambda a: a[:n_real], res)
         out = SimResult(
             transfer_time=out.transfer_time.at[ids, :, :t_b].set(res.transfer_time),
             size_mb=out.size_mb.at[ids, :, :t_b].set(res.size_mb),
@@ -997,6 +1335,7 @@ def _simulate_bank_bucketed(
     leap: bool,
     lowering: Optional[str],
     window: int = 1,
+    mesh: Optional[Mesh] = None,
 ) -> SimResult:
     """Run each max_ticks-bucketed sub-bank under its own cached trace and
     scatter the per-bucket results back into the caller's ``[N, R]`` order
@@ -1025,6 +1364,7 @@ def _simulate_bank_bucketed(
             _clamp_window(window, int(np.max(b.bank.max_ticks)))
             for b in bank.buckets
         ),
+        mesh=mesh,
     )
 
 
@@ -1038,6 +1378,7 @@ def simulate_bank(
     lowering: Optional[str] = None,
     bucketed: bool = True,
     window: Optional[int] = None,
+    mesh: Union[None, Mesh, int, Sequence] = None,
 ) -> SimResult:
     """Simulate every scenario of the bank x ``R`` stochastic replicas.
 
@@ -1074,12 +1415,21 @@ def simulate_bank(
     quantization keeps the jit-static window independent of exact
     content-dependent bounds, preserving the zero-retrace contracts).
 
-    The flattened ``N*R`` batch is embarrassingly parallel: under a device
-    mesh, shard ``keys`` (and any per-replica params) over the scenario axis
-    and XLA partitions the whole tick program with zero collectives (see
-    ``tests/test_bank.py`` and ``benchmarks/bank_throughput.py``).
+    The flattened ``N*R`` batch is embarrassingly parallel. ``mesh``
+    (a 1-D :class:`jax.sharding.Mesh`, a device count, or a device
+    sequence; see :func:`resolve_mesh`) runs the whole bank as **one SPMD
+    program** ``shard_map``-partitioned over the scenario axis: the
+    scenario count is padded to a multiple of the mesh size with inert
+    scenarios (the compile-time twin is ``workload.compile_bank(...,
+    shards=k)``), each device loops over its local shard under its own
+    early-exit condition, and — the program being collective-free — the
+    results are **bit-identical** to the unsharded run in stable scenario
+    order. Bucketed banks shard each bucket's program over the same mesh,
+    keeping the fused windows and the scatter-back device-local per bucket
+    (see ``tests/test_multidevice.py``).
     """
     w = _resolve_window(window, leap)
+    mesh = resolve_mesh(mesh)
     if isinstance(bank, ScenarioBank):
         # never scan far past the fleet's longest simulation in one window
         # (pow2-quantized so the static window doesn't retrace on
@@ -1088,12 +1438,12 @@ def simulate_bank(
     if bucketed and isinstance(bank, BucketedBank):
         return _simulate_bank_bucketed(
             bank, params, keys, backend=backend, leap=leap, lowering=lowering,
-            window=w,
+            window=w, mesh=mesh,
         )
     spec = bank_spec(bank) if isinstance(bank, ScenarioBank) else bank
     return _dispatch_bank(
         spec, params, keys, backend=backend, leap=leap, lowering=lowering,
-        window=w,
+        window=w, mesh=mesh,
     )
 
 

@@ -69,6 +69,7 @@ from repro.core.workload import (
     bank_from_tables,
     compile_bank,
     compile_campaign,
+    pad_bank_scenarios,
     subset_bank,
     summary_features,
 )
@@ -140,6 +141,7 @@ class Fleet:
         leap: bool = False,
         backend: Optional[str] = None,
         window: Optional[int] = None,
+        devices=None,
     ) -> None:
         if not isinstance(bank, ScenarioBank):
             raise TypeError(f"Fleet wraps a compiled ScenarioBank, got {type(bank)!r}")
@@ -148,8 +150,23 @@ class Fleet:
         self.leap = leap
         self.backend = backend
         self.window = window
+        # None | device count | device sequence | 1-D Mesh — resolved (and
+        # memoized; jax.devices() is only consulted once) on first sharded run
+        self.devices = devices
+        self._mesh = None
         self._base_params: Optional[SimParams] = None
         self._mappers: dict = {}
+
+    def _resolve_mesh(self, devices=None):
+        """The fleet's execution mesh (``engine.resolve_mesh``), memoized for
+        the fleet default so every :meth:`run` reuses one Mesh object (equal
+        meshes hash equal anyway — the jit cache would not retrace — but the
+        memo also skips re-walking ``jax.devices()``)."""
+        if devices is not None:
+            return engine_lib.resolve_mesh(devices)
+        if self.devices is not None and self._mesh is None:
+            self._mesh = engine_lib.resolve_mesh(self.devices)
+        return self._mesh
 
     # -- compile ------------------------------------------------------------
 
@@ -168,6 +185,7 @@ class Fleet:
         leap: bool = False,
         backend: Optional[str] = None,
         window: Optional[int] = None,
+        devices=None,
     ) -> "Fleet":
         """Compile ``(grid, campaign)`` pairs into a fleet.
 
@@ -183,7 +201,17 @@ class Fleet:
         be a zero-arg callable producing the pairs — it is only invoked on
         a cache miss, keeping the memoized hit path free of generation cost
         (how :meth:`from_scenarios` defers its sampling).
+
+        ``devices`` (a device count, device sequence, or 1-D mesh) makes
+        :meth:`run` execute the bank as one SPMD program sharded over the
+        scenario axis; bucketed fleets are compiled with
+        ``compile_bank(shards=n_devices)`` so each bucket's scenario count
+        divides the mesh (inert shard padding — results stay bitwise those
+        of the unsharded fleet). The shard count (not the device identities)
+        is folded into the compile cache key.
         """
+        mesh = engine_lib.resolve_mesh(devices)
+        shards = int(mesh.devices.size) if mesh is not None else 1
         key = (
             None
             if cache_key is None
@@ -197,6 +225,7 @@ class Fleet:
                 tuple(map(tuple, bucket_pad_floors))
                 if bucket_pad_floors is not None
                 else None,
+                shards,
             )
         )
         bank = _compile_cache.get(key) if key is not None else None
@@ -211,11 +240,14 @@ class Fleet:
                 pad_multiple=pad_multiple,
                 n_buckets=n_buckets,
                 bucket_pad_floors=bucket_pad_floors,
+                shards=shards,
             )
             if key is not None:
                 _cache_put(key, bank)
-        return cls(bank, lowering=lowering, leap=leap, backend=backend,
-                   window=window)
+        fleet = cls(bank, lowering=lowering, leap=leap, backend=backend,
+                    window=window, devices=devices)
+        fleet._mesh = mesh
+        return fleet
 
     @classmethod
     def from_scenarios(
@@ -235,6 +267,7 @@ class Fleet:
         leap: bool = False,
         backend: Optional[str] = None,
         window: Optional[int] = None,
+        devices=None,
     ) -> "Fleet":
         """Sample ``n`` scenarios from the generator registry and compile
         them. The sampling recipe (families, n, seed, scale) is hashable and
@@ -263,6 +296,7 @@ class Fleet:
             leap=leap,
             backend=backend,
             window=window,
+            devices=devices,
         )
 
     @classmethod
@@ -414,6 +448,7 @@ class Fleet:
         backend: Optional[str] = None,
         bucketed: bool = True,
         window: Optional[int] = None,
+        devices=None,
     ) -> SimResult:
         """Simulate every scenario x ``replicas`` stochastic replicas.
 
@@ -426,7 +461,9 @@ class Fleet:
         window defaults (each overridable per call; ``window=None`` lets
         the engine pick the fused-tick window per backend and bucket —
         results are bit-identical across window sizes); results come back
-        in stable scenario order regardless of bucketing.
+        in stable scenario order regardless of bucketing. With ``devices``
+        (per call or the fleet default) the bank runs as one SPMD program
+        sharded over the scenario axis, bit-identical to the unsharded run.
         """
         params = self._resolve_params(params_or_theta, protocol)
         if keys is None:
@@ -455,6 +492,7 @@ class Fleet:
             lowering=self.lowering if lowering is None else lowering,
             bucketed=bucketed,
             window=self.window if window is None else window,
+            mesh=self._resolve_mesh(devices),
         )
 
     def stream(
@@ -471,6 +509,7 @@ class Fleet:
         leap: Optional[bool] = None,
         backend: Optional[str] = None,
         window: Optional[int] = None,
+        prefetch: int = 0,
     ) -> Iterator[StreamChunk]:
         """Pipeline an iterator of ``(grid, campaign)`` pairs through
         fixed-pad chunk banks — the streaming-fleet path for campaign sets
@@ -504,6 +543,18 @@ class Fleet:
         compiled overheads/moments), a theta ``[3]`` vector, or a callable
         ``bank -> SimParams``. A fixed :class:`SimParams` is rejected — its
         leg/link content would silently misapply to other chunks' scenarios.
+
+        ``prefetch=k`` (k >= 1) overlaps host work with device work: up to
+        ``k`` upcoming chunk banks are compiled (and their device specs
+        uploaded) on a background thread while the current chunk ticks, and
+        the current chunk runs through
+        :func:`~repro.core.engine.simulate_bank_stepped`'s donated-carry
+        window loop — a host-driven program that yields the GIL at every
+        window boundary, giving the compile thread real cycles. Results,
+        key schedule, and the zero-retrace contract are identical to the
+        synchronous path: the stepped loop is bit-identical to the fused
+        while-loop at the same resolved window, and chunks 2..K reuse
+        chunk 1's step trace.
         """
         # validate eagerly: the generator below only runs at first iteration
         if isinstance(params_or_theta, SimParams):
@@ -515,61 +566,124 @@ class Fleet:
         chunk = int(chunk) if chunk is not None else self.n_scenarios
         if chunk <= 0:
             raise ValueError(f"chunk must be positive: {chunk}")
+        if prefetch < 0:
+            raise ValueError(f"prefetch must be >= 0: {prefetch}")
         return self._stream_chunks(
             pairs, chunk, params_or_theta, replicas, key, protocol,
-            max_ticks, lowering, leap, backend, window,
+            max_ticks, lowering, leap, backend, window, int(prefetch),
         )
+
+    def _build_chunk(self, block, chunk, max_ticks) -> Tuple[ScenarioBank, int]:
+        """Compile one stream block into a fleet-pad chunk bank (runs on the
+        prefetch thread when ``prefetch > 0``): campaign compilation, the
+        pad check, and the device upload of the stacked spec arrays all
+        happen here, so by the time the consumer simulates the chunk only
+        the tick program remains."""
+        real = len(block)
+        tables = [compile_campaign(g, c) for g, c in block]
+        names = [c.name for _, c in block]
+        if real < chunk:  # pad the tail chunk: same shape, same trace
+            # repeat the already-compiled last table — never re-pay the
+            # per-campaign compile for throwaway pad scenarios
+            tables += [tables[-1]] * (chunk - real)
+            names += [names[-1]] * (chunk - real)
+        cbank = bank_from_tables(
+            tables,
+            names,
+            max_ticks=max_ticks,
+            pad_legs=self.pad_legs,
+            pad_procs=self.pad_procs,
+            pad_links=self.pad_links,
+        )
+        if (cbank.pad_legs, cbank.pad_procs, cbank.pad_links) != self.pads:
+            raise ValueError(
+                f"stream chunk outgrew the fleet pads {self.pads} -> "
+                f"{(cbank.pad_legs, cbank.pad_procs, cbank.pad_links)}; "
+                "compile the fleet with pad_floors covering the stream"
+            )
+        # transfer: materialize (and memoize) the device-array spec now
+        engine_lib.bank_spec(cbank)
+        return cbank, real
 
     def _stream_chunks(
         self, pairs, chunk, params_or_theta, replicas, key, protocol,
-        max_ticks, lowering, leap, backend, window,
+        max_ticks, lowering, leap, backend, window, prefetch,
     ) -> Iterator[StreamChunk]:
         key = jax.random.PRNGKey(0) if key is None else key
         it = iter(pairs)
-        while True:
-            block = list(itertools.islice(it, chunk))
-            if not block:
-                return
-            real = len(block)
-            tables = [compile_campaign(g, c) for g, c in block]
-            names = [c.name for _, c in block]
-            if real < chunk:  # pad the tail chunk: same shape, same trace
-                # repeat the already-compiled last table — never re-pay the
-                # per-campaign compile for throwaway pad scenarios
-                tables += [tables[-1]] * (chunk - real)
-                names += [names[-1]] * (chunk - real)
-            cbank = bank_from_tables(
-                tables,
-                names,
-                max_ticks=max_ticks,
-                pad_legs=self.pad_legs,
-                pad_procs=self.pad_procs,
-                pad_links=self.pad_links,
-            )
-            if (cbank.pad_legs, cbank.pad_procs, cbank.pad_links) != self.pads:
-                raise ValueError(
-                    f"stream chunk outgrew the fleet pads {self.pads} -> "
-                    f"{(cbank.pad_legs, cbank.pad_procs, cbank.pad_links)}; "
-                    "compile the fleet with pad_floors covering the stream"
-                )
+        leap = self.leap if leap is None else leap
+        backend_r = self.backend if backend is None else backend
+        lowering_r = self.lowering if lowering is None else lowering
+        window_r = self.window if window is None else window
+        # the stepped (host-driven, donated-carry) loop is the overlap
+        # partner of the prefetch thread; it is bit-identical to the fused
+        # while-loop program only on the banked lowering, so an explicit
+        # vmap override falls back to the synchronous program per chunk
+        use_stepped = (
+            prefetch > 0
+            and engine_lib._resolve_lowering(lowering_r) == "banked"
+            and self._resolve_mesh() is None
+        )
+
+        def ready(cbank, real):
+            nonlocal key
             key, sub = jax.random.split(key)
             keys = jax.random.split(sub, chunk * replicas).reshape(
                 chunk, replicas, 2
             )
-            res = simulate_bank(
-                cbank,
-                self._resolve_params(params_or_theta, protocol, bank=cbank),
-                keys,
-                backend=self.backend if backend is None else backend,
-                leap=self.leap if leap is None else leap,
-                lowering=self.lowering if lowering is None else lowering,
-                window=self.window if window is None else window,
-            )
+            cparams = self._resolve_params(params_or_theta, protocol, bank=cbank)
+            if use_stepped:
+                res = engine_lib.simulate_bank_stepped(
+                    cbank, cparams, keys, backend=backend_r, leap=leap,
+                    window=window_r,
+                )
+            else:
+                res = simulate_bank(
+                    cbank, cparams, keys, backend=backend_r, leap=leap,
+                    lowering=lowering_r, window=window_r,
+                    mesh=self._resolve_mesh(),
+                )
             if real < chunk:
                 res = jax.tree.map(lambda a: a[:real], res)
-            yield StreamChunk(
+            return StreamChunk(
                 bank=cbank, result=res, names=list(cbank.names[:real])
             )
+
+        if prefetch <= 0:
+            while True:
+                block = list(itertools.islice(it, chunk))
+                if not block:
+                    return
+                yield ready(*self._build_chunk(block, chunk, max_ticks))
+            return
+
+        import collections
+        from concurrent.futures import ThreadPoolExecutor
+
+        pool = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="fleet-stream-prefetch"
+        )
+        try:
+            pending = collections.deque()
+            for _ in range(prefetch + 1):
+                block = list(itertools.islice(it, chunk))
+                if not block:
+                    break
+                pending.append(
+                    pool.submit(self._build_chunk, block, chunk, max_ticks)
+                )
+            while pending:
+                cbank, real = pending.popleft().result()
+                # top the pipeline back up *before* simulating, so the
+                # compile of chunk i+prefetch overlaps the ticks of chunk i
+                block = list(itertools.islice(it, chunk))
+                if block:
+                    pending.append(
+                        pool.submit(self._build_chunk, block, chunk, max_ticks)
+                    )
+                yield ready(cbank, real)
+        finally:
+            pool.shutdown(wait=True, cancel_futures=True)
 
     # -- persistence --------------------------------------------------------
 
@@ -579,7 +693,16 @@ class Fleet:
         bucket structure, run defaults). The unpadded source
         :class:`LegTable` objects are *not* persisted — a loaded fleet
         simulates bit-identically but raises on ``scenario_table`` (oracle
-        comparisons need a recompile)."""
+        comparisons need a recompile).
+
+        ``run_opts.resolved_window`` records what this process's
+        ``window=None`` resolves to (the persisted per-backend autotune
+        table; see :func:`~repro.core.engine.default_tick_window`), so a
+        loaded fleet replays the *chosen* window even on a host whose own
+        table would pick differently; an explicit :attr:`window` still
+        dominates. Bucket entries record each sub-bank's (possibly
+        shard-padded) ``scenarios`` count so :meth:`load` rebuilds the
+        exact padded shapes."""
         os.makedirs(path, exist_ok=True)
         bank = self.bank
         arrays = {name: np.asarray(getattr(bank, name)) for name in _ARRAY_FIELDS}
@@ -593,6 +716,11 @@ class Fleet:
                 "leap": self.leap,
                 "backend": self.backend,
                 "window": self.window,
+                "resolved_window": (
+                    self.window
+                    if self.window is not None
+                    else engine_lib.default_tick_window(self.leap)
+                ),
             },
             "bucketed": isinstance(bank, BucketedBank),
         }
@@ -605,6 +733,7 @@ class Fleet:
                     "pad_legs": b.bank.pad_legs,
                     "pad_procs": b.bank.pad_procs,
                     "pad_links": b.bank.pad_links,
+                    "scenarios": b.bank.n_scenarios,
                 }
                 for b in bank.buckets
             ]
@@ -619,8 +748,11 @@ class Fleet:
         restored bucket for bucket: each sub-bank is sliced back out of the
         persisted monolithic arrays (see
         :func:`~repro.core.workload.subset_bank` — bit-identical to the
-        original compile). ``run_opts`` override the persisted
-        lowering/leap/backend defaults."""
+        original compile) and re-padded to its persisted (shard-padded)
+        scenario count. ``run_opts`` override the persisted
+        lowering/leap/backend defaults; a persisted ``window=None``
+        resolves to the save-time ``resolved_window``, so the autotuned
+        choice round-trips across hosts."""
         with open(os.path.join(path, "meta.json")) as f:
             meta = json.load(f)
         if meta.get("format") != 1:
@@ -646,6 +778,9 @@ class Fleet:
                     pad_procs=info["pad_procs"],
                     pad_links=info["pad_links"],
                 )
+                padded = int(info.get("scenarios", len(ids)))
+                if padded > len(ids):
+                    sub = pad_bank_scenarios(sub, count=padded)
                 buckets.append(BankBucket(scenario_ids=ids, bank=sub))
             bank = BucketedBank(
                 **{
@@ -657,8 +792,67 @@ class Fleet:
                 buckets=buckets,
             )
         opts = dict(meta.get("run_opts") or {})
+        resolved = opts.pop("resolved_window", None)
         opts.update(run_opts)
+        if opts.get("window") is None and resolved is not None:
+            opts["window"] = int(resolved)
         return cls(bank, **opts)
+
+    def save_checkpoint(
+        self,
+        path: str,
+        ckpt: "engine_lib.BankCheckpoint",
+        *,
+        include_fleet: bool = True,
+    ) -> str:
+        """Persist a :class:`~repro.core.engine.BankCheckpoint` (from
+        ``simulate_bank_stepped(checkpoint_every=..., on_checkpoint=...)``)
+        to ``path/`` as ``carry.npz`` + ``checkpoint.json`` — the
+        ``Fleet.save``-compatible snapshot format: with ``include_fleet``
+        (default) the same directory also receives :meth:`save`'s
+        ``bank.npz`` + ``meta.json`` (disjoint file names), so one
+        directory restores both the fleet and its in-flight carry for
+        multi-hour runs."""
+        os.makedirs(path, exist_ok=True)
+        np.savez_compressed(
+            os.path.join(path, "carry.npz"),
+            **{f: np.asarray(a) for f, a in zip(ckpt.carry._fields, ckpt.carry)},
+        )
+        with open(os.path.join(path, "checkpoint.json"), "w") as f:
+            json.dump(
+                {
+                    "format": 1,
+                    "windows_done": int(ckpt.windows_done),
+                    "window": int(ckpt.window),
+                },
+                f,
+                indent=2,
+            )
+        if include_fleet:
+            self.save(path)
+        return path
+
+    @staticmethod
+    def load_checkpoint(path: str) -> "engine_lib.BankCheckpoint":
+        """Load a carry snapshot saved by :meth:`save_checkpoint`; pass the
+        result as ``simulate_bank_stepped(..., resume=ckpt)`` (with the same
+        bank/params/window — e.g. from :meth:`load` of the same directory)
+        to continue the run bit-identically from the recorded window."""
+        with open(os.path.join(path, "checkpoint.json")) as f:
+            meta = json.load(f)
+        if meta.get("format") != 1:
+            raise ValueError(
+                f"unknown checkpoint format: {meta.get('format')!r}"
+            )
+        with np.load(os.path.join(path, "carry.npz")) as z:
+            carry = engine_lib._Carry(
+                *(z[f] for f in engine_lib._Carry._fields)
+            )
+        return engine_lib.BankCheckpoint(
+            windows_done=int(meta["windows_done"]),
+            window=int(meta["window"]),
+            carry=carry,
+        )
 
     # -- calibrate ----------------------------------------------------------
 

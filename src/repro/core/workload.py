@@ -39,6 +39,7 @@ __all__ = [
     "compile_bank",
     "bank_from_tables",
     "subset_bank",
+    "pad_bank_scenarios",
     "summary_features",
     "SUMMARY_FEATURE_NAMES",
     "wlcg_production_workload",
@@ -591,6 +592,7 @@ def compile_bank(
     pad_multiple: int = 1,
     n_buckets: int = 1,
     bucket_pad_floors: Optional[Sequence[Tuple[int, int, int]]] = None,
+    shards: int = 1,
 ) -> ScenarioBank:
     """Compile heterogeneous ``(grid, campaign)`` pairs into one padded bank.
 
@@ -599,6 +601,24 @@ def compile_bank(
     for the padded axes (so differently-sized banks can share a jit trace);
     ``pad_multiple`` rounds every padded axis up (e.g. 8 or 128 for
     lane-friendly kernel operands).
+
+    **Shard-padding / device-placement contract** (``shards > 1``): each
+    bucket's sub-bank has its scenario count rounded up to a multiple of
+    ``shards`` with inert scenarios (:func:`pad_bank_scenarios` —
+    ``max_ticks=0`` rows that are never live, so results are bitwise those
+    of the unpadded bank), which lets the engine ``shard_map`` every
+    bucket's program over a ``shards``-device mesh without an in-trace pad.
+    Each bucket is partitioned **whole** across the mesh — every device
+    holds ``S_b/shards`` scenarios of every bucket rather than whole
+    buckets of one device — so the fused per-bucket windows and the
+    scatter-back into the caller's ``[N, R]`` order stay device-local
+    (collective-free) and every device sees the same per-bucket length
+    distribution (no device idles on a short bucket while another grinds a
+    long one). The engine drops the pad rows before the scatter, so they
+    are invisible in results; ``Fleet.save``/``load`` preserves the padded
+    per-bucket counts. The monolithic view is **never** shard-padded — its
+    scenario count is caller-visible — and the engine instead pads it
+    in-trace under the identical inert contract when run on a mesh.
 
     **Bucketing contract** (``n_buckets > 1`` returns a
     :class:`BucketedBank`): scenarios are sorted by the key
@@ -631,6 +651,8 @@ def compile_bank(
     """
     if not pairs:
         raise ValueError("compile_bank needs at least one (grid, campaign)")
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1: {shards}")
     tables = [compile_campaign(g, c) for g, c in pairs]
     names = [c.name for _, c in pairs]
     n = len(tables)
@@ -686,6 +708,8 @@ def compile_bank(
             bt, [names[i] for i in ids], [ticks[i] for i in ids],
             Tb, Pb, Lb, proto_names,
         )
+        if shards > 1:
+            sub = pad_bank_scenarios(sub, shards)
         buckets.append(BankBucket(scenario_ids=ids, bank=sub))
 
     # the monolithic view must dominate every bucket pad (the engine slices
@@ -793,6 +817,72 @@ def subset_bank(
         protocol_names=list(bank.protocol_names),
         names=[bank.names[int(i)] for i in ids],
         tables=[bank.tables[int(i)] for i in ids] if bank.tables else [],
+    )
+
+
+def pad_bank_scenarios(
+    bank: ScenarioBank,
+    multiple: int = 1,
+    *,
+    count: Optional[int] = None,
+) -> ScenarioBank:
+    """Append inert scenarios until the scenario count hits ``count`` (or the
+    next multiple of ``multiple``).
+
+    The appended rows extend the bank's leg/link padding contract to whole
+    scenarios: zero-size legs (all born done via ``leg_valid=False``),
+    all-zero incidences, zero-bandwidth links with ``PAD_BG_PERIOD``, and —
+    the scenario-level addition — ``max_ticks=0``, so a padded scenario is
+    **never live**: the engine's per-scenario (and per-shard) loop
+    conditions see it finished before the first tick and every window over
+    it is a frozen bit-exact no-op. This is what makes shard padding
+    results-invariant (see ``compile_bank(shards=...)`` and the engine's
+    in-jit twin for monolithic banks).
+
+    Pad scenarios are named ``__shard_pad__{i}`` and carry no source table
+    (``scenario_table`` raises for them); all real rows are bit-identical
+    slices of the input. ``n_legs``/``n_procs``/``n_links`` are 0 for pads.
+    """
+    n = bank.n_scenarios
+    if multiple < 1:
+        raise ValueError(f"multiple must be >= 1: {multiple}")
+    target = _round_up(n, multiple) if count is None else int(count)
+    if target < n:
+        raise ValueError(
+            f"target scenario count {target} below the bank's {n}"
+        )
+    pad = target - n
+    if pad == 0:
+        return bank
+    T, P, L = bank.pad_legs, bank.pad_procs, bank.pad_links
+
+    def rows(fill, shape, dtype):
+        return np.full((pad,) + shape, fill, dtype)
+
+    cat = lambda a, b: np.concatenate([a, b], axis=0)
+    return ScenarioBank(
+        size_mb=cat(bank.size_mb, rows(0, (T,), np.float32)),
+        release=cat(bank.release, rows(0, (T,), np.int32)),
+        dep=cat(bank.dep, rows(-1, (T,), np.int32)),
+        keep_frac=cat(bank.keep_frac, rows(1, (T,), np.float32)),
+        protocol_id=cat(bank.protocol_id, rows(PAD_PROTOCOL, (T,), np.int32)),
+        profile=cat(bank.profile, rows(PAD_PROFILE, (T,), np.int32)),
+        leg_valid=cat(bank.leg_valid, rows(False, (T,), bool)),
+        leg_proc=cat(bank.leg_proc, rows(0, (T, P), np.float32)),
+        proc_link=cat(bank.proc_link, rows(0, (P, L), np.float32)),
+        leg_link=cat(bank.leg_link, rows(0, (T, L), np.float32)),
+        bandwidth=cat(bank.bandwidth, rows(0, (L,), np.float32)),
+        bg_mu=cat(bank.bg_mu, rows(0, (L,), np.float32)),
+        bg_sigma=cat(bank.bg_sigma, rows(0, (L,), np.float32)),
+        bg_period=cat(bank.bg_period, rows(PAD_BG_PERIOD, (L,), np.int32)),
+        link_valid=cat(bank.link_valid, rows(False, (L,), bool)),
+        max_ticks=cat(bank.max_ticks, rows(0, (), np.int32)),
+        n_legs=cat(bank.n_legs, rows(0, (), np.int32)),
+        n_procs=cat(bank.n_procs, rows(0, (), np.int32)),
+        n_links=cat(bank.n_links, rows(0, (), np.int32)),
+        protocol_names=list(bank.protocol_names),
+        names=list(bank.names) + [f"__shard_pad__{i}" for i in range(pad)],
+        tables=list(bank.tables),
     )
 
 

@@ -216,6 +216,15 @@ def grid_tick_bank_fused(
     the Pallas path then falls back to the reference scan driving the
     per-tick bank kernel (the leap body's data-dependent event search does
     not pay off inside one kernel), so leap windows still leap.
+
+    **shard_map safety**: every op in here is row-local over the leading
+    scenario axis ``S`` — no reductions, gathers, or scans cross rows, and
+    the RNG keys ride per-element in the carry.  The windowed engine relies
+    on this when it wraps the window loop in ``shard_map`` over a scenario
+    mesh (``simulate_bank(..., mesh=)``): each shard sees an ordinary
+    smaller bank, needs no collectives (``check_rep=False``), and produces
+    bitwise the rows it would produce unsharded.  Keep new window-body ops
+    row-local or the sharded engine's bitwise-parity contract breaks.
     """
     if len(state) != len(ref.BANK_WINDOW_STATE_FIELDS):
         raise ValueError(

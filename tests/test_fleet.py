@@ -377,3 +377,62 @@ def test_run_accepts_per_scenario_theta_matrix():
     )
     with pytest.raises(TypeError, match="per-scenario theta"):
         fleet.run(jnp.zeros((2, 3)))
+
+
+# ---------------------------------------------------------------------------
+# shard padding + resolved-window persistence
+# ---------------------------------------------------------------------------
+
+def test_shard_padded_bank_is_inert_and_bitwise(tmp_path):
+    """compile_bank(shards=K) pads every bucket to a multiple of K with
+    inert scenarios; the padded fleet's results are bitwise those of the
+    unpadded fleet even when run unsharded (mesh-free gather/scatter path),
+    and save/load preserves the padded bucket sizes."""
+    from repro.core.workload import compile_bank
+
+    pairs = sample_scenarios(n=6, seed=13)
+    bank_plain = compile_bank(pairs, n_buckets=2)
+    bank_pad = compile_bank(pairs, n_buckets=2, shards=4)
+
+    some_padding = False
+    for b in bank_pad.buckets:
+        assert b.bank.n_scenarios % 4 == 0
+        pads = [n for n in b.bank.names if n.startswith("__shard_pad__")]
+        assert len(pads) == b.bank.n_scenarios - len(b.scenario_ids)
+        some_padding |= bool(pads)
+        # pads are inert: zero size, never live
+        for n in pads:
+            i = b.bank.names.index(n)
+            assert float(np.asarray(b.bank.size_mb)[i].sum()) == 0.0
+            assert int(np.asarray(b.bank.max_ticks)[i]) == 0
+    assert some_padding, "6 scenarios over 2 buckets must shard-pad somewhere"
+
+    plain, sharded = Fleet(bank_plain), Fleet(bank_pad)
+    keys = _keys(6, 2, seed=13)
+    _assert_bitwise_equal(
+        plain.run(keys=keys), sharded.run(keys=keys), msg="shard-padded "
+    )
+
+    loaded = Fleet.load(sharded.save(str(tmp_path / "padded")))
+    for lb, fb in zip(loaded.bank.buckets, sharded.bank.buckets):
+        assert lb.bank.n_scenarios == fb.bank.n_scenarios
+    _assert_bitwise_equal(
+        plain.run(keys=keys), loaded.run(keys=keys), msg="shard-padded load "
+    )
+
+
+def test_save_persists_resolved_window(tmp_path):
+    """A fleet saved with window=None records the window it resolved at
+    save time, so a load on a host with a different sweep table replays
+    the exact same program."""
+    from repro.core import engine as engine_lib
+
+    fleet = Fleet.from_scenarios(n=3, seed=8, max_ticks=10_000)
+    assert fleet.window is None
+    loaded = Fleet.load(fleet.save(str(tmp_path / "w")))
+    assert loaded.window == engine_lib.default_tick_window(fleet.leap)
+
+    # an explicit window wins over the recorded resolution
+    fleet16 = Fleet.from_scenarios(n=3, seed=8, max_ticks=10_000, window=16)
+    loaded16 = Fleet.load(fleet16.save(str(tmp_path / "w16")))
+    assert loaded16.window == 16

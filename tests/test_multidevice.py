@@ -208,3 +208,129 @@ def test_elastic_checkpoint_restore_across_mesh_sizes(tmp_path):
         assert np.isfinite(float(m2["loss"]))
         print("OK elastic restore 1 -> 8 devices; losses", loss_small, float(m2["loss"]))
     """)
+
+
+@pytest.mark.slow
+def test_sharded_simulate_bank_bitwise_parity():
+    """shard_map execution (mesh=) is bitwise identical to the unsharded
+    run — monolithic (leap on/off, including a non-divisible S that takes
+    the in-trace inert-padding path) and bucketed, with stochastic
+    background congestion so RNG placement is exercised too."""
+    _run("""
+        import jax, numpy as np
+        from repro.core.engine import make_bank_params, simulate_bank
+        from repro.core.scenarios import build_bank
+
+        FIELDS = ("transfer_time", "conth_mb", "conpr_mb", "done", "ticks",
+                  "start_tick")
+
+        def check(ref, out, tag):
+            for f in FIELDS:
+                a, b = np.asarray(getattr(ref, f)), np.asarray(getattr(out, f))
+                assert np.array_equal(a, b), (tag, f)
+
+        # monolithic, S=8 over 8 devices
+        bank = build_bank(n=8, seed=0, max_ticks=20_000)
+        params = make_bank_params(bank, bg_mu=5.0, bg_sigma=2.0)
+        keys = jax.random.split(jax.random.PRNGKey(0), 16).reshape(8, 2, 2)
+        for leap in (False, True):
+            ref = simulate_bank(bank, params, keys, leap=leap, bucketed=False)
+            out = simulate_bank(bank, params, keys, leap=leap, bucketed=False,
+                                mesh=8)
+            check(ref, out, f"mono leap={leap}")
+
+        # S=7 does not divide 8: the engine pads with inert scenarios
+        # in-trace and slices them back off
+        bank7 = build_bank(n=7, seed=1, max_ticks=20_000)
+        params7 = make_bank_params(bank7, bg_mu=5.0, bg_sigma=2.0)
+        keys7 = jax.random.split(jax.random.PRNGKey(1), 14).reshape(7, 2, 2)
+        ref = simulate_bank(bank7, params7, keys7, leap=True, bucketed=False)
+        for d in (3, 8):
+            out = simulate_bank(bank7, params7, keys7, leap=True,
+                                bucketed=False, mesh=d)
+            check(ref, out, f"mono pad mesh={d}")
+
+        # bucketed: per-bucket shard_map dispatch + scatter-back
+        bank12 = build_bank(n=12, seed=2, max_ticks=20_000)
+        params12 = make_bank_params(bank12, bg_mu=5.0, bg_sigma=2.0)
+        keys12 = jax.random.split(jax.random.PRNGKey(2), 24).reshape(12, 2, 2)
+        ref = simulate_bank(bank12, params12, keys12, leap=True)
+        out = simulate_bank(bank12, params12, keys12, leap=True, mesh=8)
+        check(ref, out, "bucketed")
+        print("OK sharded bitwise parity")
+    """)
+
+
+@pytest.mark.slow
+def test_fleet_sharded_run_and_shard_padded_compile():
+    """Fleet(devices=8): compile_bank shard-pads each bucket to a multiple
+    of the device count with inert scenarios, the sharded run is bitwise
+    equal to an unsharded unpadded fleet, and save/load round-trips the
+    padded bank + resolved window."""
+    _run("""
+        import tempfile
+        import jax, numpy as np
+        from repro import Fleet
+        from repro.core.scenarios import sample_scenarios
+
+        pairs = sample_scenarios(n=12, seed=0)
+        plain = Fleet.from_pairs(pairs, n_buckets=4)
+        sharded = Fleet.from_pairs(pairs, n_buckets=4, devices=8)
+        for b in sharded.bank.buckets:
+            assert b.bank.n_scenarios % 8 == 0, b.bank.n_scenarios
+            pads = [n for n in b.bank.names if n.startswith("__shard_pad__")]
+            assert b.bank.n_scenarios - len(b.scenario_ids) == len(pads)
+
+        key = jax.random.PRNGKey(0)
+        ref = plain.run(key=key, replicas=2)
+        out = sharded.run(key=key, replicas=2)
+        for f in ref._fields:
+            assert np.array_equal(np.asarray(getattr(ref, f)),
+                                  np.asarray(getattr(out, f))), f
+
+        with tempfile.TemporaryDirectory() as d:
+            sharded.save(d)
+            loaded = Fleet.load(d)
+        assert loaded.window is not None  # resolved window persisted
+        for a, b in zip(sharded.bank.buckets, loaded.bank.buckets):
+            assert a.bank.n_scenarios == b.bank.n_scenarios
+        out2 = loaded.run(key=key, replicas=2, devices=8)
+        for f in ref._fields:
+            assert np.array_equal(np.asarray(getattr(ref, f)),
+                                  np.asarray(getattr(out2, f))), f
+        print("OK fleet sharded + save/load")
+    """)
+
+
+@pytest.mark.slow
+def test_fleet_stream_prefetch_matches_synchronous():
+    """Fleet.stream(prefetch=1) — background compile/transfer of chunk k+1
+    while chunk k ticks — yields chunks bitwise equal to the synchronous
+    path, and retraces stay 0 after the first chunk."""
+    _run("""
+        import jax, numpy as np
+        from repro import Fleet
+        from repro.core import engine as engine_lib
+        from repro.core.scenarios import sample_scenarios
+
+        pairs = sample_scenarios(n=12, seed=0)
+        fleet = Fleet.from_pairs(pairs)
+        kw = dict(chunk=4, key=jax.random.PRNGKey(3), replicas=2)
+
+        sync = list(fleet.stream(iter(pairs), **kw))
+        engine_lib.reset_bank_trace_count()
+        with engine_lib.count_bank_traces() as first:
+            pre = list(fleet.stream(iter(pairs), prefetch=1, **kw))
+        assert first.count <= 1, first.count
+
+        assert [c.names for c in sync] == [c.names for c in pre]
+        for cs, cp in zip(sync, pre):
+            for f in cs.result._fields:
+                assert np.array_equal(np.asarray(getattr(cs.result, f)),
+                                      np.asarray(getattr(cp.result, f))), f
+
+        with engine_lib.count_bank_traces() as rest:
+            list(fleet.stream(iter(pairs), prefetch=2, **kw))
+        assert rest.count == 0, rest.count
+        print("OK stream prefetch parity, retraces", rest.count)
+    """)

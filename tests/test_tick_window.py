@@ -335,3 +335,75 @@ def test_window_sizes_share_no_trace_but_repeat_free():
     with count_bank_traces() as tr2:
         simulate_bank(bank, params, keys, lowering="banked", window=8)
     assert tr2.count == 1
+
+
+# ---------------------------------------------------------------------------
+# checkpoint/resume of the stepped loop
+# ---------------------------------------------------------------------------
+
+def test_stepped_checkpoint_resume_bitwise(tmp_path):
+    """Snapshots taken mid-run by the stepped loop resume to the exact same
+    result: each window is a pure function of the carry, so cutting the run
+    at any window boundary and restarting from the snapshot is a no-op."""
+    from repro.core.engine import BankCheckpoint
+
+    bank = build_bank(n=4, seed=11, max_ticks=2_000)
+    params = make_bank_params(bank, bg_mu=4.0, bg_sigma=1.5)
+    keys = _keys(4, 2, seed=11)
+    ref = simulate_bank(bank, params, keys, lowering="banked", window=8,
+                        bucketed=False)
+
+    snaps = []
+    full = simulate_bank_stepped(
+        bank, params, keys, window=8,
+        checkpoint_every=3, on_checkpoint=snaps.append,
+    )
+    _assert_bitwise(ref, full, msg="checkpointing run ")
+    assert snaps, "expected at least one snapshot"
+    assert all(isinstance(s, BankCheckpoint) for s in snaps)
+    # snapshots live on host memory: they must survive the donated carry
+    for s in snaps:
+        resumed = simulate_bank_stepped(bank, params, keys, window=8,
+                                        resume=s)
+        _assert_bitwise(ref, resumed, msg=f"resume@{s.windows_done} ")
+
+    # a snapshot taken at one window size cannot seed another
+    with pytest.raises(ValueError, match="window"):
+        simulate_bank_stepped(bank, params, keys, window=4, resume=snaps[0])
+
+    # Fleet.save_checkpoint/load_checkpoint round-trip the snapshot
+    fleet = Fleet(bank)
+    fleet.save_checkpoint(tmp_path, snaps[-1], include_fleet=False)
+    loaded = Fleet.load_checkpoint(tmp_path)
+    assert loaded.windows_done == snaps[-1].windows_done
+    assert loaded.window == snaps[-1].window
+    resumed = simulate_bank_stepped(bank, params, keys, window=8,
+                                    resume=loaded)
+    _assert_bitwise(ref, resumed, msg="resume from disk ")
+
+
+# ---------------------------------------------------------------------------
+# persisted window autotuner table
+# ---------------------------------------------------------------------------
+
+def test_window_table_roundtrip(tmp_path, monkeypatch):
+    """default_tick_window reads the persisted per-backend sweep table;
+    record_window_sweep is its writer (read-modify-write)."""
+    from repro.core import engine as engine_lib
+
+    table = tmp_path / "window_table.json"
+    monkeypatch.setenv("REPRO_WINDOW_TABLE", str(table))
+    engine_lib._load_window_table.cache_clear()
+    try:
+        # missing table -> hardcoded fallback
+        assert default_tick_window() >= 1
+        engine_lib.record_window_sweep("cpu", tick=4)
+        engine_lib.record_window_sweep("cpu", leap=2)  # must keep tick=4
+        assert default_tick_window() == 4
+        assert default_tick_window(leap=True) == 2
+        # corrupt table -> tolerated, falls back
+        table.write_text("{not json")
+        engine_lib._load_window_table.cache_clear()
+        assert default_tick_window() >= 1
+    finally:
+        engine_lib._load_window_table.cache_clear()
