@@ -200,7 +200,6 @@ def main() -> None:
     from repro.core.engine import (
         SimSpec,
         count_bank_traces,
-        default_tick_window,
         make_params,
         reset_bank_trace_count,
         simulate_batch,

@@ -103,7 +103,7 @@ def bench_chunked_attention() -> Tuple[str, float, float]:
     q = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
     k = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
     v = jnp.asarray(rng.standard_normal((B, S, Hkv, D)), jnp.float32)
-    f = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, backend="xla"))
+    f = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, backend="xla"))  # repro: allow[jit-cache] -- bench: jitted once per invocation; cache lives for the one timed run
 
     def run():
         f(q, k, v).block_until_ready()
@@ -125,7 +125,7 @@ def bench_mlstm_chunked() -> Tuple[str, float, float]:
     v = jnp.asarray(rng.standard_normal((B, S, H, D)), jnp.float32)
     ig = jnp.asarray(rng.standard_normal((B, S, H)) * 0.5, jnp.float32)
     fg = jnp.asarray(rng.standard_normal((B, S, H)) + 2, jnp.float32)
-    f = jax.jit(lambda *a: ops.mlstm_chunk(*a, backend="xla"))
+    f = jax.jit(lambda *a: ops.mlstm_chunk(*a, backend="xla"))  # repro: allow[jit-cache] -- bench: jitted once per invocation; cache lives for the one timed run
 
     def run():
         f(q, k, v, ig, fg).block_until_ready()
@@ -145,7 +145,7 @@ def bench_classifier_scoring() -> Tuple[str, float, float]:
     n = 8192
     theta = jnp.asarray(np.random.RandomState(0).rand(n, 3), jnp.float32)
     x = jnp.asarray(np.random.RandomState(1).rand(n, 3), jnp.float32)
-    f = jax.jit(lambda t, xx: classifier_logit(params, t, xx))
+    f = jax.jit(lambda t, xx: classifier_logit(params, t, xx))  # repro: allow[jit-cache] -- bench: jitted once per invocation; cache lives for the one timed run
 
     def run():
         f(theta, x).block_until_ready()

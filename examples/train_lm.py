@@ -7,7 +7,6 @@ monitoring (deliverable b's end-to-end example).
 import argparse
 import json
 
-from repro.configs import get_config
 from repro.models.config import BlockKind, ModelConfig
 from repro.train.trainer import Trainer, TrainerConfig
 

@@ -1,0 +1,49 @@
+"""Contract linter + runtime sanitizers for the repro engine invariants.
+
+Static analysis (``python -m repro.analysis src/``) machine-checks the
+bitwise-parity contracts in ``CONTRACTS.md``: trace purity under jit, the
+``jax.random`` split schedule, the ``PAD_*`` inert-padding sentinels, and
+jit-cache hygiene. Runtime sanitizers (``REPRO_DEBUG=1`` or the scoped
+context managers) validate compiled banks, simulation outputs, retrace
+budgets, and the ``Fleet.stream`` prefetch thread's lock discipline.
+"""
+
+from .lint import lint_modules, lint_paths
+from .report import Finding, LintReport
+from .rules import RULES
+from .sanitize import (
+    BankContractError,
+    LockDisciplineError,
+    ResultContractError,
+    RetraceBudgetError,
+    check_bank,
+    check_bank_once,
+    check_result,
+    debug_enabled,
+    lock_discipline,
+    nan_guard,
+    result_checks_enabled,
+    retrace_guard,
+    thread_stress,
+)
+
+__all__ = [
+    "Finding",
+    "LintReport",
+    "RULES",
+    "lint_modules",
+    "lint_paths",
+    "BankContractError",
+    "LockDisciplineError",
+    "ResultContractError",
+    "RetraceBudgetError",
+    "check_bank",
+    "check_bank_once",
+    "check_result",
+    "debug_enabled",
+    "lock_discipline",
+    "nan_guard",
+    "result_checks_enabled",
+    "retrace_guard",
+    "thread_stress",
+]

@@ -1,0 +1,70 @@
+"""CLI: ``python -m repro.analysis src/ [--strict] [--json report.json]``.
+
+Exit status: 0 when no live violations (allowlisted findings never fail);
+1 when violations exist and ``--strict`` is set; 2 on usage errors. Without
+``--strict`` violations are printed but the exit status stays 0, so the
+pass can be previewed mid-refactor.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from .lint import lint_paths
+from .rules import RULES
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Contract linter for the repro engine invariants.",
+    )
+    # nargs="*" so `--list-rules` works without paths; the no-path case is
+    # rejected below for actual lint runs
+    parser.add_argument("paths", nargs="*", help="files or directories to lint")
+    parser.add_argument(
+        "--strict",
+        action="store_true",
+        help="exit 1 when any non-allowlisted violation is found",
+    )
+    parser.add_argument(
+        "--json", metavar="PATH", help="write the JSON report to PATH"
+    )
+    parser.add_argument(
+        "--rules",
+        metavar="R1,R2",
+        help=f"comma-separated rule subset (default: all of {sorted(RULES)})",
+    )
+    parser.add_argument(
+        "--list-rules", action="store_true", help="list rules and exit"
+    )
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for name in sorted(RULES):
+            print(name)
+        return 0
+    if not args.paths:
+        parser.error("the following arguments are required: paths")
+
+    rules = None
+    if args.rules:
+        rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+    try:
+        report = lint_paths(args.paths, rules)
+    except ValueError as e:
+        print(f"repro.analysis: {e}", file=sys.stderr)
+        return 2
+
+    print(report.render_text())
+    if args.json:
+        report.write_json(args.json)
+    if args.strict and report.violations:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

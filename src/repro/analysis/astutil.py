@@ -1,0 +1,172 @@
+"""Shared AST plumbing for the contract linter: module loading, import-aware
+dotted-name resolution, and the inline allowlist protocol.
+
+Allowlist protocol
+------------------
+A violation is suppressed by an end-of-line (or immediately preceding line)
+comment::
+
+    proto_id = np.full((n, T), -1, np.int32)  # repro: allow[pad-sentinel] -- reason
+
+The justification after ``--`` is mandatory: an allow comment without one is
+itself reported as a violation (``allow-format``). There is no file- or
+rule-wide ignore — every suppression is a located, justified record in the
+JSON report.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+import tokenize
+from typing import Dict, Iterator, List, Optional, Tuple
+
+_ALLOW_RE = re.compile(
+    r"#\s*repro:\s*allow\[(?P<rule>[a-z0-9-]+)\]\s*(?:--\s*(?P<reason>.*\S))?"
+)
+
+
+class SourceModule:
+    """One parsed source file: AST, dotted module name, import bindings and
+    the per-line allowlist comments."""
+
+    def __init__(self, path: str, modname: str, source: str, tree: ast.Module):
+        self.path = path
+        self.modname = modname
+        self.source = source
+        self.tree = tree
+        # line -> (rule, reason|None); reason None means malformed allow
+        self.allows: Dict[int, List[Tuple[str, Optional[str]]]] = {}
+        self._collect_allows()
+        # local name -> dotted target ("jax.jit", "repro.core.engine", ...)
+        self.imports: Dict[str, str] = {}
+        self._collect_imports()
+
+    # -- allowlist ---------------------------------------------------------
+    def _collect_allows(self) -> None:
+        try:
+            tokens = tokenize.generate_tokens(
+                iter(self.source.splitlines(True)).__next__
+            )
+            for tok in tokens:
+                if tok.type == tokenize.COMMENT:
+                    m = _ALLOW_RE.search(tok.string)
+                    if m:
+                        self.allows.setdefault(tok.start[0], []).append(
+                            (m.group("rule"), m.group("reason"))
+                        )
+        except tokenize.TokenError:
+            pass
+
+    def allow_at(self, line: int, rule: str) -> Optional[Tuple[bool, str]]:
+        """Allowlist entry covering ``line`` for ``rule``: same line or the
+        line directly above (a comment-only line). Returns ``(ok, reason)``
+        or None."""
+        for lno in (line, line - 1):
+            for r, reason in self.allows.get(lno, []):
+                if r == rule:
+                    if lno == line - 1:
+                        # only honor a preceding line if it is comment-only
+                        text = self.source.splitlines()[lno - 1].strip()
+                        if not text.startswith("#"):
+                            continue
+                    if reason:
+                        return True, reason
+                    return False, ""
+        return None
+
+    # -- imports -----------------------------------------------------------
+    def _collect_imports(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    self.imports[alias.asname or alias.name.split(".")[0]] = (
+                        alias.name
+                    )
+            elif isinstance(node, ast.ImportFrom):
+                base = self._resolve_from(node)
+                if base is None:
+                    continue
+                for alias in node.names:
+                    if alias.name == "*":
+                        continue
+                    self.imports[alias.asname or alias.name] = (
+                        f"{base}.{alias.name}"
+                    )
+
+    def _resolve_from(self, node: ast.ImportFrom) -> Optional[str]:
+        if node.level == 0:
+            return node.module
+        parts = self.modname.split(".")
+        if node.level > len(parts):
+            return None
+        base = parts[: len(parts) - node.level]
+        if node.module:
+            base.append(node.module)
+        return ".".join(base)
+
+    def resolve_name(self, expr: ast.expr) -> Optional[str]:
+        """Dotted name of an expression through this module's imports:
+        ``jnp.full`` -> ``jax.numpy.full``, a bare imported name to its
+        source, a bare local name to ``<modname>.<name>``."""
+        parts: List[str] = []
+        node = expr
+        while isinstance(node, ast.Attribute):
+            parts.append(node.attr)
+            node = node.value
+        if not isinstance(node, ast.Name):
+            return None
+        parts.append(node.id)
+        parts.reverse()
+        head = self.imports.get(parts[0])
+        if head is not None:
+            parts[0] = head
+        return ".".join(parts)
+
+
+def iter_py_files(paths: List[str]) -> Iterator[str]:
+    for p in paths:
+        if os.path.isfile(p) and p.endswith(".py"):
+            yield p
+        elif os.path.isdir(p):
+            for dirpath, dirnames, filenames in os.walk(p):
+                dirnames[:] = sorted(
+                    d for d in dirnames
+                    if d not in ("__pycache__", ".git", ".pytest_cache")
+                )
+                for name in sorted(filenames):
+                    if name.endswith(".py"):
+                        yield os.path.join(dirpath, name)
+
+
+def module_name_for(path: str) -> str:
+    """Dotted module name for a file path, rooted at the innermost directory
+    that is not itself a package (so ``src/repro/core/engine.py`` ->
+    ``repro.core.engine`` regardless of the scan root)."""
+    abspath = os.path.abspath(path)
+    parts = [os.path.splitext(os.path.basename(abspath))[0]]
+    d = os.path.dirname(abspath)
+    while os.path.isfile(os.path.join(d, "__init__.py")):
+        parts.append(os.path.basename(d))
+        d = os.path.dirname(d)
+    if parts[0] == "__init__":
+        parts = parts[1:]
+    return ".".join(reversed(parts))
+
+
+def load_modules(paths: List[str]) -> List[SourceModule]:
+    modules = []
+    for path in iter_py_files(paths):
+        with open(path, "r") as f:
+            source = f.read()
+        try:
+            tree = ast.parse(source, filename=path)
+        except SyntaxError:
+            continue
+        modules.append(SourceModule(path, module_name_for(path), source, tree))
+    return modules
+
+
+def dotted_call_name(mod: SourceModule, call: ast.Call) -> Optional[str]:
+    return mod.resolve_name(call.func)

@@ -1,0 +1,70 @@
+"""Lint runner: load modules, build the call graph, run rules, apply the
+inline allowlist protocol."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional
+
+from .astutil import SourceModule, load_modules
+from .callgraph import CallGraph
+from .report import Finding, LintReport
+from .rules import RULES
+
+
+def lint_modules(
+    modules: List[SourceModule], rules: Optional[Iterable[str]] = None
+) -> LintReport:
+    rule_names = sorted(rules) if rules is not None else sorted(RULES)
+    unknown = [r for r in rule_names if r not in RULES]
+    if unknown:
+        raise ValueError(f"unknown rule(s): {unknown}; have {sorted(RULES)}")
+    graph = CallGraph(modules)
+    by_path: Dict[str, SourceModule] = {m.path: m for m in modules}
+    report = LintReport(
+        roots=[], rules=rule_names, files_scanned=len(modules)
+    )
+    seen = set()
+    for name in rule_names:
+        for finding in RULES[name](modules, graph):
+            key = (finding.rule, finding.path, finding.line, finding.message)
+            if key in seen:
+                continue
+            seen.add(key)
+            report.findings.append(_apply_allowlist(by_path, finding))
+    return report
+
+
+def _apply_allowlist(
+    by_path: Dict[str, SourceModule], finding: Finding
+) -> Finding:
+    mod = by_path.get(finding.path)
+    if mod is None:
+        return finding
+    entry = mod.allow_at(finding.line, finding.rule)
+    if entry is None:
+        return finding
+    ok, reason = entry
+    if not ok:
+        # an allow comment without a justification is itself a violation
+        return dataclasses.replace(
+            finding,
+            message=(
+                finding.message
+                + " [allow comment present but missing a `-- reason`]"
+            ),
+        )
+    return dataclasses.replace(
+        finding, allowlisted=True, allow_reason=reason
+    )
+
+
+def lint_paths(
+    paths: List[str], rules: Optional[Iterable[str]] = None
+) -> LintReport:
+    """Lint every ``.py`` file under ``paths``. Returns the report; callers
+    decide what exit status ``report.violations`` maps to."""
+    modules = load_modules(paths)
+    report = lint_modules(modules, rules)
+    report.roots = list(paths)
+    return report

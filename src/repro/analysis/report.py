@@ -1,0 +1,87 @@
+"""Finding records and report rendering for the contract linter.
+
+A :class:`Finding` is one rule violation anchored to a file/line. Findings
+suppressed by an inline allowlist comment (``# repro: allow[rule] -- reason``)
+are kept — with ``allowlisted=True`` and the justification attached — so the
+JSON report records every suppression alongside live violations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional
+
+REPORT_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    rule: str
+    path: str
+    line: int
+    message: str
+    symbol: Optional[str] = None
+    allowlisted: bool = False
+    allow_reason: Optional[str] = None
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}"
+        sym = f" [{self.symbol}]" if self.symbol else ""
+        tag = " (allowlisted)" if self.allowlisted else ""
+        return f"{loc}: {self.rule}{tag}:{sym} {self.message}"
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class LintReport:
+    """All findings of one lint run plus run metadata."""
+
+    roots: List[str]
+    rules: List[str]
+    findings: List[Finding] = dataclasses.field(default_factory=list)
+    files_scanned: int = 0
+
+    @property
+    def violations(self) -> List[Finding]:
+        return [f for f in self.findings if not f.allowlisted]
+
+    @property
+    def allowlisted(self) -> List[Finding]:
+        return [f for f in self.findings if f.allowlisted]
+
+    def sorted_findings(self) -> List[Finding]:
+        return sorted(
+            self.findings, key=lambda f: (f.path, f.line, f.rule, f.message)
+        )
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "version": REPORT_VERSION,
+            "roots": list(self.roots),
+            "rules": list(self.rules),
+            "files_scanned": self.files_scanned,
+            "counts": {
+                "violations": len(self.violations),
+                "allowlisted": len(self.allowlisted),
+            },
+            "findings": [f.to_json() for f in self.sorted_findings()],
+        }
+
+    def write_json(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=2, sort_keys=True)
+            f.write("\n")
+
+    def render_text(self) -> str:
+        lines = [f.format() for f in self.sorted_findings() if not f.allowlisted]
+        lines.append(
+            f"repro.analysis: {len(self.violations)} violation(s), "
+            f"{len(self.allowlisted)} allowlisted, "
+            f"{self.files_scanned} file(s) scanned"
+        )
+        return "\n".join(lines)

@@ -1,0 +1,686 @@
+"""The codebase-specific lint rules.
+
+Each rule is a callable ``rule(modules, graph) -> Iterator[Finding]``
+producing *raw* findings; the runner (``lint.py``) applies the inline
+allowlist protocol afterwards. Rules:
+
+``trace-purity``
+    No wall-clock, stdlib/numpy RNG, env, file I/O, or data-dependent
+    Python branching inside functions reachable from jit entry points
+    (``CONTRACTS.md`` §trace purity).
+
+``rng-discipline``
+    ``jax.random`` keys: no key consumed twice without an interleaving
+    ``split``, no discarded split results, no constant ``PRNGKey`` inside a
+    function that already takes a key parameter (§RNG split schedule).
+
+``pad-sentinel``
+    The inert-padding fields (``profile``, ``protocol_id``, ``bg_period``)
+    must be filled/compared via the named ``workload.PAD_*`` sentinels, not
+    numeric literals — scoped to ``core/engine.py``, ``core/workload.py``
+    and ``kernels/*`` (§inert-pad semantics).
+
+``jit-cache``
+    No ``jax.jit`` created inside a function body (a fresh cache per call,
+    closure-captured state in the key), and jitted functions must name
+    their config-like keyword-only parameters in ``static_argnames``.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from .astutil import SourceModule
+from .callgraph import CallGraph, FunctionInfo
+from .report import Finding
+
+# -- shared helpers ---------------------------------------------------------
+
+
+def own_nodes(body) -> Iterator[ast.AST]:
+    """Walk statements/expressions without descending into nested function
+    or class definitions (those are separate call-graph nodes). Nested defs
+    themselves are yielded once, as markers, but not entered."""
+    stack = list(body) if isinstance(body, list) else [body]
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(
+            node,
+            (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef, ast.Lambda),
+        ):
+            continue
+        stack.extend(ast.iter_child_nodes(node))
+
+
+def _function_body(info: FunctionInfo):
+    node = info.node
+    if isinstance(node, ast.Lambda):
+        return [node.body]
+    return node.body
+
+
+def _int_value(node: ast.expr) -> Optional[int]:
+    """Constant integer value of a literal, including ``-1`` (UnaryOp) and
+    ``1 << 30`` style shifts of literals."""
+    if isinstance(node, ast.Constant) and type(node.value) is int:
+        return node.value
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub):
+        inner = _int_value(node.operand)
+        return None if inner is None else -inner
+    if isinstance(node, ast.BinOp) and isinstance(node.op, ast.LShift):
+        lhs, rhs = _int_value(node.left), _int_value(node.right)
+        if lhs is not None and rhs is not None:
+            return lhs << rhs
+    return None
+
+
+# -- trace-purity -----------------------------------------------------------
+
+_IMPURE_CALL_PREFIXES: Tuple[str, ...] = (
+    "time.",
+    "random.",
+    "numpy.random.",
+    "secrets.",
+    "uuid.",
+    "datetime.datetime.now",
+    "datetime.date.today",
+    "os.urandom",
+    "os.getenv",
+    "os.environ",
+)
+_IMPURE_BUILTINS = frozenset({"open", "input"})
+_JNP_PREFIXES = ("jax.numpy.", "jax.nn.", "jax.lax.", "jax.scipy.")
+
+
+def _impure_call(dotted: Optional[str]) -> Optional[str]:
+    if dotted is None:
+        return None
+    if dotted in _IMPURE_BUILTINS:
+        return dotted
+    for prefix in _IMPURE_CALL_PREFIXES:
+        if dotted == prefix.rstrip(".") or dotted.startswith(prefix):
+            return dotted
+    return None
+
+
+def _test_is_data_dependent(mod: SourceModule, test: ast.expr) -> bool:
+    """A branch test that calls into jax.numpy (or syncs via ``.item()``)
+    depends on traced values: under jit it either fails on a tracer or
+    silently bakes one evaluation into the trace."""
+    for node in ast.walk(test):
+        if not isinstance(node, ast.Call):
+            continue
+        dotted = mod.resolve_name(node.func)
+        if dotted is not None and dotted.startswith(_JNP_PREFIXES):
+            return True
+        if isinstance(node.func, ast.Attribute) and node.func.attr == "item":
+            return True
+    return False
+
+
+def rule_trace_purity(
+    modules: List[SourceModule], graph: CallGraph
+) -> Iterator[Finding]:
+    for qual, info in graph.traced_functions():
+        mod = info.module
+        for node in own_nodes(_function_body(info)):
+            if isinstance(node, ast.Call):
+                dotted = _impure_call(graph.resolve_dotted(info, node.func))
+                if dotted is not None:
+                    yield Finding(
+                        rule="trace-purity",
+                        path=mod.path,
+                        line=node.lineno,
+                        symbol=qual,
+                        message=(
+                            f"call to `{dotted}` inside a jit-reachable "
+                            f"function (root cause: traced via "
+                            f"{_trace_cause(graph, qual)}) — impure at "
+                            f"trace time: the result is baked into the "
+                            f"cached trace"
+                        ),
+                    )
+            elif isinstance(node, (ast.If, ast.While)) and not isinstance(
+                node, ast.IfExp
+            ):
+                if _test_is_data_dependent(mod, node.test):
+                    kind = "while" if isinstance(node, ast.While) else "if"
+                    yield Finding(
+                        rule="trace-purity",
+                        path=mod.path,
+                        line=node.lineno,
+                        symbol=qual,
+                        message=(
+                            f"data-dependent Python `{kind}` in a "
+                            f"jit-reachable function — branch on traced "
+                            f"values with jnp.where/lax.cond instead"
+                        ),
+                    )
+
+
+def _trace_cause(graph: CallGraph, qual: str) -> str:
+    info = graph.functions.get(qual)
+    if info is not None and info.root_cause:
+        return info.root_cause
+    return "a jit entry point"
+
+
+# -- rng-discipline ---------------------------------------------------------
+
+_KEY_PARAM_NAMES = frozenset({"key", "keys", "rng", "rng_key", "prng_key"})
+_JR = "jax.random."
+
+
+def _is_jax_random(dotted: Optional[str]) -> Optional[str]:
+    if dotted is not None and dotted.startswith(_JR):
+        return dotted[len(_JR):]
+    return None
+
+
+def _bound_names(target: ast.expr) -> Iterator[str]:
+    for node in ast.walk(target):
+        if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+            yield node.id
+
+
+class _RngEvent:
+    __slots__ = ("kind", "name", "line", "node")
+
+    def __init__(self, kind: str, name: str, line: int, node: ast.AST):
+        self.kind = kind  # "consume" | "rebind"
+        self.name = name
+        self.line = line
+        self.node = node
+
+
+def _consumed_key(mod: SourceModule, node: ast.Call) -> Optional[str]:
+    """Name of the key a ``jax.random`` call consumes, if it is a bare name.
+
+    ``fold_in`` does not count as consumption: deriving per-item keys from
+    one parent via varying data is the documented pattern. ``PRNGKey`` /
+    ``key`` / ``wrap_key_data`` construct keys, they don't consume one."""
+    fn = _is_jax_random(mod.resolve_name(node.func))
+    if fn is None or fn in ("PRNGKey", "key", "wrap_key_data", "fold_in"):
+        return None
+    if node.args and isinstance(node.args[0], ast.Name):
+        return node.args[0].id
+    for kw in node.keywords:
+        if kw.arg == "key" and isinstance(kw.value, ast.Name):
+            return kw.value.id
+    return None
+
+
+def _rng_events(
+    mod: SourceModule, info: FunctionInfo
+) -> Tuple[List[_RngEvent], List[ast.Call]]:
+    """(ordered key consumption/rebind events, discarded-split statements)."""
+    events: List[_RngEvent] = []
+    discarded: List[ast.Call] = []
+    for node in own_nodes(_function_body(info)):
+        if isinstance(node, ast.Expr) and isinstance(node.value, ast.Call):
+            if _is_jax_random(mod.resolve_name(node.value.func)) in (
+                "split",
+                "fold_in",
+            ):
+                discarded.append(node.value)
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            targets = (
+                node.targets
+                if isinstance(node, ast.Assign)
+                else [node.target]
+            )
+            for t in targets:
+                for name in _bound_names(t):
+                    events.append(_RngEvent("rebind", name, node.lineno, node))
+        elif isinstance(node, ast.For):
+            for name in _bound_names(node.target):
+                events.append(_RngEvent("rebind", name, node.lineno, node))
+        if isinstance(node, ast.Call):
+            consumed = _consumed_key(mod, node)
+            if consumed is not None:
+                events.append(_RngEvent("consume", consumed, node.lineno, node))
+    # `key, sub = split(key)` consumes then rebinds on one line: order
+    # same-line consumptions before rebinds so the idiom never flags
+    events.sort(key=lambda e: (e.line, e.kind == "rebind"))
+    return events, discarded
+
+
+def _loop_reuse(
+    mod: SourceModule, info: FunctionInfo
+) -> Iterator[Tuple[str, ast.AST]]:
+    """Keys consumed inside a loop body with no per-iteration rebind of that
+    name in the same loop — every iteration draws from the same key."""
+    for node in own_nodes(_function_body(info)):
+        if not isinstance(node, (ast.For, ast.While)):
+            continue
+        rebound: Set[str] = set()
+        if isinstance(node, ast.For):
+            rebound.update(_bound_names(node.target))
+        consumes: List[Tuple[str, ast.AST]] = []
+        for inner in own_nodes(node.body):
+            if isinstance(inner, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+                targets = (
+                    inner.targets
+                    if isinstance(inner, ast.Assign)
+                    else [inner.target]
+                )
+                for t in targets:
+                    rebound.update(_bound_names(t))
+            elif isinstance(inner, ast.For):
+                rebound.update(_bound_names(inner.target))
+            if isinstance(inner, ast.Call):
+                consumed = _consumed_key(mod, inner)
+                if consumed is not None:
+                    consumes.append((consumed, inner))
+        for name, call in consumes:
+            if name not in rebound:
+                yield name, call
+
+
+def rule_rng_discipline(
+    modules: List[SourceModule], graph: CallGraph
+) -> Iterator[Finding]:
+    for qual, info in sorted(graph.functions.items()):
+        if isinstance(info.node, ast.Lambda):
+            continue
+        mod = info.module
+        events, discarded = _rng_events(mod, info)
+        for call in discarded:
+            yield Finding(
+                rule="rng-discipline",
+                path=mod.path,
+                line=call.lineno,
+                symbol=qual,
+                message=(
+                    "jax.random.split/fold_in result discarded — the parent "
+                    "key is consumed but no fresh key is kept"
+                ),
+            )
+        # key reuse: two consumptions of one name with no rebind between
+        last_consume: Dict[str, _RngEvent] = {}
+        for ev in events:
+            if ev.kind == "rebind":
+                last_consume.pop(ev.name, None)
+                continue
+            prev = last_consume.get(ev.name)
+            if prev is not None and prev.line != ev.line:
+                yield Finding(
+                    rule="rng-discipline",
+                    path=mod.path,
+                    line=ev.line,
+                    symbol=qual,
+                    message=(
+                        f"key `{ev.name}` consumed again without an "
+                        f"interleaving split (previous draw at line "
+                        f"{prev.line}) — correlated streams"
+                    ),
+                )
+            last_consume[ev.name] = ev
+        # per-iteration reuse: the linear scan above sees one textual draw,
+        # so loops need their own check
+        for name, call in _loop_reuse(mod, info):
+            yield Finding(
+                rule="rng-discipline",
+                path=mod.path,
+                line=call.lineno,
+                symbol=qual,
+                message=(
+                    f"key `{name}` consumed inside a loop without a "
+                    f"per-iteration split — every iteration draws the same "
+                    f"stream"
+                ),
+            )
+        # constant PRNGKey inside a function that already takes a key param
+        params = _param_names(info)
+        key_params = params & _KEY_PARAM_NAMES
+        if key_params:
+            for stmt in _function_body(info):
+                for node in own_nodes([stmt]):
+                    if not isinstance(node, ast.Call):
+                        continue
+                    if _is_jax_random(mod.resolve_name(node.func)) not in (
+                        "PRNGKey",
+                        "key",
+                    ):
+                        continue
+                    if _stmt_mentions(stmt, key_params):
+                        continue  # `key if key is not None else PRNGKey(0)`
+                    yield Finding(
+                        rule="rng-discipline",
+                        path=mod.path,
+                        line=node.lineno,
+                        symbol=qual,
+                        message=(
+                            f"constant PRNGKey created although the function "
+                            f"takes `{sorted(key_params)[0]}` — thread the "
+                            f"key parameter through instead"
+                        ),
+                    )
+
+
+def _param_names(info: FunctionInfo) -> Set[str]:
+    node = info.node
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+        a = node.args
+        return {
+            p.arg
+            for p in (
+                list(a.posonlyargs) + list(a.args) + list(a.kwonlyargs)
+            )
+        }
+    return set()
+
+
+def _stmt_mentions(stmt: ast.stmt, names: Set[str]) -> bool:
+    return any(
+        isinstance(n, ast.Name) and n.id in names and isinstance(n.ctx, ast.Load)
+        for n in ast.walk(stmt)
+    )
+
+
+# -- pad-sentinel -----------------------------------------------------------
+
+_SENTINEL_FIELDS: Dict[str, str] = {
+    "profile": "PAD_PROFILE",
+    "protocol_id": "PAD_PROTOCOL",
+    "proto_id": "PAD_PROTOCOL",
+    "bg_period": "PAD_BG_PERIOD",
+}
+_PAD_BG_PERIOD_VALUE = 1 << 30
+_PAD_CONST_NAMES = frozenset({"PAD_PROFILE", "PAD_PROTOCOL", "PAD_BG_PERIOD"})
+# fill-value argument index of the known fill-style constructors
+_FILL_ARG_INDEX = {
+    "full": 1,
+    "full_like": 1,
+    "rows": 0,
+    "_pad_rows": 2,
+}
+
+
+def _pad_scope(path: str) -> bool:
+    p = path.replace("\\", "/")
+    return (
+        p.endswith("core/engine.py")
+        or p.endswith("core/workload.py")
+        or "/kernels/" in p
+    )
+
+
+def _terminal_name(expr: ast.expr) -> Optional[str]:
+    if isinstance(expr, ast.Name):
+        return expr.id
+    if isinstance(expr, ast.Attribute):
+        return expr.attr
+    return None
+
+
+def _literal_fill(call: ast.Call) -> Optional[ast.expr]:
+    """The fill argument of a known fill-style call when it is a bare
+    numeric literal (not a named constant)."""
+    fn = None
+    if isinstance(call.func, ast.Name):
+        fn = call.func.id
+    elif isinstance(call.func, ast.Attribute):
+        fn = call.func.attr
+    idx = _FILL_ARG_INDEX.get(fn or "")
+    if idx is None or len(call.args) <= idx:
+        return None
+    fill = call.args[idx]
+    return fill if _int_value(fill) is not None else None
+
+
+def _fill_violations(value: ast.expr) -> Iterator[ast.expr]:
+    """Numeric-literal fills inside ``value`` (descending through nested
+    calls like ``cat(x, rows(-1, ...))``)."""
+    for node in ast.walk(value):
+        if isinstance(node, ast.Call):
+            fill = _literal_fill(node)
+            if fill is not None:
+                yield fill
+
+
+def rule_pad_sentinel(
+    modules: List[SourceModule], graph: CallGraph
+) -> Iterator[Finding]:
+    for mod in modules:
+        if not _pad_scope(mod.path):
+            continue
+        for node in ast.walk(mod.tree):
+            # (a) assignment to a sentinel-named target built from a
+            # literal-filled constructor
+            if isinstance(node, ast.Assign):
+                names = {
+                    _terminal_name(t)
+                    for t in node.targets
+                    if _terminal_name(t) is not None
+                }
+                if names & _PAD_CONST_NAMES:
+                    continue  # the sentinel definitions themselves
+                hit = {n for n in names if n in _SENTINEL_FIELDS}
+                if hit:
+                    field = sorted(hit)[0]
+                    for fill in _fill_violations(node.value):
+                        yield Finding(
+                            rule="pad-sentinel",
+                            path=mod.path,
+                            line=fill.lineno,
+                            symbol=field,
+                            message=(
+                                f"literal fill {ast.unparse(fill)} for "
+                                f"`{field}` — use workload."
+                                f"{_SENTINEL_FIELDS[field]}"
+                            ),
+                        )
+            # (b) sentinel-named keyword argument given a literal (or a
+            # literal-filled constructor)
+            if isinstance(node, ast.Call):
+                for kw in node.keywords:
+                    field = kw.arg
+                    if field not in _SENTINEL_FIELDS:
+                        continue
+                    if _int_value(kw.value) is not None:
+                        yield Finding(
+                            rule="pad-sentinel",
+                            path=mod.path,
+                            line=kw.value.lineno,
+                            symbol=field,
+                            message=(
+                                f"literal `{field}={ast.unparse(kw.value)}` "
+                                f"— use workload.{_SENTINEL_FIELDS[field]}"
+                            ),
+                        )
+                    else:
+                        for fill in _fill_violations(kw.value):
+                            yield Finding(
+                                rule="pad-sentinel",
+                                path=mod.path,
+                                line=fill.lineno,
+                                symbol=field,
+                                message=(
+                                    f"literal fill {ast.unparse(fill)} for "
+                                    f"`{field}=` — use workload."
+                                    f"{_SENTINEL_FIELDS[field]}"
+                                ),
+                            )
+            # (c) sentinel field compared against a numeric literal
+            if isinstance(node, ast.Compare) and len(node.ops) == 1:
+                if isinstance(node.ops[0], (ast.Eq, ast.NotEq)):
+                    field = _terminal_name(node.left)
+                    if (
+                        field in _SENTINEL_FIELDS
+                        and isinstance(node.left, ast.Attribute)
+                        and _int_value(node.comparators[0]) is not None
+                    ):
+                        yield Finding(
+                            rule="pad-sentinel",
+                            path=mod.path,
+                            line=node.lineno,
+                            symbol=field,
+                            message=(
+                                f"`{ast.unparse(node.left)}` compared "
+                                f"against a literal — compare against "
+                                f"workload.{_SENTINEL_FIELDS[field]}"
+                            ),
+                        )
+            # (d) the raw PAD_BG_PERIOD magic number anywhere in scope
+            if isinstance(node, (ast.Constant, ast.BinOp)):
+                if _int_value(node) == _PAD_BG_PERIOD_VALUE:
+                    if not _is_pad_definition(mod, node):
+                        yield Finding(
+                            rule="pad-sentinel",
+                            path=mod.path,
+                            line=node.lineno,
+                            symbol="bg_period",
+                            message=(
+                                "magic number 1 << 30 — use "
+                                "workload.PAD_BG_PERIOD"
+                            ),
+                        )
+
+
+def _is_pad_definition(mod: SourceModule, node: ast.AST) -> bool:
+    """True when ``node`` sits on the PAD_* definition assignment itself."""
+    for stmt in mod.tree.body:
+        if isinstance(stmt, ast.Assign) and any(
+            isinstance(t, ast.Name) and t.id in _PAD_CONST_NAMES
+            for t in stmt.targets
+        ):
+            if stmt.lineno <= node.lineno <= (stmt.end_lineno or stmt.lineno):
+                return True
+    return False
+
+
+# -- jit-cache --------------------------------------------------------------
+
+_STATIC_DEFAULT_TYPES = (bool, int, str, type(None))
+_ARRAY_ANNOTATION_HINTS = ("Array", "ndarray", "Tensor")
+
+
+def _array_annotation(annotation: ast.expr) -> bool:
+    """True when a parameter annotation names an array type (those params
+    are traced by design, not jit-static config)."""
+    text = ast.unparse(annotation)
+    return any(hint in text for hint in _ARRAY_ANNOTATION_HINTS)
+
+
+def _jit_call(mod: SourceModule, call: ast.Call) -> bool:
+    dotted = mod.resolve_name(call.func)
+    if dotted == "jax.jit":
+        return True
+    if dotted == "functools.partial" and call.args:
+        first = call.args[0]
+        if isinstance(first, (ast.Name, ast.Attribute)):
+            return mod.resolve_name(first) == "jax.jit"
+    return False
+
+
+def _static_argnames(dec: ast.Call) -> Set[str]:
+    names: Set[str] = set()
+    for kw in dec.keywords:
+        if kw.arg in ("static_argnames", "donate_argnames"):
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                names.add(v.value)
+            elif isinstance(v, (ast.Tuple, ast.List)):
+                for el in v.elts:
+                    if isinstance(el, ast.Constant) and isinstance(
+                        el.value, str
+                    ):
+                        names.add(el.value)
+    return names
+
+
+def rule_jit_cache(
+    modules: List[SourceModule], graph: CallGraph
+) -> Iterator[Finding]:
+    for qual, info in sorted(graph.functions.items()):
+        node = info.node
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        mod = info.module
+        # (a) jit constructed inside a function body — per-call cache with
+        # closure-captured (often unhashable) state in the key
+        for inner in own_nodes(node.body):
+            if isinstance(inner, ast.Call) and _jit_call(mod, inner):
+                yield Finding(
+                    rule="jit-cache",
+                    path=mod.path,
+                    line=inner.lineno,
+                    symbol=qual,
+                    message=(
+                        "jax.jit created inside a function body — a fresh "
+                        "compile cache per call; hoist to module scope or "
+                        "memoize the jitted callable"
+                    ),
+                )
+        for inner_def in own_nodes(node.body):
+            if isinstance(
+                inner_def, (ast.FunctionDef, ast.AsyncFunctionDef)
+            ):
+                for dec in inner_def.decorator_list:
+                    is_jit = (
+                        isinstance(dec, ast.Call) and _jit_call(mod, dec)
+                    ) or (
+                        isinstance(dec, (ast.Name, ast.Attribute))
+                        and mod.resolve_name(dec) == "jax.jit"
+                    )
+                    if is_jit:
+                        yield Finding(
+                            rule="jit-cache",
+                            path=mod.path,
+                            line=dec.lineno,
+                            symbol=f"{qual}.{inner_def.name}",
+                            message=(
+                                "jitted function defined inside a function "
+                                "body — a fresh compile cache per enclosing "
+                                "call"
+                            ),
+                        )
+        # (b) jitted def whose config-like keyword-only params are not static
+        static = self_static = None
+        for dec in node.decorator_list:
+            if isinstance(dec, ast.Call) and _jit_call(mod, dec):
+                self_static = _static_argnames(dec)
+            elif isinstance(dec, (ast.Name, ast.Attribute)):
+                if mod.resolve_name(dec) == "jax.jit":
+                    self_static = set()
+        if self_static is None:
+            continue
+        static = self_static
+        args = node.args
+        for i, param in enumerate(args.kwonlyargs):
+            default = args.kw_defaults[i]
+            if param.arg in static:
+                continue
+            if default is None:
+                continue  # required kw-only: can't judge statically
+            if param.annotation is not None and _array_annotation(
+                param.annotation
+            ):
+                continue  # `x: jax.Array | None = None` is traced by design
+            if (
+                isinstance(default, ast.Constant)
+                and type(default.value) in _STATIC_DEFAULT_TYPES
+            ):
+                yield Finding(
+                    rule="jit-cache",
+                    path=mod.path,
+                    line=param.lineno,
+                    symbol=qual,
+                    message=(
+                        f"keyword-only param `{param.arg}` of a jitted "
+                        f"function is config-like but missing from "
+                        f"static_argnames — it will be traced (tracer-bool "
+                        f"errors) or retrace by value"
+                    ),
+                )
+
+
+RULES = {
+    "trace-purity": rule_trace_purity,
+    "rng-discipline": rule_rng_discipline,
+    "pad-sentinel": rule_pad_sentinel,
+    "jit-cache": rule_jit_cache,
+}

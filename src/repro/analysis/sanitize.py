@@ -1,0 +1,420 @@
+"""Runtime sanitizers for the engine contracts (`CONTRACTS.md`).
+
+Everything here is opt-in: either globally via ``REPRO_DEBUG=1`` (the
+engine then validates every bank once and every ``simulate_bank`` result)
+or scoped through the context managers — zero overhead otherwise.
+
+* :func:`check_bank` — structural validation of a compiled
+  :class:`~repro.core.workload.ScenarioBank` / ``BucketedBank``: the
+  inert-padding contract row by row, dep indices in bounds, shard-pad
+  scenarios truly never-live, and the bucket scenario->(bucket, slot) map
+  bijective.
+* :func:`check_result` — NaN/inf/negative-duration guard on
+  ``simulate_bank`` outputs (plus the unfinished-leg masking contract).
+* :func:`retrace_guard` — a scoped trace budget over
+  ``engine.count_bank_traces``.
+* :func:`nan_guard` — scope-enables result checking without the env var.
+* :func:`lock_discipline` — asserts every fleet compile-cache mutation
+  holds the cache lock (the ``Fleet.stream`` prefetch thread shares it).
+* :func:`thread_stress` — shrinks ``sys.setswitchinterval`` so thread
+  races surface under test.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+import sys
+import threading
+from typing import Iterator
+
+import numpy as np
+
+_SHARD_PAD_PREFIX = "__shard_pad__"
+
+
+def debug_enabled() -> bool:
+    """True when ``REPRO_DEBUG`` requests the always-on sanitizers."""
+    return os.environ.get("REPRO_DEBUG", "").strip().lower() in (
+        "1",
+        "true",
+        "on",
+        "yes",
+    )
+
+
+_forced_result_checks = 0
+
+
+def result_checks_enabled() -> bool:
+    """Consulted by ``engine.simulate_bank`` after every run."""
+    return _forced_result_checks > 0 or debug_enabled()
+
+
+class BankContractError(AssertionError):
+    """A compiled bank violates the inert-padding/bucket-map contract."""
+
+
+class ResultContractError(AssertionError):
+    """A simulation result violates the output contract (NaN/inf/negative
+    durations, unfinished legs with nonzero transfer_time)."""
+
+
+class RetraceBudgetError(AssertionError):
+    """More banked-engine retraces happened than the scope budgeted."""
+
+
+class LockDisciplineError(AssertionError):
+    """A guarded shared structure was mutated without holding its lock."""
+
+
+# -- bank validation --------------------------------------------------------
+
+
+def _fail(what: str, detail: str) -> None:
+    raise BankContractError(f"bank contract violated ({what}): {detail}")
+
+
+def _check_inert_rows(bank) -> None:
+    from ..core import workload
+
+    leg_pad = ~np.asarray(bank.leg_valid, bool)  # [N, T]
+    checks = [
+        ("pad legs size_mb=0", bank.size_mb, leg_pad, 0),
+        ("pad legs dep=-1", bank.dep, leg_pad, -1),
+        ("pad legs keep_frac=1", bank.keep_frac, leg_pad, 1),
+        (
+            "pad legs protocol_id=PAD_PROTOCOL",
+            bank.protocol_id,
+            leg_pad,
+            workload.PAD_PROTOCOL,
+        ),
+        (
+            "pad legs profile=PAD_PROFILE",
+            bank.profile,
+            leg_pad,
+            workload.PAD_PROFILE,
+        ),
+    ]
+    link_pad = ~np.asarray(bank.link_valid, bool)  # [N, L]
+    checks += [
+        ("pad links bandwidth=0", bank.bandwidth, link_pad, 0),
+        ("pad links bg_mu=0", bank.bg_mu, link_pad, 0),
+        ("pad links bg_sigma=0", bank.bg_sigma, link_pad, 0),
+        (
+            "pad links bg_period=PAD_BG_PERIOD",
+            bank.bg_period,
+            link_pad,
+            workload.PAD_BG_PERIOD,
+        ),
+    ]
+    for what, arr, mask, expect in checks:
+        vals = np.asarray(arr)[mask]
+        if vals.size and not np.all(vals == expect):
+            bad = vals[vals != expect]
+            _fail(what, f"{bad.size} padded entries hold {bad[:5].tolist()}")
+    # padded legs must not touch any process or link
+    if np.any(np.asarray(bank.leg_proc)[leg_pad] != 0):
+        _fail("pad legs leg_proc=0", "a padded leg drives a process")
+    if np.any(np.asarray(bank.leg_link)[leg_pad] != 0):
+        _fail("pad legs leg_link=0", "a padded leg occupies a link")
+    # padded links must receive no campaign load
+    pl = np.asarray(bank.proc_link)  # [N, P, L]
+    if np.any(pl[np.broadcast_to(link_pad[:, None, :], pl.shape)] != 0):
+        _fail("pad links proc_link=0", "a padded link receives process load")
+
+
+def _check_counts(bank) -> None:
+    leg_valid = np.asarray(bank.leg_valid, bool)
+    link_valid = np.asarray(bank.link_valid, bool)
+    if not np.array_equal(np.asarray(bank.n_legs), leg_valid.sum(axis=1)):
+        _fail("n_legs", "n_legs disagrees with leg_valid row sums")
+    if not np.array_equal(np.asarray(bank.n_links), link_valid.sum(axis=1)):
+        _fail("n_links", "n_links disagrees with link_valid row sums")
+    if np.any(np.asarray(bank.n_procs) > bank.pad_procs):
+        _fail("n_procs", "a scenario claims more processes than the pad")
+    # legs/links fill a prefix of the padded axis by construction
+    for name, valid in (("leg_valid", leg_valid), ("link_valid", link_valid)):
+        counts = valid.sum(axis=1)
+        expect = np.arange(valid.shape[1])[None, :] < counts[:, None]
+        if not np.array_equal(valid, expect):
+            _fail(name, f"{name} rows are not prefix-shaped")
+    if np.any(np.asarray(bank.max_ticks) < 0):
+        _fail("max_ticks", "negative max_ticks")
+
+
+def _check_deps(bank) -> None:
+    dep = np.asarray(bank.dep)
+    T = bank.pad_legs
+    if np.any((dep < -1) | (dep >= T)):
+        _fail("dep bounds", f"dep outside [-1, {T})")
+    leg_valid = np.asarray(bank.leg_valid, bool)
+    n_legs = np.asarray(bank.n_legs)
+    has_dep = leg_valid & (dep >= 0)
+    if np.any(dep[has_dep] >= n_legs[np.nonzero(has_dep)[0]]):
+        _fail("dep target", "a valid leg depends on a padded leg")
+    idx = np.broadcast_to(np.arange(T)[None, :], dep.shape)
+    if np.any(dep[has_dep] == idx[has_dep]):
+        _fail("dep self", "a leg depends on itself")
+
+
+def _check_shard_pads(bank) -> None:
+    pad_ids = [
+        i
+        for i, name in enumerate(bank.names)
+        if str(name).startswith(_SHARD_PAD_PREFIX)
+    ]
+    if not pad_ids:
+        return
+    ids = np.asarray(pad_ids)
+    if np.any(np.asarray(bank.max_ticks)[ids] != 0):
+        _fail("shard pads", "a shard-pad scenario has max_ticks > 0")
+    if np.any(np.asarray(bank.n_legs)[ids] != 0):
+        _fail("shard pads", "a shard-pad scenario claims legs")
+    if np.any(np.asarray(bank.leg_valid, bool)[ids]):
+        _fail("shard pads", "a shard-pad scenario has valid legs")
+
+
+def _check_buckets(bank) -> None:
+    n = bank.n_scenarios
+    bucket_of = np.asarray(bank.bucket_of)
+    slot_of = np.asarray(bank.slot_of)
+    nb = bank.n_buckets
+    if bucket_of.shape != (n,) or slot_of.shape != (n,):
+        _fail("bucket map", "bucket_of/slot_of are not [N]")
+    if np.any((bucket_of < 0) | (bucket_of >= nb)):
+        _fail("bucket map", f"bucket_of outside [0, {nb})")
+    seen = 0
+    for b, bucket in enumerate(bank.buckets):
+        ids = np.asarray(bucket.scenario_ids)
+        seen += ids.size
+        if ids.size > bucket.bank.n_scenarios:
+            _fail(
+                "bucket map",
+                f"bucket {b} maps more scenarios than its sub-bank holds",
+            )
+        if np.any((ids < 0) | (ids >= n)):
+            _fail("bucket map", f"bucket {b} scenario_ids out of range")
+        mine = np.nonzero(bucket_of == b)[0]
+        slots = slot_of[mine]
+        if np.any((slots < 0) | (slots >= max(ids.size, 1))):
+            _fail("bucket map", f"bucket {b} slot_of out of range")
+        # the round trip scenario -> (bucket, slot) -> scenario_ids must be
+        # the identity: that is the bijection the scatter-back relies on
+        if not np.array_equal(np.sort(slots), np.arange(mine.size)):
+            _fail("bucket map", f"bucket {b} slots are not a bijection")
+        if ids.size != mine.size or np.any(ids[slots] != mine):
+            _fail(
+                "bucket map",
+                f"bucket {b} scenario_ids disagree with bucket_of/slot_of",
+            )
+        # per-scenario scalars must survive the bucket slicing bit-exactly
+        take = min(ids.size, bucket.bank.n_scenarios)
+        for field in ("max_ticks", "n_legs"):
+            parent = np.asarray(getattr(bank, field))[ids[:take]]
+            child = np.asarray(getattr(bucket.bank, field))[:take]
+            if not np.array_equal(parent, child):
+                _fail(
+                    "bucket content",
+                    f"bucket {b} {field} diverges from the parent bank",
+                )
+        check_bank(bucket.bank)
+    if seen != n:
+        _fail("bucket map", f"buckets cover {seen} of {n} scenarios")
+
+
+def check_bank(bank) -> None:
+    """Validate a compiled bank against the padding/bucket contracts.
+
+    Raises :class:`BankContractError` on the first violated invariant;
+    passes silently otherwise. Accepts :class:`ScenarioBank` and (checked
+    recursively, including the scenario->(bucket, slot) bijection)
+    :class:`BucketedBank`.
+    """
+    from ..core import workload
+
+    if not isinstance(bank, workload.ScenarioBank):
+        raise TypeError(f"check_bank wants a ScenarioBank: {type(bank)!r}")
+    _check_inert_rows(bank)
+    _check_counts(bank)
+    _check_deps(bank)
+    _check_shard_pads(bank)
+    if isinstance(bank, workload.BucketedBank):
+        _check_buckets(bank)
+
+
+def check_bank_once(bank) -> None:
+    """:func:`check_bank`, memoized on the (immutable, by contract) bank
+    instance so per-call validation costs one attribute probe."""
+    if getattr(bank, "_repro_bank_checked", False):
+        return
+    check_bank(bank)
+    try:
+        object.__setattr__(bank, "_repro_bank_checked", True)
+    except (AttributeError, TypeError):
+        pass
+
+
+# -- result validation ------------------------------------------------------
+
+
+def check_result(result, bank=None, *, where: str = "simulate_bank") -> None:
+    """NaN/inf guard plus the output-masking contract on a ``SimResult``.
+
+    ``transfer_time`` must be finite and non-negative with unfinished legs
+    masked to exactly 0; the contention accumulators must be finite;
+    ``ticks`` non-negative.
+    """
+    tt = np.asarray(result.transfer_time)
+    if not np.all(np.isfinite(tt)):
+        raise ResultContractError(f"{where}: non-finite transfer_time")
+    if np.any(tt < 0):
+        raise ResultContractError(f"{where}: negative transfer_time")
+    done = np.asarray(result.done, bool)
+    if np.any(tt[~done] != 0):
+        raise ResultContractError(
+            f"{where}: unfinished legs must mask transfer_time to 0"
+        )
+    for field in ("conth_mb", "conpr_mb", "start_tick"):
+        vals = np.asarray(getattr(result, field))
+        if not np.all(np.isfinite(vals)):
+            raise ResultContractError(f"{where}: non-finite {field}")
+    if np.any(np.asarray(result.ticks) < 0):
+        raise ResultContractError(f"{where}: negative ticks")
+
+
+@contextlib.contextmanager
+def nan_guard() -> Iterator[None]:
+    """Force result checking on inside the scope, ``REPRO_DEBUG`` or not."""
+    global _forced_result_checks
+    _forced_result_checks += 1
+    try:
+        yield
+    finally:
+        _forced_result_checks -= 1
+
+
+# -- retrace budget ---------------------------------------------------------
+
+
+@contextlib.contextmanager
+def retrace_guard(
+    budget: int, *, reset: bool = False
+) -> Iterator[object]:
+    """Fail the scope when the banked engine (re)traces more than ``budget``
+    times inside it::
+
+        with retrace_guard(budget=1):
+            fleet.run(theta)          # first call may trace ...
+            fleet.run(other_theta)    # ... further calls must not
+
+    ``reset=True`` first runs ``engine.reset_bank_trace_count()`` (dropping
+    the jit and fleet compile caches), making the budget absolute rather
+    than relative to whatever earlier callers already traced.
+    """
+    from ..core import engine
+
+    if budget < 0:
+        raise ValueError(f"retrace budget must be >= 0: {budget}")
+    if reset:
+        engine.reset_bank_trace_count()
+    with engine.count_bank_traces() as traces:
+        yield traces
+    if traces.count > budget:
+        raise RetraceBudgetError(
+            f"banked engine traced {traces.count}x, budget was {budget}"
+        )
+
+
+# -- thread/lock discipline -------------------------------------------------
+
+
+class _LockCheckedDict(dict):
+    """Dict that requires ``lock`` to be held for every mutation."""
+
+    def __init__(self, data: dict, lock: threading.RLock, what: str):
+        super().__init__(data)
+        self._lock = lock
+        self._what = what
+
+    def _assert_held(self) -> None:
+        # RLock._is_owned: held by *this* thread. Python-level guarantee —
+        # exactly what the discipline demands of every mutation site.
+        if not self._lock._is_owned():  # type: ignore[attr-defined]
+            raise LockDisciplineError(
+                f"{self._what} mutated without holding its lock"
+            )
+
+    def __setitem__(self, key, value) -> None:
+        self._assert_held()
+        super().__setitem__(key, value)
+
+    def __delitem__(self, key) -> None:
+        self._assert_held()
+        super().__delitem__(key)
+
+    def pop(self, *args):
+        self._assert_held()
+        return super().pop(*args)
+
+    def popitem(self):
+        self._assert_held()
+        return super().popitem()
+
+    def clear(self) -> None:
+        self._assert_held()
+        super().clear()
+
+    def setdefault(self, key, default=None):
+        self._assert_held()
+        return super().setdefault(key, default)
+
+    def update(self, *args, **kwargs) -> None:
+        self._assert_held()
+        super().update(*args, **kwargs)
+
+
+@contextlib.contextmanager
+def lock_discipline() -> Iterator[None]:
+    """Swap the fleet compile cache for a lock-asserting dict: any mutation
+    inside the scope that does not hold ``fleet._COMPILE_CACHE_LOCK`` —
+    e.g. from the ``Fleet.stream`` prefetch thread racing the consumer —
+    raises :class:`LockDisciplineError` at the racing call site."""
+    from ..core import fleet
+
+    checked = _LockCheckedDict(
+        fleet._compile_cache,
+        fleet._COMPILE_CACHE_LOCK,
+        "fleet._compile_cache",
+    )
+    original = fleet._compile_cache
+    fleet._compile_cache = checked
+    try:
+        yield
+    finally:
+        original.clear()
+        original.update(checked)
+        fleet._compile_cache = original
+
+
+@contextlib.contextmanager
+def thread_stress(interval: float = 1e-5) -> Iterator[None]:
+    """Shrink the bytecode switch interval so cross-thread interleavings
+    that hide at the default 5ms surface in tests (pair with
+    :func:`lock_discipline` around ``Fleet.stream(prefetch=...)``)."""
+    old = sys.getswitchinterval()
+    sys.setswitchinterval(interval)
+    try:
+        yield
+    finally:
+        sys.setswitchinterval(old)
+
+
+def sanitize_result_hook(result, bank=None, *, where: str = "simulate_bank"):
+    """Engine-facing entry: validate ``result`` (and memoized-validate the
+    bank) when sanitizers are enabled. Returns ``result`` unchanged."""
+    if result_checks_enabled():
+        if bank is not None:
+            check_bank_once(bank)
+        check_result(result, bank, where=where)
+    return result

@@ -7,7 +7,7 @@ smoke tests).
 from __future__ import annotations
 
 import importlib
-from typing import Dict, List
+from typing import List
 
 from repro.models.config import ModelConfig
 

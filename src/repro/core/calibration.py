@@ -350,6 +350,7 @@ def presimulate(
     mesh the caller shards ``key``/output batches over devices (see
     ``launch/calibrate.py``).
     """
+    # repro: allow[jit-cache] -- intentionally per-call: closes over spec/prior/theta_mapper and is reused across every chunk of one presimulation, then dropped
     @functools.partial(jax.jit, static_argnames=("backend",))
     def _chunk(k, *, backend=backend):
         kt, ks = jax.random.split(k)
@@ -429,6 +430,7 @@ def presimulate_bank(
     keep = jnp.asarray(bank.keep_frac)  # [N, T]
     link_valid = jnp.asarray(bank.link_valid, jnp.float32)  # [N, L]
 
+    # repro: allow[jit-cache] -- intentionally per-call: closes over the bank's mask/keep tables and is reused across every chunk of one presimulation, then dropped
     @functools.partial(jax.jit, static_argnames=("backend",))
     def _chunk(k, *, backend=backend):
         kt, ks = jax.random.split(k)

@@ -7,7 +7,7 @@ and provides the hourly partitioning used for the Fig.-3 time series.
 """
 from __future__ import annotations
 
-from typing import Dict, List, NamedTuple, Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp

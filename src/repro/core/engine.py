@@ -14,17 +14,17 @@ Semantics are identical to an event-driven execution at 1-tick resolution;
 from __future__ import annotations
 
 import contextlib
-import dataclasses
 import functools
 import json
 import os
-from typing import NamedTuple, Optional, Sequence, Tuple, Union
+import sys
+from typing import Callable, Iterator, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.experimental.shard_map import shard_map
+import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec
+import numpy as np
 
 from repro.core.workload import (
     BucketedBank,
@@ -324,37 +324,19 @@ def _tick_body(
 
 
 @functools.partial(jax.jit, static_argnames=("backend", "leap", "window"))
-def simulate(
+def _simulate(
     spec: SimSpec,
     params: SimParams,
     key: jax.Array,
     *,
     backend: Optional[str] = None,
     leap: bool = False,
-    window: Optional[int] = 1,
+    window: int = 1,
 ) -> SimResult:
-    """Run one stochastic simulation of the campaign.
-
-    Returns per-leg observations; legs that never finish within
-    ``spec.max_ticks`` have ``done=False`` and ``transfer_time=0`` (their
-    end tick is undefined, so the duration is masked out rather than
-    reported as the garbage ``-t_start`` — consumers must filter on
-    ``done`` for duration statistics). ``leap=True`` enables the exact
-    event-leap acceleration (identical results for deterministic background
-    loads; statistically equivalent — same per-event sampling — for
-    stochastic ones).
-
-    ``window=K`` fuses ``K`` ticks (or, under ``leap``, ``K`` event leaps —
-    windows leap, they never degrade to dt=1) into each while-loop
-    iteration via an inner ``lax.scan`` whose per-tick freeze mask
-    replicates the loop condition, so results are **bit-identical** to the
-    per-tick loop for every ``K`` — including the stochastic background
-    stream and the final ``ticks`` clock — while the loop dispatch/cond
-    overhead amortizes ``K``-fold (see ``tests/test_tick_window.py``).
-    ``window=None`` resolves the auto default, like every other window
-    entry point.
-    """
-    window = _resolve_window(window, leap) if window is None else int(window)
+    """Jitted body of :func:`simulate`. ``window`` must be a resolved int
+    (trace-purity contract: ``window=None`` is resolved by the public
+    wrapper *outside* jit, so env/table reads never run at trace time and
+    never go stale inside a cached trace — see CONTRACTS.md)."""
     n = spec.n_legs
     born_done = jnp.zeros((n,), bool)
     if params.enabled is not None:
@@ -411,6 +393,43 @@ def simulate(
     )
 
 
+def simulate(
+    spec: SimSpec,
+    params: SimParams,
+    key: jax.Array,
+    *,
+    backend: Optional[str] = None,
+    leap: bool = False,
+    window: Optional[int] = 1,
+) -> SimResult:
+    """Run one stochastic simulation of the campaign.
+
+    Returns per-leg observations; legs that never finish within
+    ``spec.max_ticks`` have ``done=False`` and ``transfer_time=0`` (their
+    end tick is undefined, so the duration is masked out rather than
+    reported as the garbage ``-t_start`` — consumers must filter on
+    ``done`` for duration statistics). ``leap=True`` enables the exact
+    event-leap acceleration (identical results for deterministic background
+    loads; statistically equivalent — same per-event sampling — for
+    stochastic ones).
+
+    ``window=K`` fuses ``K`` ticks (or, under ``leap``, ``K`` event leaps —
+    windows leap, they never degrade to dt=1) into each while-loop
+    iteration via an inner ``lax.scan`` whose per-tick freeze mask
+    replicates the loop condition, so results are **bit-identical** to the
+    per-tick loop for every ``K`` — including the stochastic background
+    stream and the final ``ticks`` clock — while the loop dispatch/cond
+    overhead amortizes ``K``-fold (see ``tests/test_tick_window.py``).
+    ``window=None`` resolves the auto default, like every other window
+    entry point — resolved *here*, outside the jitted body, so the env
+    var / sweep-table reads happen per call, not once at trace time.
+    """
+    window = _resolve_window(window, leap) if window is None else int(window)
+    return _simulate(
+        spec, params, key, backend=backend, leap=leap, window=window
+    )
+
+
 def _params_axes(params: SimParams, base_ndim: int = 1) -> SimParams:
     """Per-field vmap axes: 0 for fields carrying a leading batch dim beyond
     their per-sim rank, None for shared fields (mixing is allowed — e.g. a
@@ -425,6 +444,23 @@ def _params_axes(params: SimParams, base_ndim: int = 1) -> SimParams:
 
 
 @functools.partial(jax.jit, static_argnames=("backend", "leap", "window"))
+def _simulate_batch(
+    spec: SimSpec,
+    params: SimParams,
+    keys: jax.Array,  # [B, 2] PRNG keys
+    *,
+    backend: Optional[str] = None,
+    leap: bool = False,
+    window: int = 1,
+) -> SimResult:
+    """Jitted body of :func:`simulate_batch` (``window`` pre-resolved)."""
+    return jax.vmap(
+        lambda p, k: _simulate(spec, p, k, backend=backend, leap=leap,
+                               window=window),
+        in_axes=(_params_axes(params), 0),
+    )(params, keys)
+
+
 def simulate_batch(
     spec: SimSpec,
     params: SimParams,
@@ -439,13 +475,13 @@ def simulate_batch(
     Each ``params`` field may carry a leading batch dim (one theta and/or one
     ``enabled`` mask per sim) or be unbatched (shared theta, e.g. the 16k
     validation runs of Section 5). ``window`` fuses K ticks per loop
-    iteration (bit-identical results; see :func:`simulate`).
+    iteration (bit-identical results; see :func:`simulate`); ``None``
+    resolves the auto default outside the jitted body.
     """
-    return jax.vmap(
-        lambda p, k: simulate(spec, p, k, backend=backend, leap=leap,
-                              window=window),
-        in_axes=(_params_axes(params), 0),
-    )(params, keys)
+    window = _resolve_window(window, leap) if window is None else int(window)
+    return _simulate_batch(
+        spec, params, keys, backend=backend, leap=leap, window=window
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -463,10 +499,10 @@ _bank_traces = 0
 # (e.g. the fleet-level compile cache in repro.core.fleet) register here so
 # trace-count assertions stay order-independent without the engine importing
 # them.
-_cache_clear_hooks = []
+_cache_clear_hooks: list[Callable[[], None]] = []
 
 
-def register_cache_clear_hook(fn) -> None:
+def register_cache_clear_hook(fn: Callable[[], None]) -> None:
     """Register ``fn()`` to run whenever the banked-engine caches are
     dropped (see :func:`reset_bank_trace_count`). Idempotent per function."""
     if fn not in _cache_clear_hooks:
@@ -515,7 +551,7 @@ class _TraceDelta:
 
 
 @contextlib.contextmanager
-def count_bank_traces():
+def count_bank_traces() -> Iterator[_TraceDelta]:
     """Context manager counting banked-engine (re)traces inside the block::
 
         with count_bank_traces() as traces:
@@ -607,9 +643,11 @@ def _vmap_bank_core(
     row-local over the scenario axis, so sharding it is collective-free)."""
 
     def one_scenario(spec_i: SimSpec, params_i: SimParams, keys_i: jax.Array):
+        # _simulate, not the public wrapper: window is already a resolved
+        # int here and the traced path must not re-enter window resolution
         return jax.vmap(
-            lambda p, k: simulate(spec_i, p, k, backend=backend, leap=leap,
-                                  window=window),
+            lambda p, k: _simulate(spec_i, p, k, backend=backend, leap=leap,
+                                   window=window),
             in_axes=(_params_axes(params_i), 0),
         )(params_i, keys_i)
 
@@ -983,7 +1021,7 @@ def simulate_bank_stepped(
     window: Optional[int] = None,
     sync_every: Optional[int] = 8,
     checkpoint_every: Optional[int] = None,
-    on_checkpoint=None,
+    on_checkpoint: Optional[Callable[[BankCheckpoint], None]] = None,
     resume: Optional[BankCheckpoint] = None,
 ) -> SimResult:
     """Banked simulation as a host-driven loop of donated window steps.
@@ -1087,6 +1125,7 @@ _WINDOW_TABLE_PATH = os.path.join(os.path.dirname(__file__), "window_table.json"
 def _window_table_path(path: Optional[str] = None) -> str:
     return (
         path
+        # repro: allow[trace-purity] -- host-side: the public simulate* wrappers resolve window=None before entering jit; traced callers pass resolved ints
         or os.environ.get("REPRO_WINDOW_TABLE", "").strip()
         or _WINDOW_TABLE_PATH
     )
@@ -1095,6 +1134,7 @@ def _window_table_path(path: Optional[str] = None) -> str:
 @functools.lru_cache(maxsize=None)
 def _load_window_table(path: str) -> dict:
     try:
+        # repro: allow[trace-purity] -- host-side only: window=None is resolved in the unjitted public wrappers (see _simulate's contract)
         with open(path) as f:
             raw = json.load(f)
     except (OSError, ValueError):
@@ -1163,6 +1203,7 @@ def _resolve_window(window: Optional[int], leap: bool = False) -> int:
     """``None`` -> ``REPRO_TICK_WINDOW`` or the per-backend auto default;
     explicit values are validated (>= 1)."""
     if window is None:
+        # repro: allow[trace-purity] -- host-side only: traced callers always pass a resolved int window, the public wrappers resolve None before jit
         env = os.environ.get("REPRO_TICK_WINDOW", "").strip()
         if not env:
             return default_tick_window(leap)
@@ -1368,6 +1409,21 @@ def _simulate_bank_bucketed(
     )
 
 
+def _sanitizers_wanted() -> bool:
+    """Cheap gate for the REPRO_DEBUG / nan_guard sanitizer hook: avoids
+    importing ``repro.analysis`` on the hot path unless the env var is set
+    or a ``nan_guard`` scope already pulled the module in."""
+    if os.environ.get("REPRO_DEBUG", "").strip().lower() in (
+        "1",
+        "true",
+        "on",
+        "yes",
+    ):
+        return True
+    mod = sys.modules.get("repro.analysis.sanitize")
+    return mod is not None and mod.result_checks_enabled()
+
+
 def simulate_bank(
     bank: Union[ScenarioBank, SimSpec],
     params: SimParams,
@@ -1436,15 +1492,25 @@ def simulate_bank(
         # content-dependent bounds; see _clamp_window)
         w = _clamp_window(w, int(np.max(np.asarray(bank.max_ticks))))
     if bucketed and isinstance(bank, BucketedBank):
-        return _simulate_bank_bucketed(
+        result = _simulate_bank_bucketed(
             bank, params, keys, backend=backend, leap=leap, lowering=lowering,
             window=w, mesh=mesh,
         )
-    spec = bank_spec(bank) if isinstance(bank, ScenarioBank) else bank
-    return _dispatch_bank(
-        spec, params, keys, backend=backend, leap=leap, lowering=lowering,
-        window=w, mesh=mesh,
-    )
+    else:
+        spec = bank_spec(bank) if isinstance(bank, ScenarioBank) else bank
+        result = _dispatch_bank(
+            spec, params, keys, backend=backend, leap=leap, lowering=lowering,
+            window=w, mesh=mesh,
+        )
+    if _sanitizers_wanted():
+        from repro.analysis import sanitize as _sanitize
+
+        return _sanitize.sanitize_result_hook(
+            result,
+            bank if isinstance(bank, ScenarioBank) else None,
+            where="simulate_bank",
+        )
+    return result
 
 
 def make_params(

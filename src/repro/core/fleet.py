@@ -38,9 +38,12 @@ import dataclasses
 import itertools
 import json
 import os
+import threading
 from typing import (
     Any,
     Callable,
+    Dict,
+    Hashable,
     Iterable,
     Iterator,
     List,
@@ -53,6 +56,7 @@ from typing import (
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh
 import numpy as np
 
 from repro.core import calibration as calibration_lib
@@ -93,18 +97,32 @@ _ARRAY_FIELDS = tuple(
 _COMPILE_CACHE_MAX = 64
 _compile_cache: dict = {}
 
+# every mutation (and compound lookup-then-insert) of _compile_cache holds
+# this lock: the Fleet.stream(prefetch=) background thread builds chunk
+# banks through the same cache the consumer thread reads, and the FIFO
+# eviction in _cache_put is a compound operation that must stay atomic.
+# The discipline is machine-checked by repro.analysis.lock_discipline().
+_COMPILE_CACHE_LOCK = threading.RLock()
 
-def _cache_put(key, value) -> None:
-    _compile_cache.pop(key, None)  # re-insert at the back
-    _compile_cache[key] = value
-    while len(_compile_cache) > _COMPILE_CACHE_MAX:
-        _compile_cache.pop(next(iter(_compile_cache)))
+
+def _cache_get(key: Hashable) -> Any:
+    with _COMPILE_CACHE_LOCK:
+        return _compile_cache.get(key)
+
+
+def _cache_put(key: Hashable, value: Any) -> None:
+    with _COMPILE_CACHE_LOCK:
+        _compile_cache.pop(key, None)  # re-insert at the back
+        _compile_cache[key] = value
+        while len(_compile_cache) > _COMPILE_CACHE_MAX:
+            _compile_cache.pop(next(iter(_compile_cache)))
 
 
 def clear_compile_cache() -> None:
     """Drop every memoized compiled bank (run automatically by
     ``engine.reset_bank_trace_count(clear_caches=True)``)."""
-    _compile_cache.clear()
+    with _COMPILE_CACHE_LOCK:
+        _compile_cache.clear()
 
 
 engine_lib.register_cache_clear_hook(clear_compile_cache)
@@ -121,6 +139,25 @@ class StreamChunk(NamedTuple):
 
 
 PairsLike = Sequence[Tuple[Grid, Campaign]]
+
+# what `devices=` accepts everywhere: nothing, a device count, an explicit
+# device sequence, or an existing 1-D mesh (see engine.resolve_mesh)
+DevicesLike = Union[None, int, Sequence[Any], Mesh]
+
+# what `params_or_theta=` accepts (see Fleet._resolve_params): base params,
+# explicit SimParams, a theta [3] vector / per-scenario [N, 3] matrix, or a
+# callable rebuilding params for a (chunk) bank
+ParamsLike = Union[
+    None,
+    SimParams,
+    jax.Array,
+    np.ndarray,
+    Sequence[float],
+    Callable[[ScenarioBank], SimParams],
+]
+
+# a max_ticks spec: None (safe upper bound), a uniform cap, or per-scenario
+TicksLike = Union[None, int, Sequence[int], np.ndarray]
 
 
 class Fleet:
@@ -141,10 +178,14 @@ class Fleet:
         leap: bool = False,
         backend: Optional[str] = None,
         window: Optional[int] = None,
-        devices=None,
+        devices: DevicesLike = None,
     ) -> None:
         if not isinstance(bank, ScenarioBank):
             raise TypeError(f"Fleet wraps a compiled ScenarioBank, got {type(bank)!r}")
+        if engine_lib._sanitizers_wanted():
+            from repro.analysis import sanitize as _sanitize
+
+            _sanitize.check_bank_once(bank)
         self.bank = bank
         self.lowering = lowering
         self.leap = leap
@@ -153,11 +194,11 @@ class Fleet:
         # None | device count | device sequence | 1-D Mesh — resolved (and
         # memoized; jax.devices() is only consulted once) on first sharded run
         self.devices = devices
-        self._mesh = None
+        self._mesh: Optional[Mesh] = None
         self._base_params: Optional[SimParams] = None
-        self._mappers: dict = {}
+        self._mappers: Dict[str, Callable[[jax.Array], SimParams]] = {}
 
-    def _resolve_mesh(self, devices=None):
+    def _resolve_mesh(self, devices: DevicesLike = None) -> Optional[Mesh]:
         """The fleet's execution mesh (``engine.resolve_mesh``), memoized for
         the fleet default so every :meth:`run` reuses one Mesh object (equal
         meshes hash equal anyway — the jit cache would not retrace — but the
@@ -175,7 +216,7 @@ class Fleet:
         cls,
         pairs: Union[PairsLike, Callable[[], PairsLike]],
         *,
-        max_ticks=None,
+        max_ticks: TicksLike = None,
         n_buckets: int = 1,
         pad_floors: Optional[Tuple[int, int, int]] = None,
         pad_multiple: int = 1,
@@ -228,7 +269,7 @@ class Fleet:
                 shards,
             )
         )
-        bank = _compile_cache.get(key) if key is not None else None
+        bank = _cache_get(key) if key is not None else None
         if bank is None:
             pl, pp, pk = pad_floors if pad_floors is not None else (None, None, None)
             bank = compile_bank(
@@ -257,7 +298,7 @@ class Fleet:
         seed: int = 0,
         *,
         scale: float = 1.0,
-        max_ticks=None,
+        max_ticks: TicksLike = None,
         n_buckets: int = 1,
         pad_floors: Optional[Tuple[int, int, int]] = None,
         pad_multiple: int = 1,
@@ -305,7 +346,7 @@ class Fleet:
         table: LegTable,
         *,
         name: str = "table0",
-        max_ticks=None,
+        max_ticks: TicksLike = None,
         lowering: Optional[str] = None,
         leap: bool = False,
         backend: Optional[str] = None,
@@ -319,7 +360,7 @@ class Fleet:
         cache entry, so the id key cannot be reused while cached).
         """
         key = ("table", id(table), _hashable_ticks(max_ticks))
-        hit = _compile_cache.get(key)
+        hit = _cache_get(key)
         if hit is not None and hit[0] is table:
             bank = hit[1]
         else:
@@ -382,7 +423,7 @@ class Fleet:
 
     # -- params -------------------------------------------------------------
 
-    def params(self, **overrides) -> SimParams:
+    def params(self, **overrides: Any) -> SimParams:
         """Bank-wide :class:`SimParams` (``engine.make_bank_params`` knobs);
         the no-override base params are memoized on the fleet."""
         if not overrides:
@@ -401,7 +442,10 @@ class Fleet:
         return mapper
 
     def _resolve_params(
-        self, params_or_theta, protocol: str, bank: Optional[ScenarioBank] = None
+        self,
+        params_or_theta: ParamsLike,
+        protocol: str,
+        bank: Optional[ScenarioBank] = None,
     ) -> SimParams:
         """``None`` -> base bank params; ``SimParams`` -> as given; a
         ``[3]`` theta vector (or per-scenario ``[N, 3]`` matrix, e.g.
@@ -437,7 +481,7 @@ class Fleet:
 
     def run(
         self,
-        params_or_theta=None,
+        params_or_theta: ParamsLike = None,
         *,
         replicas: Optional[int] = None,
         key: Optional[jax.Array] = None,
@@ -448,7 +492,7 @@ class Fleet:
         backend: Optional[str] = None,
         bucketed: bool = True,
         window: Optional[int] = None,
-        devices=None,
+        devices: DevicesLike = None,
     ) -> SimResult:
         """Simulate every scenario x ``replicas`` stochastic replicas.
 
@@ -500,11 +544,11 @@ class Fleet:
         pairs: Iterable[Tuple[Grid, Campaign]],
         *,
         chunk: Optional[int] = None,
-        params_or_theta=None,
+        params_or_theta: ParamsLike = None,
         replicas: int = 1,
         key: Optional[jax.Array] = None,
         protocol: str = "webdav",
-        max_ticks=None,
+        max_ticks: TicksLike = None,
         lowering: Optional[str] = None,
         leap: Optional[bool] = None,
         backend: Optional[str] = None,
@@ -573,7 +617,12 @@ class Fleet:
             max_ticks, lowering, leap, backend, window, int(prefetch),
         )
 
-    def _build_chunk(self, block, chunk, max_ticks) -> Tuple[ScenarioBank, int]:
+    def _build_chunk(
+        self,
+        block: Sequence[Tuple[Grid, Campaign]],
+        chunk: int,
+        max_ticks: TicksLike,
+    ) -> Tuple[ScenarioBank, int]:
         """Compile one stream block into a fleet-pad chunk bank (runs on the
         prefetch thread when ``prefetch > 0``): campaign compilation, the
         pad check, and the device upload of the stacked spec arrays all
@@ -743,7 +792,7 @@ class Fleet:
         return path
 
     @classmethod
-    def load(cls, path: str, **run_opts) -> "Fleet":
+    def load(cls, path: str, **run_opts: Any) -> "Fleet":
         """Rebuild a fleet saved by :meth:`save`. Bucketed banks are
         restored bucket for bucket: each sub-bank is sliced back out of the
         persisted monolithic arrays (see
@@ -858,7 +907,7 @@ class Fleet:
 
     def coefficients(
         self,
-        params_or_theta=None,
+        params_or_theta: ParamsLike = None,
         *,
         replicas: int = 1,
         key: Optional[jax.Array] = None,
@@ -973,7 +1022,7 @@ class Fleet:
         protocol: str = "webdav",
         leap: Optional[bool] = None,
         backend: Optional[str] = None,
-    ) -> dict:
+    ) -> Dict[str, Any]:
         """Validation sweep under theta* across every scenario (see
         :func:`repro.core.calibration.validate_bank`). ``theta_star`` may be
         one shared ``[3]`` vector or the per-scenario ``[N, 3]`` matrix of

@@ -13,7 +13,7 @@ them with :mod:`repro.core.engine` and regressing with
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 import numpy as np
 

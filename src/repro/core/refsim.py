@@ -13,7 +13,7 @@ per-(job, link) streaming processes whose active legs are threads.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, Optional
 
 import numpy as np
 

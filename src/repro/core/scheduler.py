@@ -35,7 +35,6 @@ from repro.core.workload import (
     FileAccess,
     Job,
     LegTable,
-    Replica,
     compile_campaign,
 )
 
@@ -242,6 +241,7 @@ def optimize_profiles(
     pop = jax.random.randint(k0, (population, n_access), 0, n_cand)
     fleet = super_fleet(st)  # compiled once, shared by every generation
 
+    # repro: allow[jit-cache] -- intentionally per-call: closes over the compiled super-fleet and is reused across every generation, then dropped with the call
     @jax.jit
     def eval_pop(pop: jax.Array, key: jax.Array) -> jax.Array:
         keys = jax.random.split(key, antithetic_sims)
@@ -250,6 +250,7 @@ def optimize_profiles(
             return evaluate_population(st, base_params, pop, ks, fleet=fleet)
         return jnp.mean(jax.vmap(per_sim)(keys), axis=0)
 
+    # repro: allow[jit-cache] -- intentionally per-call: closes over the search hyperparameters and is reused across every generation, then dropped with the call
     @jax.jit
     def next_gen(pop: jax.Array, fit: jax.Array, key: jax.Array) -> jax.Array:
         order = jnp.argsort(fit)

@@ -17,12 +17,12 @@ exactly the simulator use-case the paper proposes.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import numpy as np
 
-from repro.core.engine import SimParams, SimSpec, make_params, simulate
+from repro.core.engine import SimSpec, make_params, simulate
 from repro.core.scheduler import CandidateAccess, build_super_table, optimize_profiles
 from repro.core.topology import Grid
 from repro.core.workload import (

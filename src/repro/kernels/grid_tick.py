@@ -36,8 +36,8 @@ import functools
 from typing import Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
+import jax.numpy as jnp
 
 __all__ = [
     "grid_tick_pallas",

@@ -19,9 +19,9 @@ import functools
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+import jax.numpy as jnp
 
 from repro.kernels.pallas_compat import tpu_compiler_params
 

@@ -42,6 +42,7 @@ def _platform() -> str:
 
 
 def default_backend() -> str:
+    # repro: allow[trace-purity] -- REPRO_KERNEL_BACKEND is a process-start constant: the backend is jit-static everywhere, so a trace-time read cannot go stale within a process
     env = os.environ.get("REPRO_KERNEL_BACKEND", "auto")
     if env not in _VALID:
         raise ValueError(f"REPRO_KERNEL_BACKEND must be one of {_VALID}: {env}")

@@ -15,8 +15,8 @@ import functools
 from typing import Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.experimental import pallas as pl
+import jax.numpy as jnp
 
 __all__ = ["selu_mlp_pallas"]
 

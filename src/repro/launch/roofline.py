@@ -16,10 +16,9 @@ and a bottleneck note.
 from __future__ import annotations
 
 import argparse
-import glob
 import json
 import os
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List
 
 import jax
 

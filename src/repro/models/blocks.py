@@ -13,7 +13,6 @@ Conventions:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -21,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ops
 from repro.models.common import apply_rope, dense_init, rms_norm, rope
-from repro.models.config import BlockKind, ModelConfig
+from repro.models.config import ModelConfig
 
 PyTree = Dict[str, Any]
 

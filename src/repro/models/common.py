@@ -8,7 +8,7 @@ by tree path, so the same structure drives init, checkpointing, and pjit.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ closed over once.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -18,7 +17,6 @@ from repro.models.common import cross_entropy_loss
 from repro.models.config import ModelConfig
 from repro.train.optimizer import (
     AdamWConfig,
-    AdamWState,
     adamw_init,
     adamw_update,
     compress_grads,

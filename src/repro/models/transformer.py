@@ -7,7 +7,6 @@ compile times); a tail stack covers ``n_layers % pattern_len`` layers.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

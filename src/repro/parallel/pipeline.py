@@ -13,12 +13,11 @@ to PP=1 (DP x TP covers the assigned meshes), and the launcher exposes
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
+import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 __all__ = ["pipeline_apply", "bubble_fraction"]

@@ -10,17 +10,14 @@ Greedy or temperature sampling; per-slot stop conditions (EOS / max tokens).
 """
 from __future__ import annotations
 
-import dataclasses
-import time
 from collections import deque
-from typing import Any, Deque, Dict, List, Optional, Tuple
+import dataclasses
+from typing import Any, Deque, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models import model as M
-from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.utils import get_logger
 
@@ -63,7 +60,9 @@ class ServingEngine:
         self.all_requests: List[Request] = []
         self.key = jax.random.PRNGKey(scfg.seed)
 
+        # repro: allow[jit-cache] -- per-instance by design: one engine holds one model config, the jits live (and are reused) for the engine's whole lifetime
         self._decode = jax.jit(M.make_serve_step(cfg))
+        # repro: allow[jit-cache] -- per-instance by design: one engine holds one model config, the jits live (and are reused) for the engine's whole lifetime
         self._prefill = jax.jit(M.make_prefill_step(cfg))
         self.steps = 0
         self.tokens_out = 0

@@ -17,11 +17,10 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, Iterable, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import CheckpointStore
 from repro.data.tokens import TokenStream, TokenStreamConfig
@@ -108,6 +107,10 @@ class Trainer:
             cfg, self.opt_cfg, backend=backend,
             compress=tcfg.compress_grads, grad_accum=tcfg.grad_accum,
         )
+        # jitted once per trainer, not per run(): repeated run() calls used
+        # to rebuild the jit wrapper and silently recompile every step shape
+        # repro: allow[jit-cache] -- per-instance by design: memoized here for the trainer's lifetime; one trainer holds one model/optimizer config
+        self._jit_step = jax.jit(self._step_fn, donate_argnums=(0,))
 
     # ------------------------------------------------------------------
     def init_or_restore(self) -> Dict[str, Any]:
@@ -124,7 +127,7 @@ class Trainer:
         start = int(state["step"])
         total = steps if steps is not None else self.tcfg.total_steps
         stream = TokenStream(self.stream_cfg, start_index=start)
-        step_fn = jax.jit(self._step_fn, donate_argnums=(0,))
+        step_fn = self._jit_step
         history = []
         ckpt_saves = 0
         for step in range(start, total):

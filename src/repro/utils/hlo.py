@@ -17,9 +17,9 @@ N is taken from the op's replica_groups when parsable, else the mesh size.
 """
 from __future__ import annotations
 
-import re
 from collections import defaultdict
-from typing import Dict, Optional, Tuple
+import re
+from typing import Dict
 
 __all__ = ["collective_bytes", "CollectiveStats", "DTYPE_BYTES"]
 

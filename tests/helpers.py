@@ -8,6 +8,9 @@ from typing import List, Tuple
 import numpy as np
 import pytest
 
+# re-exported for the property-based tests (`from helpers import given, ...`)
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]
+
 try:
     from hypothesis import given, settings, strategies as st
 

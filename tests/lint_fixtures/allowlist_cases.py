@@ -1,0 +1,20 @@
+"""Allowlist-protocol fixtures: a justified suppression, a reason-less allow
+comment (still a violation), and a mismatched-rule tag (no effect)."""
+import jax
+
+
+def justified(key):
+    jax.random.split(key)  # repro: allow[rng-discipline] -- fixture: deliberate warm-up draw kept for trace parity
+    return key
+
+
+def reasonless(key):
+    # repro: allow[rng-discipline]
+    jax.random.split(key)  # EXPECT: still a violation (no `-- reason`)
+    return key
+
+
+def wrong_rule(key):
+    # repro: allow[jit-cache] -- tag names a different rule, must not apply
+    jax.random.split(key)  # EXPECT: rng-discipline
+    return key

@@ -1,0 +1,28 @@
+"""Seeded jit-cache violations."""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def per_call_jit(x):
+    f = jax.jit(lambda v: v * 2)  # EXPECT: jit-cache (fresh cache per call)
+    return f(x)
+
+
+def nested_jitted_def(x):
+    @jax.jit  # EXPECT: jit-cache (jitted def inside a function body)
+    def inner(v):
+        return v + 1
+
+    return inner(x)
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def missing_static(
+    x,
+    *,
+    mode: str = "fast",
+    window: int = 8,  # EXPECT: jit-cache (config-like, not static)
+):
+    return jnp.sum(x) if mode == "fast" else jnp.mean(x * window)

@@ -1,0 +1,26 @@
+"""Clean twin of ``jit_cache_bad.py``: jits live at module scope with every
+config-like keyword-only parameter named in static_argnames; array-typed
+keyword params stay traced by design."""
+from typing import Optional
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "window"))
+def tuned(x, *, mode: str = "fast", window: int = 8):
+    return jnp.sum(x) if mode == "fast" else jnp.mean(x * window)
+
+
+@jax.jit
+def traced_optional(x, *, bias: Optional[jax.Array] = None):
+    return x if bias is None else x + bias
+
+
+_double = jax.jit(lambda v: v * 2)
+
+
+def uses_module_jit(x):
+    return _double(x)

@@ -1,0 +1,24 @@
+"""Seeded pad-sentinel violations. Lives under a ``kernels/`` directory so
+the path-scoped rule applies. Not runnable engine code — parsed only."""
+import numpy as np
+
+T = 8
+
+
+def rows(fill, n):
+    return np.full((n,), fill)
+
+
+def build_padded(tbl):
+    profile = rows(-1, T)  # EXPECT: pad-sentinel (literal fill for profile)
+    protocol_id = np.full((T,), -1)  # EXPECT: pad-sentinel
+    bank = dict(profile=profile, protocol_id=protocol_id)
+    pad_tail(bank, bg_period=1 << 30)  # EXPECT: pad-sentinel (kwarg literal)
+    if tbl.bg_period == 1073741824:  # EXPECT: pad-sentinel (literal compare)
+        pass
+    return bank
+
+
+def pad_tail(bank, bg_period=0):
+    bank["bg_period"] = bg_period
+    return bank

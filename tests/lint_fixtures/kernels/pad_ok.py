@@ -1,0 +1,26 @@
+"""Clean twin of ``pad_bad.py``: every pad fill/compare goes through the
+named workload sentinels."""
+import numpy as np
+
+from repro.core.workload import PAD_BG_PERIOD, PAD_PROFILE, PAD_PROTOCOL
+
+T = 8
+
+
+def rows(fill, n):
+    return np.full((n,), fill)
+
+
+def build_padded(tbl):
+    profile = rows(PAD_PROFILE, T)
+    protocol_id = np.full((T,), PAD_PROTOCOL)
+    bank = dict(profile=profile, protocol_id=protocol_id)
+    pad_tail(bank, bg_period=PAD_BG_PERIOD)
+    if tbl.bg_period == PAD_BG_PERIOD:
+        pass
+    return bank
+
+
+def pad_tail(bank, bg_period=0):
+    bank["bg_period"] = bg_period
+    return bank

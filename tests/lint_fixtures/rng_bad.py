@@ -1,0 +1,25 @@
+"""Seeded rng-discipline violations."""
+import jax
+
+
+def double_draw(key):
+    a = jax.random.normal(key)
+    b = jax.random.uniform(key)  # EXPECT: rng-discipline (key reused)
+    return a + b
+
+
+def discarded_split(key):
+    jax.random.split(key)  # EXPECT: rng-discipline (result discarded)
+    return jax.random.normal(key)
+
+
+def loop_reuse(key, n):
+    total = 0.0
+    for _ in range(n):
+        total += jax.random.normal(key)  # EXPECT: rng-discipline (loop reuse)
+    return total
+
+
+def shadowed_seed(key):
+    fresh = jax.random.PRNGKey(0)  # EXPECT: rng-discipline (key param ignored)
+    return jax.random.normal(fresh)

@@ -1,0 +1,29 @@
+"""Clean twin of ``rng_bad.py``: every draw comes from a fresh split, loops
+rebind per iteration, and fold_in derives per-item keys legitimately."""
+import jax
+
+
+def two_draws(key):
+    key, k1 = jax.random.split(key)
+    a = jax.random.normal(k1)
+    key, k2 = jax.random.split(key)
+    b = jax.random.uniform(k2)
+    return a + b
+
+
+def loop_split(key, n):
+    total = 0.0
+    for _ in range(n):
+        key, sub = jax.random.split(key)
+        total += jax.random.normal(sub)
+    return total
+
+
+def per_item(key, items):
+    # fold_in is the documented per-item derivation, not consumption
+    return [jax.random.normal(jax.random.fold_in(key, i)) for i in items]
+
+
+def default_key(key=None):
+    key = jax.random.PRNGKey(0) if key is None else key
+    return jax.random.normal(key)

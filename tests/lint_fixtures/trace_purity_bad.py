@@ -1,0 +1,27 @@
+"""Seeded trace-purity violations: impure calls and data-dependent Python
+branching inside jit-reachable functions. Never imported at runtime — the
+linter parses it. Expected findings are tagged ``# EXPECT:`` per line."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def helper(x):
+    t = time.time()  # EXPECT: trace-purity (reachable via entry below)
+    return x + t
+
+
+@jax.jit
+def entry(x):
+    y = helper(x)
+    flag = os.environ.get("FIXTURE_FLAG")  # EXPECT: trace-purity
+    if jnp.any(y > 0):  # EXPECT: trace-purity (data-dependent branch)
+        y = y * 2
+    return y, flag
+
+
+def never_traced(x):
+    # clean: not reachable from any jit root, impurity is fine here
+    return x + time.time()

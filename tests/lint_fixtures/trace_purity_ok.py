@@ -1,0 +1,23 @@
+"""Clean twin of ``trace_purity_bad.py``: the jitted function branches with
+``jnp.where`` and every impure call stays outside the traced call graph."""
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def pure_helper(x):
+    return x * 2.0
+
+
+@jax.jit
+def entry(x):
+    y = pure_helper(x)
+    return jnp.where(y > 0, y * 2, y)
+
+
+def host_side_timer(x):
+    # impure, but never reachable from a jit root
+    start = time.time()
+    out = entry(x)
+    return out, time.time() - start

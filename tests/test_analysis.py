@@ -1,0 +1,348 @@
+"""Tests for ``repro.analysis``: the contract linter (each rule must catch
+its seeded fixture and pass the clean twin), the inline allowlist protocol,
+the CLI exit-code contract, the repo's own lint cleanliness, and the runtime
+sanitizers (bank/result contract rejections, retrace budgets, lock
+discipline, and the prefetch stress parity run)."""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+import os
+from pathlib import Path
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis import lint_paths, sanitize
+from repro.analysis.sanitize import (
+    BankContractError,
+    LockDisciplineError,
+    ResultContractError,
+    RetraceBudgetError,
+)
+from repro.core import fleet as fleet_mod
+from repro.core.engine import make_bank_params, simulate_bank
+from repro.core.fleet import Fleet
+from repro.core.scenarios import sample_scenarios
+from repro.core.workload import compile_bank
+
+ROOT = Path(__file__).resolve().parents[1]
+FIXTURES = ROOT / "tests" / "lint_fixtures"
+
+
+# -- linter: each rule catches its fixture and passes the clean twin --------
+
+
+@pytest.fixture(scope="module")
+def fixture_report():
+    return lint_paths([str(FIXTURES)])
+
+
+def _rel(path: str) -> str:
+    return path.replace("\\", "/").rsplit("lint_fixtures/", 1)[-1]
+
+
+def _violations(report, filename: str):
+    return [
+        f for f in report.violations if _rel(f.path).endswith(filename)
+    ]
+
+
+CASES = [
+    # (rule, seeded fixture, expected violation lines, clean twin)
+    ("trace-purity", "trace_purity_bad.py", {12, 19, 20}, "trace_purity_ok.py"),
+    ("rng-discipline", "rng_bad.py", {7, 12, 13, 19, 24}, "rng_ok.py"),
+    ("pad-sentinel", "kernels/pad_bad.py", {13, 14, 16, 17}, "kernels/pad_ok.py"),
+    ("jit-cache", "jit_cache_bad.py", {9, 14, 26}, "jit_cache_ok.py"),
+]
+
+
+@pytest.mark.parametrize("rule,bad,lines,clean", CASES, ids=[c[0] for c in CASES])
+def test_rule_catches_fixture_and_passes_clean_twin(
+    fixture_report, rule, bad, lines, clean
+):
+    bad_hits = _violations(fixture_report, bad)
+    assert bad_hits, f"{rule}: no violations found in {bad}"
+    assert all(f.rule == rule for f in bad_hits)
+    assert {f.line for f in bad_hits} == lines
+    assert not _violations(fixture_report, clean), (
+        f"{rule}: clean twin {clean} must produce zero findings"
+    )
+
+
+def test_allowlist_protocol(fixture_report):
+    hits = _violations(fixture_report, "allowlist_cases.py")
+    # reason-less and wrong-rule tags stay violations; the justified one not
+    assert {f.line for f in hits} == {13, 19}
+    reasonless = next(f for f in hits if f.line == 13)
+    assert "missing a `-- reason`" in reasonless.message
+    allowed = [
+        f
+        for f in fixture_report.allowlisted
+        if _rel(f.path).endswith("allowlist_cases.py")
+    ]
+    assert [f.line for f in allowed] == [7]
+    assert "warm-up draw" in allowed[0].allow_reason
+
+
+def test_rule_filter_runs_only_requested_rules():
+    report = lint_paths([str(FIXTURES)], rules=["pad-sentinel"])
+    assert {f.rule for f in report.findings} == {"pad-sentinel"}
+    with pytest.raises(ValueError, match="unknown rule"):
+        lint_paths([str(FIXTURES)], rules=["no-such-rule"])
+
+
+def test_repo_source_is_lint_clean():
+    """The shipping tree must hold zero violations (allowlisted entries are
+    fine — they carry a written justification)."""
+    report = lint_paths([str(ROOT / "src")])
+    assert report.files_scanned > 20
+    msgs = [f.format() for f in report.violations]
+    assert not msgs, "repo lint violations:\n" + "\n".join(msgs)
+
+
+def _run_cli(*args: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=str(ROOT),
+    )
+
+
+def test_cli_strict_exit_codes_and_json_report(tmp_path):
+    out = tmp_path / "report.json"
+    proc = _run_cli(str(FIXTURES), "--strict", "--json", str(out))
+    assert proc.returncode == 1, proc.stderr
+    payload = json.loads(out.read_text())
+    assert payload["files_scanned"] == 9
+    assert any(f["rule"] == "trace-purity" for f in payload["findings"])
+    assert any(f["allowlisted"] for f in payload["findings"])
+
+    clean = _run_cli(str(FIXTURES / "rng_ok.py"), "--strict")
+    assert clean.returncode == 0, clean.stdout + clean.stderr
+
+    usage = _run_cli(str(FIXTURES), "--rules", "bogus")
+    assert usage.returncode == 2
+
+
+# -- sanitizers: bank contract rejections -----------------------------------
+
+
+@pytest.fixture(scope="module")
+def pairs():
+    return sample_scenarios(None, 3, seed=0)
+
+
+@pytest.fixture(scope="module")
+def mono_bank(pairs):
+    return compile_bank(list(pairs))
+
+
+@pytest.fixture(scope="module")
+def bucketed_bank(pairs):
+    return compile_bank(list(pairs), n_buckets=2)
+
+
+def test_check_bank_accepts_compiled_banks(mono_bank, bucketed_bank):
+    sanitize.check_bank(mono_bank)
+    sanitize.check_bank(bucketed_bank)
+
+
+def test_check_bank_rejects_live_pad_leg(mono_bank):
+    pad = ~np.asarray(mono_bank.leg_valid, bool)
+    assert pad.any(), "fixture bank needs at least one padded leg"
+    size = np.array(mono_bank.size_mb, copy=True)
+    size[np.nonzero(pad)[0][0], np.nonzero(pad)[1][0]] = 64.0
+    bad = dataclasses.replace(mono_bank, size_mb=size)
+    with pytest.raises(BankContractError, match="size_mb"):
+        sanitize.check_bank(bad)
+
+
+def test_check_bank_rejects_out_of_bounds_dep(mono_bank):
+    dep = np.array(mono_bank.dep, copy=True)
+    dep[0, 0] = mono_bank.pad_legs + 5
+    with pytest.raises(BankContractError, match="dep bounds"):
+        sanitize.check_bank(dataclasses.replace(mono_bank, dep=dep))
+
+
+def test_check_bank_rejects_dep_onto_padded_leg(mono_bank):
+    n_legs = np.asarray(mono_bank.n_legs)
+    s = int(np.argmin(n_legs))
+    assert n_legs[s] < mono_bank.pad_legs
+    dep = np.array(mono_bank.dep, copy=True)
+    dep[s, 0] = n_legs[s]  # first padded slot of that scenario
+    with pytest.raises(BankContractError, match="padded leg"):
+        sanitize.check_bank(dataclasses.replace(mono_bank, dep=dep))
+
+
+def test_check_bank_rejects_non_prefix_valid_mask(mono_bank):
+    valid = np.array(mono_bank.leg_valid, copy=True)
+    s = int(np.argmin(np.asarray(mono_bank.n_legs)))
+    valid[s, -1] = True  # hole in the prefix: counts now disagree
+    with pytest.raises(BankContractError):
+        sanitize.check_bank(dataclasses.replace(mono_bank, leg_valid=valid))
+
+
+def test_check_bank_rejects_live_shard_pad(mono_bank):
+    names = list(mono_bank.names)
+    names[0] = "__shard_pad__0"  # claims pad status yet holds real legs
+    with pytest.raises(BankContractError, match="shard-pad"):
+        sanitize.check_bank(dataclasses.replace(mono_bank, names=names))
+
+
+def test_check_bank_rejects_broken_bucket_bijection(bucketed_bank):
+    slot_of = np.array(bucketed_bank.slot_of, copy=True)
+    bucket_of = np.asarray(bucketed_bank.bucket_of)
+    b = int(bucket_of[0])
+    mine = np.nonzero(bucket_of == b)[0]
+    if mine.size > 1:
+        slot_of[mine[0]], slot_of[mine[1]] = slot_of[mine[1]], slot_of[mine[0]]
+        swapped = dataclasses.replace(bucketed_bank, slot_of=slot_of)
+        # a swap keeps the slot set valid but breaks id agreement
+        with pytest.raises(BankContractError, match="bucket"):
+            sanitize.check_bank(swapped)
+    slot_of = np.array(bucketed_bank.slot_of, copy=True)
+    slot_of[mine[0]] = mine.size + 7
+    with pytest.raises(BankContractError, match="slot_of out of range"):
+        sanitize.check_bank(
+            dataclasses.replace(bucketed_bank, slot_of=slot_of)
+        )
+
+
+def test_check_bank_once_memoizes(mono_bank):
+    bank = dataclasses.replace(mono_bank)
+    sanitize.check_bank_once(bank)
+    assert getattr(bank, "_repro_bank_checked", False)
+    # corrupting after the memo does not re-raise: validation ran once
+    bank.dep = np.full_like(np.asarray(bank.dep), 999)
+    sanitize.check_bank_once(bank)
+
+
+# -- sanitizers: result contract rejections ---------------------------------
+
+
+@pytest.fixture(scope="module")
+def sim_result(mono_bank):
+    keys = jax.random.split(jax.random.PRNGKey(0), mono_bank.n_scenarios)
+    keys = keys.reshape(mono_bank.n_scenarios, 1, 2)
+    return simulate_bank(mono_bank, make_bank_params(mono_bank), keys)
+
+
+def test_check_result_accepts_engine_output(sim_result, mono_bank):
+    sanitize.check_result(sim_result, mono_bank)
+
+
+def test_check_result_rejects_nonfinite(sim_result):
+    tt = np.array(sim_result.transfer_time, copy=True)
+    tt[0, 0, 0] = np.nan
+    with pytest.raises(ResultContractError, match="non-finite"):
+        sanitize.check_result(sim_result._replace(transfer_time=tt))
+
+
+def test_check_result_rejects_negative_durations(sim_result):
+    tt = np.array(sim_result.transfer_time, copy=True)
+    tt[0, 0, 0] = -1.0
+    with pytest.raises(ResultContractError, match="negative transfer_time"):
+        sanitize.check_result(sim_result._replace(transfer_time=tt))
+
+
+def test_check_result_rejects_unmasked_unfinished_leg(sim_result):
+    tt = np.asarray(sim_result.transfer_time)
+    done = np.array(sim_result.done, copy=True)
+    live = np.nonzero((tt > 0) & done)
+    assert live[0].size, "fixture run needs a finished leg with time > 0"
+    done[live[0][0], live[1][0], live[2][0]] = False
+    with pytest.raises(ResultContractError, match="mask transfer_time"):
+        sanitize.check_result(sim_result._replace(done=done))
+
+
+def test_nan_guard_forces_engine_result_checks(mono_bank, monkeypatch):
+    calls = []
+    original = sanitize.check_result
+
+    def counting(result, bank=None, **kw):
+        calls.append(kw.get("where"))
+        return original(result, bank, **kw)
+
+    monkeypatch.setattr(sanitize, "check_result", counting)
+    keys = jax.random.split(jax.random.PRNGKey(1), mono_bank.n_scenarios)
+    keys = keys.reshape(mono_bank.n_scenarios, 1, 2)
+    params = make_bank_params(mono_bank)
+    assert not sanitize.result_checks_enabled()
+    with sanitize.nan_guard():
+        simulate_bank(mono_bank, params, keys)
+    assert calls == ["simulate_bank"]
+    simulate_bank(mono_bank, params, keys)
+    assert calls == ["simulate_bank"]  # off again outside the scope
+
+
+# -- sanitizers: retrace budget ---------------------------------------------
+
+
+def test_retrace_guard_flags_and_passes(pairs):
+    fl = Fleet(compile_bank(list(pairs)))
+    with pytest.raises(RetraceBudgetError):
+        with sanitize.retrace_guard(budget=0, reset=True):
+            fl.run(replicas=1)
+    # warm now: an identical run must stay within a zero budget
+    with sanitize.retrace_guard(budget=0):
+        fl.run(replicas=1)
+    with pytest.raises(ValueError):
+        with sanitize.retrace_guard(budget=-1):
+            pass
+
+
+# -- sanitizers: lock discipline & the prefetch stress run ------------------
+
+
+def test_lock_discipline_catches_unlocked_mutation():
+    with sanitize.lock_discipline():
+        with pytest.raises(LockDisciplineError):
+            fleet_mod._compile_cache["rogue"] = 1
+        fleet_mod._cache_put(("disciplined",), 2)  # holds the lock: fine
+        with fleet_mod._COMPILE_CACHE_LOCK:
+            del fleet_mod._compile_cache[("disciplined",)]
+    # scope exit restores a plain dict and keeps its contents
+    assert type(fleet_mod._compile_cache) is dict
+    fleet_mod._compile_cache["rogue"] = 1  # no lock needed anymore
+    del fleet_mod._compile_cache["rogue"]
+
+
+def test_thread_stress_restores_switch_interval():
+    before = sys.getswitchinterval()
+    with sanitize.thread_stress(1e-5):
+        assert sys.getswitchinterval() == pytest.approx(1e-5)
+    assert sys.getswitchinterval() == pytest.approx(before)
+
+
+def test_stream_prefetch_parity_under_stress(pairs):
+    """200 single-scenario chunks through ``Fleet.stream(prefetch=2)`` with
+    a 10us bytecode switch interval and the lock-discipline checker armed:
+    results must be bitwise identical to the synchronous path, with zero
+    retraces after the first chunk."""
+    fl = Fleet.from_pairs(list(pairs))
+    stream_pairs = list(itertools.islice(itertools.cycle(pairs), 200))
+    key = jax.random.PRNGKey(7)
+
+    sync = list(fl.stream(stream_pairs, chunk=1, key=key))
+    assert len(sync) == 200
+
+    with sanitize.thread_stress(1e-5), sanitize.lock_discipline():
+        with sanitize.retrace_guard(budget=2):
+            pre = list(fl.stream(stream_pairs, chunk=1, key=key, prefetch=2))
+    assert len(pre) == 200
+    for a, b in zip(sync, pre):
+        assert a.names == b.names
+        for field in ("transfer_time", "conth_mb", "conpr_mb", "done"):
+            assert np.array_equal(
+                np.asarray(getattr(a.result, field)),
+                np.asarray(getattr(b.result, field)),
+            ), f"prefetch stream diverged on {field}"

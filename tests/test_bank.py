@@ -6,7 +6,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import engine as E
 from repro.core.calibration import (
     PriorBox,
     make_bank_theta_mapper,
@@ -15,7 +14,6 @@ from repro.core.calibration import (
 )
 from repro.core.engine import (
     SimSpec,
-    bank_spec,
     count_bank_traces,
     make_bank_params,
     make_params,
@@ -25,7 +23,7 @@ from repro.core.engine import (
 )
 from repro.core.refsim import reference_simulate
 from repro.core.scenarios import build_bank, family_names, sample_scenarios
-from repro.core.workload import ProfileTag, compile_bank
+from repro.core.workload import compile_bank
 
 N_FAMILIES = len(family_names())
 

@@ -10,7 +10,6 @@ Three layers of the warm-path rework are pinned against each other here:
   (``lowering="banked"``) vs the vmap-of-``simulate`` fallback
   (``lowering="vmap"``), including the Pallas interpret-mode kernel on CPU.
 """
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +18,6 @@ import pytest
 
 from repro.core.engine import (
     SimSpec,
-    bank_spec,
     count_bank_traces,
     make_bank_params,
     make_params,

@@ -12,14 +12,12 @@ from repro.core.calibration import (
     PriorBox,
     calibrate,
     make_theta_mapper,
-    presimulate,
     presimulate_bank,
     simulate_coefficients,
     validate,
 )
 from repro.core.classifier import (
     ClassifierConfig,
-    classifier_logit,
     epoch_batch_starts,
     init_classifier,
     train_classifier,

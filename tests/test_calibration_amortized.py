@@ -30,12 +30,12 @@ from repro.core.classifier import (
     train_classifier,
 )
 from repro.core.fleet import Fleet
+from repro.core.scenarios import sample_scenarios
 from repro.core.workload import (
     SUMMARY_FEATURE_NAMES,
     compile_bank,
     summary_features,
 )
-from repro.core.scenarios import sample_scenarios
 
 
 def _toy_two_family(n_per=4096, noise=0.05, seed=0):

@@ -7,11 +7,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from helpers import given, mixed_campaign, settings, small_grid, st
 from repro.core.engine import SimParams, SimSpec, make_params, simulate, simulate_batch
 from repro.core.refsim import reference_simulate
-from repro.core.workload import ProfileTag
-
-from helpers import given, mixed_campaign, settings, small_grid, st
 
 
 def _run_both(table, keep=None, bg_mu=0.0, bg_sigma=0.0, max_ticks=4000):

@@ -56,8 +56,10 @@ def test_grid_tick_conserves_bandwidth():
     T, P, L = 64, 32, 4
     proc_of_leg = RNG.randint(0, P, T)
     link_of_proc = RNG.randint(0, L, P)
-    m_tp = np.zeros((T, P), np.float32); m_tp[np.arange(T), proc_of_leg] = 1
-    m_pl = np.zeros((P, L), np.float32); m_pl[np.arange(P), link_of_proc] = 1
+    m_tp = np.zeros((T, P), np.float32)
+    m_tp[np.arange(T), proc_of_leg] = 1
+    m_pl = np.zeros((P, L), np.float32)
+    m_pl[np.arange(P), link_of_proc] = 1
     m_tl = m_tp @ m_pl
     active = np.ones((1, T), np.float32)
     remaining = np.full((1, T), 1e9, np.float32)

@@ -1,7 +1,6 @@
 """Section-3 experiment reproductions as tests: the simulated data must
 exhibit the paper's linear structure (Eqs. 2-4) and uni-directional links."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.dataset import fit_profile, hourly_coefficients, observations

@@ -1,12 +1,10 @@
 """Roofline machinery unit tests: HLO collective parsing + term math."""
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.configs import get_config, list_archs
 from repro.launch.mesh import HW
 from repro.launch.roofline import matmul_param_count, model_flops, roofline_terms
 from repro.launch.shapes import SHAPES, cell_is_legal
-from repro.configs import get_config, list_archs
 from repro.utils.hlo import collective_bytes
 
 

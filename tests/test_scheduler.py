@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import SimParams, make_params
+from repro.core.engine import make_params
 from repro.core.scheduler import (
     CandidateAccess,
     build_super_table,

@@ -12,12 +12,7 @@ from repro.checkpoint import CheckpointStore
 from repro.configs import get_smoke_config
 from repro.data.tokens import TokenStream, TokenStreamConfig, make_batch
 from repro.models import model as M
-from repro.train.optimizer import (
-    AdamWConfig,
-    compress_grads,
-    decompress_grads,
-    warmup_cosine,
-)
+from repro.train.optimizer import compress_grads, decompress_grads
 from repro.train.trainer import StragglerMonitor, Trainer, TrainerConfig
 
 
