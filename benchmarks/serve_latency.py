@@ -1,0 +1,354 @@
+"""Serving harness: ``repro.serve.SimServer`` latency + steady throughput.
+
+Drives the seeded open-loop synthetic workload (Poisson arrivals,
+heterogeneous campaigns from the scenario-family registry) against a
+persistent server and measures what a batch script cannot: per-request
+latency under continuous batching. Two baselines frame the steady-state
+scenarios/sec:
+
+- **batch-of-one** — one ``Fleet.run`` dispatch per request with every
+  trace pre-warmed (the architecture a request API naively inherits;
+  its real-world cold cost — a multi-second trace per new campaign
+  shape — is what signature routing amortizes away, so the warm number
+  reported here is its best case).
+- **warm batch** — one warm ``Fleet.run`` over the whole request set at
+  once. The server must stay >= 0.8x of the default (monolithic-bank)
+  batch throughput — asserted on full runs. The bucketed
+  (``n_buckets=8``) batch is also reported un-asserted: it is the
+  engine's tuned offline ceiling, and the gap between it and the served
+  rate is slot-occupancy waste — exactly the measurement the ROADMAP
+  straggler-bucket cost model consumes (see ``metrics.slot_banks``).
+
+    PYTHONPATH=src python benchmarks/serve_latency.py \
+        [--requests 64] [--slots 8] [--rate 200] [--out BENCH_serve.json]
+
+    PYTHONPATH=src python benchmarks/serve_latency.py --smoke   # CI guard
+
+Every run (smoke included) asserts the two serving contracts of
+CONTRACTS.md §8: served results **bitwise equal** a direct ``Fleet.run``
+of the same scenario, and the steady phase — after one warm-up probe per
+pad signature in the workload — admits every remaining request with
+**zero** banked-engine retraces. On a multi-device host (the CI
+8-virtual-device job) the server itself runs sharded (``devices=``), so
+the same assertions cover the sharded admission path; single-device full
+runs additionally spawn an 8-virtual-CPU worker subprocess for a sharded
+throughput section. ``--smoke`` writes ``BENCH_serve_smoke.json``; the
+tracked ``BENCH_serve.json`` is only rewritten by full runs. The report
+also carries the server's observability metrics (per-slot occupancy,
+idle-window fraction, realized ticks per signature bank) — the
+measurement inputs of the ROADMAP straggler-bucket cost model.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+SMOKE = dict(requests=24, slots=4, replicas=1, rate=500.0, scale=0.5)
+FULL = dict(requests=64, slots=4, replicas=4, rate=200.0, scale=4.0,
+            window=128)  # heavy rows + few slots + wide windows: device
+                         # compute must dominate per-window host dispatch,
+                         # and occupancy (live rows / slot lanes) is the
+                         # throughput lever — idle lanes still compute
+SHARDED_DEVICES = 8  # full-run worker subprocess (single-device hosts)
+
+
+def _percentiles(xs):
+    import numpy as np
+
+    a = np.asarray(xs, np.float64)
+    return {
+        "p50_ms": round(float(np.percentile(a, 50)) * 1e3, 2),
+        "p90_ms": round(float(np.percentile(a, 90)) * 1e3, 2),
+        "p99_ms": round(float(np.percentile(a, 99)) * 1e3, 2),
+        "mean_ms": round(float(a.mean()) * 1e3, 2),
+    }
+
+
+def _assert_parity(server, req, signature):
+    """Served row == direct ``Fleet.run`` of the same scenario, bitwise."""
+    import jax
+    import numpy as np
+
+    from repro.core.fleet import Fleet
+
+    res = server.poll(req.rid)
+    assert res is not None, f"request {req.rid} not served"
+    fleet = Fleet.from_pairs(
+        [(req.grid, req.campaign)], pad_floors=signature
+    )
+    direct = fleet.run(
+        req.theta, replicas=req.n_replicas, key=jax.random.PRNGKey(req.seed)
+    )
+    for f in direct._fields:
+        a = np.asarray(getattr(direct, f))[0]
+        b = np.asarray(getattr(res.result, f))
+        assert np.array_equal(a, b), (
+            f"served request {req.rid} diverged from Fleet.run in {f!r}"
+        )
+
+
+def serve_section(args, workload, sig_of, *, devices=None):
+    """Probe-warm a server, run the steady open-loop phase, assert the
+    zero-retrace contract, and return (report-dict, server, results)."""
+    from repro.core import engine
+    from repro.serve import ServeConfig, SimRequest, SimServer
+
+    slots = args.slots
+    if devices is not None and slots % devices:
+        slots = ((slots // devices) + 1) * devices
+    server = SimServer(
+        ServeConfig(
+            slots=slots,
+            replicas=args.replicas,
+            window=args.window,
+        ),
+        devices=devices,
+    )
+
+    # -- warm-up: two probes per distinct pad signature ---------------------
+    # Each *new* signature costs exactly two traces (admission merge +
+    # window step); two probes also push every bank past its admit/step
+    # warm-up so post-step carry shardings are cached under a mesh.
+    probe_of = {}
+    for _, req in workload:
+        probe_of.setdefault(sig_of[req.rid], req)
+    rid = 1_000_000
+    for sig, req in probe_of.items():
+        for j in range(2):
+            server.submit(
+                SimRequest(
+                    rid=rid, grid=req.grid, campaign=req.campaign,
+                    theta=req.theta, n_replicas=req.n_replicas,
+                    seed=req.seed + 7919 * (j + 1), name=f"probe_{rid}",
+                )
+            )
+            rid += 1
+    t0 = time.perf_counter()
+    server.drain()
+    warmup_s = time.perf_counter() - t0
+
+    # -- steady phase: open-loop submission, zero retraces ------------------
+    t0 = time.perf_counter()
+    with engine.count_bank_traces() as traces:
+        for arrival, req in workload:
+            while time.perf_counter() - t0 < arrival:
+                server.step()
+            server.submit(req)
+            server.step()
+        results = server.drain()
+    steady_wall = time.perf_counter() - t0
+    assert traces.count == 0, (
+        f"steady state retraced {traces.count}x across {len(workload)} "
+        "admissions — slot admission changed a trace signature"
+    )
+    assert sorted(r.rid for r in results) == [r.rid for _, r in workload], (
+        "drain lost or duplicated steady-phase requests"
+    )
+
+    n = len(workload)
+    report = {
+        "devices": devices or 1,
+        "slots": slots,
+        "window": server.window,
+        "signatures": len(probe_of),
+        "warmup_probes": rid - 1_000_000,
+        "warmup_s": round(warmup_s, 3),
+        "steady_wall_s": round(steady_wall, 3),
+        "steady_scenarios_per_s": round(n / steady_wall, 2),
+        "steady_retraces": traces.count,
+        "latency": _percentiles([r.latency for r in results]),
+        "queue_delay": _percentiles([r.queue_delay for r in results]),
+    }
+    return report, server, results
+
+
+def sharded_worker(args) -> None:
+    """Child-process body of the full-run sharded section: same steady
+    phase on a ``--devices``-wide virtual-CPU mesh, one JSON line out."""
+    import jax
+
+    assert len(jax.devices()) == args.devices, (len(jax.devices()), args.devices)
+    workload, sig_of = _build_workload(args)
+    report, server, results = serve_section(
+        args, workload, sig_of, devices=args.devices
+    )
+    for _, req in workload[:2]:
+        _assert_parity(server, req, sig_of[req.rid])
+    print(json.dumps(report))
+
+
+def _spawn_sharded_worker(args) -> dict:
+    env = dict(os.environ)
+    flags = [
+        f for f in env.get("XLA_FLAGS", "").split()
+        if not f.startswith("--xla_force_host_platform_device_count")
+    ]
+    flags.append(
+        f"--xla_force_host_platform_device_count={SHARDED_DEVICES}"
+    )
+    env["XLA_FLAGS"] = " ".join(flags)
+    env["JAX_PLATFORMS"] = "cpu"
+    out = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--sharded-worker",
+         "--devices", str(SHARDED_DEVICES),
+         "--requests", str(args.requests), "--slots", str(args.slots),
+         "--replicas", str(args.replicas), "--rate", str(args.rate),
+         "--scale", str(args.scale), "--seed", str(args.seed)]
+        + (["--window", str(args.window)] if args.window else []),
+        capture_output=True, text=True, env=env, timeout=3600,
+    )
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"sharded serve worker (D={SHARDED_DEVICES}) failed:\n"
+            f"{out.stdout}\n{out.stderr}"
+        )
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def _build_workload(args):
+    from repro.core.workload import compile_campaign
+    from repro.serve import ServeConfig, synthetic_workload
+    from repro.serve.cache import pad_signature
+
+    workload = synthetic_workload(
+        args.requests, rate=args.rate, seed=args.seed, scale=args.scale,
+        replicas=args.replicas,
+    )
+    floors = ServeConfig().pad_floors
+    sig_of = {
+        req.rid: pad_signature(
+            compile_campaign(req.grid, req.campaign), floors=floors
+        )
+        for _, req in workload
+    }
+    return workload, sig_of
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--slots", type=int, default=None)
+    ap.add_argument("--replicas", type=int, default=None)
+    ap.add_argument("--rate", type=float, default=None,
+                    help="open-loop arrival rate (requests/s)")
+    ap.add_argument("--window", type=int, default=None)
+    ap.add_argument("--scale", type=float, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--sharded-worker", action="store_true",
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--devices", type=int, default=None,
+                    help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    for k, v in (SMOKE if args.smoke else FULL).items():
+        if getattr(args, k, None) is None:
+            setattr(args, k, v)
+    if args.out is None:
+        args.out = "BENCH_serve_smoke.json" if args.smoke else "BENCH_serve.json"
+    if args.sharded_worker:
+        sharded_worker(args)
+        return
+
+    import jax
+
+    from repro.core.fleet import Fleet
+
+    t_start = time.time()
+    workload, sig_of = _build_workload(args)
+    pairs = [(req.grid, req.campaign) for _, req in workload]
+    n = len(pairs)
+
+    # -- served: in-process (sharded in-process when the host has devices) --
+    devices = jax.device_count() if jax.device_count() > 1 else None
+    serve_report, server, results = serve_section(
+        args, workload, sig_of, devices=devices
+    )
+
+    # parity: every request on smoke, a seeded sample on full runs
+    sample = workload if args.smoke else workload[:: max(1, n // 8)]
+    for _, req in sample:
+        _assert_parity(server, req, sig_of[req.rid])
+
+    # -- baseline 1: warm batch Fleet.run over the whole request set --------
+    fleet = Fleet.from_pairs(pairs)
+    run = lambda: fleet.run(replicas=args.replicas)
+    t0 = time.time()
+    jax.block_until_ready(run())
+    batch_cold = time.time() - t0
+    batch_warm = float("inf")
+    for _ in range(3):
+        t0 = time.time()
+        jax.block_until_ready(run())
+        batch_warm = min(batch_warm, time.time() - t0)
+
+    # the tuned offline ceiling: same set, max_ticks-bucketed sub-banks
+    bucketed = Fleet.from_pairs(pairs, n_buckets=8)
+    jax.block_until_ready(bucketed.run(replicas=args.replicas))
+    bucketed_warm = float("inf")
+    for _ in range(3):
+        t0 = time.time()
+        jax.block_until_ready(bucketed.run(replicas=args.replicas))
+        bucketed_warm = min(bucketed_warm, time.time() - t0)
+
+    # -- baseline 2: batch-of-one — one warm Fleet.run per request ----------
+    ones = [
+        Fleet.from_pairs([p], pad_floors=sig_of[req.rid])
+        for p, (_, req) in zip(pairs, workload)
+    ]
+    for f in ones:  # warm every trace (signatures shared across requests)
+        jax.block_until_ready(f.run(replicas=args.replicas))
+    t0 = time.time()
+    for f in ones:
+        jax.block_until_ready(f.run(replicas=args.replicas))
+    batch1_warm = time.time() - t0
+
+    report = {
+        "requests": n,
+        "replicas": args.replicas,
+        "rate_per_s": args.rate,
+        "scale": args.scale,
+        "seed": args.seed,
+        "served": serve_report,
+        "batch_cold_s": round(batch_cold, 3),
+        "batch_warm_s": round(batch_warm, 4),
+        "batch_warm_scenarios_per_s": round(n / batch_warm, 2),
+        "batch_bucketed_warm_s": round(bucketed_warm, 4),
+        "batch_bucketed_scenarios_per_s": round(n / bucketed_warm, 2),
+        "serve_vs_bucketed_batch": round(
+            serve_report["steady_scenarios_per_s"] / (n / bucketed_warm), 2
+        ),
+        "batch_of_one_warm_s": round(batch1_warm, 3),
+        "batch_of_one_scenarios_per_s": round(n / batch1_warm, 2),
+        "serve_vs_batch_of_one": round(
+            serve_report["steady_scenarios_per_s"] / (n / batch1_warm), 2
+        ),
+        "serve_vs_warm_batch": round(
+            serve_report["steady_scenarios_per_s"] / (n / batch_warm), 2
+        ),
+        "metrics": server.metrics(),
+    }
+    if not args.smoke and jax.device_count() == 1:
+        report["sharded"] = _spawn_sharded_worker(args)
+    report["total_s"] = round(time.time() - t_start, 1)
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(json.dumps(report, indent=2))
+
+    assert serve_report["steady_retraces"] == 0
+    if not args.smoke:
+        assert report["serve_vs_warm_batch"] >= 0.8, (
+            f"steady served throughput is {report['serve_vs_warm_batch']}x "
+            "the warm batch Fleet.run ceiling (contract: >= 0.8x)"
+        )
+
+
+if __name__ == "__main__":
+    main()

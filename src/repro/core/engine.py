@@ -535,6 +535,8 @@ def reset_bank_trace_count(*, clear_caches: bool = True) -> None:
         _simulate_bank_bucketed_impl.clear_cache()
         _simulate_bank_sharded.clear_cache()
         _banked_window_step.clear_cache()
+        _banked_window_step_sharded.clear_cache()
+        _admit_bank_rows.clear_cache()
         for fn in list(_cache_clear_hooks):
             fn()
 
@@ -995,6 +997,81 @@ def _banked_window_step(
     return _bank_window_body(spec, params, backend, leap, window, carry)
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("mesh", "backend", "leap", "window"),
+    donate_argnames=("carry",),
+)
+def _banked_window_step_sharded(
+    spec: SimSpec,
+    params: SimParams,
+    carry: _Carry,
+    *,
+    mesh: Mesh,
+    backend: Optional[str],
+    leap: bool,
+    window: int,
+) -> _Carry:
+    """Sharded twin of :func:`_banked_window_step`: one donated window step
+    partitioned over a 1-D device mesh with ``shard_map``.
+
+    Unlike :func:`_simulate_bank_sharded` there is no in-trace scenario
+    padding — host-driven callers (the serving layer's resident slot banks)
+    keep their scenario axis a multiple of the mesh size by construction,
+    so the step stays a pure ``[S/D, R, ...]``-per-device window body with
+    zero collectives and the same bit-exact freeze semantics as the
+    unsharded step. ``check_rep=False`` for the same reason as the
+    monolithic sharded program: there is nothing replicated to verify.
+    """
+    global _bank_traces
+    _bank_traces += 1  # executes at trace time only
+    if carry.t.shape[0] % mesh.devices.size:
+        raise ValueError(
+            f"sharded window step needs the scenario axis "
+            f"({carry.t.shape[0]}) to be a multiple of the mesh size "
+            f"({mesh.devices.size}); pad the bank with inert scenarios "
+            "(workload.pad_bank_scenarios)"
+        )
+    def body(sp: SimSpec, pa: SimParams, ca: _Carry) -> _Carry:
+        return _bank_window_body(sp, pa, backend, leap, window, ca)
+
+    p = PartitionSpec(mesh.axis_names[0])
+    return shard_map(
+        body, mesh=mesh, in_specs=(p, p, p), out_specs=p, check_rep=False
+    )(spec, params, carry)
+
+
+@functools.partial(jax.jit, donate_argnames=("carry",))
+def _admit_bank_rows(
+    spec: SimSpec,
+    params: SimParams,
+    keys: jax.Array,  # [S, R, 2]
+    carry: _Carry,
+    mask: jax.Array,  # [S] bool — rows to (re)initialize from spec/params/keys
+) -> _Carry:
+    """Merge freshly admitted scenario rows into a running donated carry.
+
+    The continuous-batching admission step: ``spec``/``params``/``keys``
+    are the *full* ``[S, ...]`` slot-bank views with the new scenarios
+    already written into their rows; ``mask`` selects exactly those rows.
+    Masked rows restart from :func:`_banked_init_carry` state while every
+    other row's carry passes through untouched — bit for bit, keys
+    included — so admission never perturbs in-flight scenarios and the
+    call's trace signature depends only on the slot-bank shape (admitting
+    1 row costs the same trace as admitting all of them: zero, after the
+    first).
+    """
+    global _bank_traces
+    _bank_traces += 1  # executes at trace time only
+    fresh = _banked_init_carry(spec, params, keys)
+
+    def merge(new: jax.Array, old: jax.Array) -> jax.Array:
+        m = mask.reshape((mask.shape[0],) + (1,) * (old.ndim - 1))
+        return jnp.where(m, new, old)
+
+    return _Carry(*(merge(n, o) for n, o in zip(fresh, carry)))
+
+
 class BankCheckpoint(NamedTuple):
     """Resumable snapshot of a host-driven banked run (see
     :func:`simulate_bank_stepped`). ``carry`` holds host-side (numpy) copies
@@ -1009,6 +1086,43 @@ class BankCheckpoint(NamedTuple):
 
 def _snapshot_carry(carry: _Carry) -> _Carry:
     return _Carry(*(np.asarray(a) for a in carry))
+
+
+def _validate_resume_carry(carry: _Carry, spec: SimSpec, keys) -> None:
+    """Reject a resume carry whose shapes do not match the target bank.
+
+    A checkpoint taken against one bank cannot continue another: differing
+    pad shapes (legs/links), scenario counts, or replica counts would
+    either crash deep inside the jitted window step or — worse, for a
+    same-rank mismatch — silently simulate garbage. Checked loudly here,
+    at the resume boundary, where the caller can still see which fleet and
+    checkpoint disagree.
+    """
+    S, R = np.shape(keys)[0], np.shape(keys)[1]
+    T = spec.size_mb.shape[-1]
+    L = spec.bandwidth.shape[-1]
+    expect = {
+        "t": (S, R),
+        "remaining": (S, R, T),
+        "done": (S, R, T),
+        "started": (S, R, T),
+        "t_start": (S, R, T),
+        "t_end": (S, R, T),
+        "conth": (S, R, T),
+        "conpr": (S, R, T),
+        "bg": (S, R, L),
+        "key": (S, R, 2),
+    }
+    for field, want in expect.items():
+        got = tuple(np.shape(getattr(carry, field)))
+        if got != want:
+            raise ValueError(
+                f"checkpoint carry field {field!r} has shape {got} but the "
+                f"target bank expects {want} (scenarios={S}, replicas={R}, "
+                f"pad_legs={T}, pad_links={L}) — the checkpoint was taken "
+                "against a bank with different pads/scenarios/replicas and "
+                "cannot resume this one"
+            )
 
 
 def simulate_bank_stepped(
@@ -1066,6 +1180,7 @@ def simulate_bank_stepped(
                 f"resume at window={window} (windows_done would not align)"
             )
         start = int(resume.windows_done)
+        _validate_resume_carry(resume.carry, spec, keys)
         carry = _Carry(*(jnp.asarray(a) for a in resume.carry))
     else:
         # the carry embeds the keys and is donated into the first step —

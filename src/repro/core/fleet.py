@@ -39,6 +39,7 @@ import itertools
 import json
 import os
 import threading
+import zipfile
 from typing import (
     Any,
     Callable,
@@ -50,6 +51,7 @@ from typing import (
     NamedTuple,
     Optional,
     Sequence,
+    TYPE_CHECKING,
     Tuple,
     Union,
 )
@@ -77,6 +79,9 @@ from repro.core.workload import (
     subset_bank,
     summary_features,
 )
+
+if TYPE_CHECKING:
+    from repro.core.residency import ResidentBank
 
 __all__ = ["Fleet", "StreamChunk", "clear_compile_cache"]
 
@@ -397,6 +402,17 @@ class Fleet:
         contract of :meth:`stream` and of fresh fleets built with these as
         ``pad_floors``."""
         return (self.pad_legs, self.pad_procs, self.pad_links)
+
+    @property
+    def resident(self) -> "ResidentBank":
+        """The bank's device residency handle
+        (:class:`~repro.core.residency.ResidentBank`, memoized per bank):
+        the same device spec buffers :meth:`run` uses, exposed as a stepped
+        window-loop surface for callers that outlive single runs (the
+        ``repro.serve`` slot engine)."""
+        from repro.core import residency as residency_lib
+
+        return residency_lib.ResidentBank.of(self.bank)
 
     @property
     def n_buckets(self) -> int:
@@ -887,16 +903,33 @@ class Fleet:
         result as ``simulate_bank_stepped(..., resume=ckpt)`` (with the same
         bank/params/window — e.g. from :meth:`load` of the same directory)
         to continue the run bit-identically from the recorded window."""
-        with open(os.path.join(path, "checkpoint.json")) as f:
-            meta = json.load(f)
+        meta_path = os.path.join(path, "checkpoint.json")
+        try:
+            with open(meta_path) as f:
+                meta = json.load(f)
+        except (OSError, ValueError) as e:
+            raise ValueError(
+                f"cannot read checkpoint metadata {meta_path!r}: {e} — the "
+                "checkpoint directory is missing or its checkpoint.json is "
+                "truncated/corrupted; re-save via Fleet.save_checkpoint"
+            ) from e
         if meta.get("format") != 1:
             raise ValueError(
                 f"unknown checkpoint format: {meta.get('format')!r}"
             )
-        with np.load(os.path.join(path, "carry.npz")) as z:
-            carry = engine_lib._Carry(
-                *(z[f] for f in engine_lib._Carry._fields)
-            )
+        carry_path = os.path.join(path, "carry.npz")
+        try:
+            with np.load(carry_path) as z:
+                carry = engine_lib._Carry(
+                    *(z[f] for f in engine_lib._Carry._fields)
+                )
+        except (OSError, ValueError, KeyError, zipfile.BadZipFile) as e:
+            raise ValueError(
+                f"cannot load checkpoint carry {carry_path!r}: {e} — the "
+                "npz is truncated/corrupted or missing carry fields "
+                f"{list(engine_lib._Carry._fields)}; the checkpoint cannot "
+                "be resumed"
+            ) from e
         return engine_lib.BankCheckpoint(
             windows_done=int(meta["windows_done"]),
             window=int(meta["window"]),

@@ -1,0 +1,210 @@
+"""Bank residency: device buffers + trace identity, decoupled from ``Fleet``.
+
+Historically the compiled :class:`~repro.core.workload.ScenarioBank` only
+became device-resident *inside* a ``Fleet.run`` call — ``engine.bank_spec``
+memoized the uploaded :class:`~repro.core.engine.SimSpec` on the bank
+instance, and nothing but the run loop ever touched the buffers. A serving
+layer needs the opposite ownership: buffers that outlive any single run,
+that can be *stepped* window by window, that admit new scenario rows into a
+running donated carry, and that keep one trace identity across all of it.
+
+:class:`ResidentBank` is that owner object. It wraps a compiled bank and
+exposes the banked engine's host-driven execution surface:
+
+- ``spec`` — the device-resident stacked :class:`SimSpec` (for immutable
+  residents this *is* ``engine.bank_spec``'s memo, so a ``Fleet.run`` over
+  the same bank shares the very same device buffers);
+- ``init_carry`` / ``window_step`` / ``live`` / ``result`` — the stepped
+  window loop of :func:`engine.simulate_bank_stepped`, reified as methods
+  (``window_step`` dispatches the sharded twin when a mesh is given);
+- ``admit`` — the continuous-batching merge: re-initialize a masked subset
+  of rows from the current spec/params/keys inside the donated carry,
+  bit-exactly preserving every other row (see
+  :func:`engine._admit_bank_rows`);
+- ``write_rows`` — for ``mutable=True`` residents only: overwrite whole
+  scenario rows in the host mirror and re-upload the spec (same shapes, so
+  the trace identity — and therefore the zero-retrace contract — is
+  untouched; uploads are transfers, not traces).
+
+``Fleet.resident`` returns the memoized immutable resident of the fleet's
+bank; ``repro.serve`` builds mutable residents for its slot banks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+import numpy as np
+
+from repro.core import engine as engine_lib
+from repro.core.engine import SimParams, SimResult, SimSpec
+from repro.core.workload import ScenarioBank
+
+__all__ = ["ResidentBank"]
+
+
+class ResidentBank:
+    """Owns a compiled bank's device residency and stepped execution state.
+
+    ``mutable=False`` (default): a read-only view over an immutable compiled
+    bank; the device spec is shared with ``engine.bank_spec``'s per-bank
+    memo, so every consumer of the bank (``Fleet.run``, the stepped loop,
+    the server) hits the same buffers and the same jit cache entries.
+
+    ``mutable=True``: the resident takes ownership of the bank's host
+    arrays and may overwrite scenario rows in place (:meth:`write_rows`).
+    The caller must hand over an exclusively-owned bank (e.g. a freshly
+    padded slot template) — mutating a bank that is also cached elsewhere
+    would desynchronize the other holder's memoized spec.
+    """
+
+    def __init__(self, bank: ScenarioBank, *, mutable: bool = False) -> None:
+        if not isinstance(bank, ScenarioBank):
+            raise TypeError(
+                f"ResidentBank wraps a compiled ScenarioBank, got {type(bank)!r}"
+            )
+        self.bank = bank
+        self.mutable = mutable
+        self._spec: Optional[SimSpec] = None
+
+    @classmethod
+    def of(cls, bank: ScenarioBank) -> "ResidentBank":
+        """The memoized immutable resident of ``bank`` (one per instance —
+        compiled banks are immutable by contract, so the resident, like the
+        spec memo it shares, lives as long as the bank)."""
+        cached = getattr(bank, "_resident_cache", None)
+        if cached is not None:
+            return cached
+        resident = cls(bank)
+        bank._resident_cache = resident
+        return resident
+
+    # -- identity -----------------------------------------------------------
+
+    @property
+    def n_scenarios(self) -> int:
+        return self.bank.n_scenarios
+
+    @property
+    def pads(self) -> tuple:
+        return (self.bank.pad_legs, self.bank.pad_procs, self.bank.pad_links)
+
+    @property
+    def names(self) -> list:
+        return list(self.bank.names)
+
+    @property
+    def spec(self) -> SimSpec:
+        """The device-resident stacked spec. Immutable residents share
+        ``engine.bank_spec``'s memo (same buffers as ``Fleet.run``);
+        mutable residents re-upload lazily after :meth:`write_rows`."""
+        if not self.mutable:
+            return engine_lib.bank_spec(self.bank)
+        if self._spec is None:
+            self._spec = engine_lib._bank_spec_uncached(self.bank)
+        return self._spec
+
+    # -- mutation (slot banks) ----------------------------------------------
+
+    def write_rows(self, ids: Sequence[int], src: ScenarioBank) -> None:
+        """Overwrite scenario rows ``ids`` with the rows of ``src`` (in
+        order) in the host mirror and invalidate the device spec.
+
+        ``src`` must carry exactly ``len(ids)`` scenarios at this bank's
+        pad shapes — residency is shape-stable by contract (that is what
+        keeps admission retrace-free), so a differently-padded source must
+        be re-stacked by the caller (``workload.bank_from_tables`` with
+        explicit pads), never silently re-padded here.
+        """
+        if not self.mutable:
+            raise ValueError(
+                "write_rows on an immutable ResidentBank — build one with "
+                "mutable=True (and an exclusively-owned bank) to get a "
+                "writable slot bank"
+            )
+        ids = [int(i) for i in ids]
+        if src.n_scenarios != len(ids):
+            raise ValueError(
+                f"write_rows got {len(ids)} target rows but src carries "
+                f"{src.n_scenarios} scenarios"
+            )
+        if (src.pad_legs, src.pad_procs, src.pad_links) != self.pads:
+            raise ValueError(
+                f"src pads {(src.pad_legs, src.pad_procs, src.pad_links)} "
+                f"differ from resident pads {self.pads}; re-stack the source "
+                "rows at the resident's pad shapes (bank_from_tables with "
+                "explicit pad_legs/pad_procs/pad_links)"
+            )
+        for f in dataclasses.fields(ScenarioBank):
+            dst_arr = getattr(self.bank, f.name, None)
+            if not isinstance(dst_arr, np.ndarray):
+                continue
+            src_arr = np.asarray(getattr(src, f.name))
+            for k, i in enumerate(ids):
+                dst_arr[i] = src_arr[k]
+        for k, i in enumerate(ids):
+            self.bank.names[i] = src.names[k]
+        self._spec = None  # re-upload on next use; shapes unchanged
+
+    # -- stepped execution --------------------------------------------------
+
+    def init_carry(
+        self, params: SimParams, keys: jax.Array
+    ) -> engine_lib._Carry:
+        """Fresh ``[S, R, ...]`` window-loop carry (copies ``keys`` so the
+        caller's buffer survives the first donation)."""
+        return engine_lib._banked_init_carry(
+            self.spec, params, jnp.array(keys, copy=True)
+        )
+
+    def window_step(
+        self,
+        params: SimParams,
+        carry: engine_lib._Carry,
+        *,
+        backend: Optional[str] = None,
+        leap: bool = False,
+        window: int = 1,
+        mesh: Optional[Union[Mesh, int, Sequence]] = None,
+    ) -> engine_lib._Carry:
+        """One donated window step (do not reuse ``carry`` afterwards).
+        With ``mesh`` the step runs as one shard_map program over the
+        scenario axis — bit-identical to the unsharded step."""
+        resolved = engine_lib.resolve_mesh(mesh)
+        if resolved is not None:
+            return engine_lib._banked_window_step_sharded(
+                self.spec, params, carry,
+                mesh=resolved, backend=backend, leap=leap, window=int(window),
+            )
+        return engine_lib._banked_window_step(
+            self.spec, params, carry,
+            backend=backend, leap=leap, window=int(window),
+        )
+
+    def admit(
+        self,
+        params: SimParams,
+        keys: jax.Array,
+        carry: engine_lib._Carry,
+        mask: np.ndarray,
+    ) -> engine_lib._Carry:
+        """Re-initialize the rows selected by ``mask`` from the current
+        spec/params/keys inside the donated ``carry`` (see
+        :func:`engine._admit_bank_rows`); all other rows pass through
+        bit-exactly."""
+        return engine_lib._admit_bank_rows(
+            self.spec, params, jnp.asarray(keys),
+            carry, jnp.asarray(mask, bool),
+        )
+
+    def live(self, carry: engine_lib._Carry) -> jax.Array:
+        """Per-element ``[S, R]`` liveness (the stepped loop condition)."""
+        return engine_lib._banked_live(self.spec, carry)
+
+    def result(self, carry: engine_lib._Carry) -> SimResult:
+        """Materialize the bank-shaped :class:`SimResult` view of a carry
+        (pure — the carry stays valid for further stepping)."""
+        return engine_lib._banked_result(self.spec, carry)

@@ -1,8 +1,14 @@
-"""Serving launcher: bring up the continuous-batching engine on a (reduced)
-config and run a synthetic request workload.
+"""Simulation-service launcher: bring up ``repro.serve.SimServer`` and run
+a seeded open-loop synthetic request workload against it.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch tinyllama-1.1b \
-        --smoke --requests 8 --slots 4
+    PYTHONPATH=src python -m repro.launch.serve --requests 32 --slots 8 \
+        --rate 100 --replicas 2
+
+Prints a JSON report: request latency percentiles, steady throughput, and
+the server's slot-bank metrics (occupancy / idle-window fraction /
+realized ticks per signature). ``--devices N`` shards every slot bank over
+the first ``N`` local devices; ``--warm-dir`` persists slot templates
+across runs (``Fleet.save`` format).
 """
 from __future__ import annotations
 
@@ -10,47 +16,70 @@ import argparse
 import json
 import time
 
-import jax
 import numpy as np
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--replicas", type=int, default=1)
+    ap.add_argument("--rate", type=float, default=100.0,
+                    help="open-loop arrival rate (requests/s)")
+    ap.add_argument("--window", type=int, default=None,
+                    help="fused tick window per scheduling round")
+    ap.add_argument("--leap", action="store_true")
+    ap.add_argument("--scale", type=float, default=1.0,
+                    help="scenario-family size scale")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--theta", type=float, nargs=3, default=None,
+                    metavar=("OVERHEAD", "BG_MU", "BG_SIGMA"))
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard slot banks over the first N devices")
+    ap.add_argument("--warm-dir", default=None,
+                    help="slot-template warm store (Fleet.save format)")
     args = ap.parse_args()
 
-    from repro.configs import get_config, get_smoke_config
-    from repro.models import model as M
-    from repro.serving import ServeConfig, ServingEngine
-    from repro.serving.engine import Request
+    from repro.serve import ServeConfig, SimServer, synthetic_workload
 
-    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    params = M.init_params(jax.random.PRNGKey(0), cfg)
-    eng = ServingEngine(
-        cfg, params,
-        ServeConfig(slots=args.slots, max_len=args.max_len,
-                    temperature=args.temperature),
+    server = SimServer(
+        ServeConfig(
+            slots=args.slots,
+            replicas=args.replicas,
+            window=args.window,
+            leap=args.leap,
+            warm_dir=args.warm_dir,
+        ),
+        devices=args.devices,
     )
-    rng = np.random.RandomState(0)
-    for i in range(args.requests):
-        prompt = rng.randint(0, cfg.vocab_size, rng.randint(2, 9)).tolist()
-        eng.submit(Request(rid=i, prompt=prompt, max_new_tokens=args.max_new))
-    t0 = time.time()
-    done = eng.run_until_drained()
-    dt = time.time() - t0
+    workload = synthetic_workload(
+        args.requests,
+        rate=args.rate,
+        seed=args.seed,
+        scale=args.scale,
+        replicas=args.replicas,
+        theta=None if args.theta is None else np.asarray(args.theta, np.float32),
+    )
+
+    t0 = time.perf_counter()
+    for arrival, req in workload:
+        # open loop: hold submissions to the arrival schedule, stepping the
+        # server while we wait so resident work keeps ticking
+        while time.perf_counter() - t0 < arrival:
+            server.step()
+        server.submit(req)
+        server.step()
+    results = server.drain()
+    wall = time.perf_counter() - t0
+
+    lat = np.asarray([r.latency for r in results])
     print(json.dumps({
-        "arch": cfg.name,
-        "completed": len(done),
-        "engine_steps": eng.steps,
-        "tokens_out": eng.tokens_out,
-        "tokens_per_s": round(eng.tokens_out / max(dt, 1e-9), 1),
-        "wall_s": round(dt, 2),
+        "requests": len(results),
+        "wall_s": round(wall, 3),
+        "requests_per_s": round(len(results) / max(wall, 1e-9), 1),
+        "latency_p50_ms": round(float(np.percentile(lat, 50)) * 1e3, 2),
+        "latency_p99_ms": round(float(np.percentile(lat, 99)) * 1e3, 2),
+        "metrics": server.metrics(),
     }, indent=2))
 
 

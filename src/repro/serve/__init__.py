@@ -1,0 +1,37 @@
+"""``repro.serve`` — continuous-batching simulation service.
+
+The paper's operational framing ("predict time-to-input for jobs arriving
+at a grid") means answering *requests*, not running scripts. This package
+serves ``(grid, campaign, theta, n_replicas)`` requests from a persistent
+in-process server that keeps warm, pre-compiled **slot banks** resident on
+device (one per pad signature), merges newly admitted scenarios into the
+running donated window-loop carry at window boundaries, and streams each
+request's result back the round its scenario finishes — continuous
+batching over simulations instead of tokens.
+
+Entry points:
+
+- :class:`SimServer` (``submit`` / ``poll`` / ``drain`` / ``step``) with
+  :class:`ServeConfig`;
+- :class:`SimRequest` / :class:`RequestResult`;
+- :func:`synthetic_workload` — the seeded open-loop request driver used by
+  ``benchmarks/serve_latency.py`` and ``launch/serve.py``.
+
+Invariants (CONTRACTS.md §8): served results are **bitwise identical** to a
+direct ``Fleet.run`` of the same scenarios; empty slots are inert pad
+scenarios, so admission never changes the trace signature and steady state
+holds a zero-retrace budget.
+"""
+from repro.serve.cache import BankSlotCache
+from repro.serve.request import RequestResult, SimRequest
+from repro.serve.server import ServeConfig, SimServer
+from repro.serve.workload import synthetic_workload
+
+__all__ = [
+    "BankSlotCache",
+    "RequestResult",
+    "ServeConfig",
+    "SimRequest",
+    "SimServer",
+    "synthetic_workload",
+]

@@ -1,0 +1,162 @@
+"""Pad-signature → warm slot-bank template cache.
+
+Every slot bank is born from an **all-inert template**: ``slots`` scenario
+rows of shard-pad filler (``workload.pad_bank_scenarios`` semantics —
+zero-size legs, ``max_ticks=0``, never live) at one pad signature
+``(pad_legs, pad_procs, pad_links)``. Requests whose campaigns quantize to
+the same signature share one template shape, hence one jit trace; admission
+overwrites rows in a mutable :class:`~repro.core.residency.ResidentBank`
+copy without ever changing the shape.
+
+The cache optionally persists each template through ``Fleet.save`` /
+``Fleet.load`` (``warm_dir/slot_TxPxL/``): a restarted server then skips
+the stack-and-pad construction for signatures it has served before, and
+the artifact doubles as the warm-start bank for out-of-process workers.
+Loaded templates are re-inertified through the same canonical
+``pad_bank_scenarios`` fills regardless of what the artifact contains — a
+warm start must never revive stale scenario rows into a fresh carry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, Optional, Tuple
+
+from repro.core.workload import (
+    LegTable,
+    ScenarioBank,
+    _resolve_pads,
+    pad_bank_scenarios,
+    subset_bank,
+)
+
+__all__ = ["BankSlotCache", "pad_signature", "quantize_axis"]
+
+Signature = Tuple[int, int, int]
+
+
+def quantize_axis(n: int, floor: int) -> int:
+    """Smallest power-of-two tier >= max(n, floor) — the bracketing that
+    keeps the universe of slot-bank shapes (and therefore traces) small
+    while every campaign still fits its tier."""
+    tier = max(1, int(floor))
+    # round the floor itself up to a power of two so tiers are stable
+    while tier < max(n, floor):
+        tier *= 2
+    return tier
+
+
+def pad_signature(
+    table: LegTable,
+    *,
+    floors: Tuple[int, int, int] = (8, 8, 8),
+    quantize: bool = True,
+) -> Signature:
+    """The slot-bank routing key of a compiled campaign.
+
+    ``quantize=True`` brackets each axis to a power-of-two tier at least
+    ``floors``; ``quantize=False`` pins every request to the single
+    ``floors`` shape and raises loudly when a campaign does not fit (the
+    fixed-pad regime of ``Fleet.stream``).
+    """
+    t, p, l = _resolve_pads([table], None, None, None, 1)
+    if not quantize:
+        ft, fp, fl = floors
+        if t > ft or p > fp or l > fl:
+            raise ValueError(
+                f"campaign needs pads {(t, p, l)} but the server is pinned "
+                f"to fixed pad_floors {floors} (quantize=False); raise the "
+                "floors or enable quantized signature tiers"
+            )
+        return (int(ft), int(fp), int(fl))
+    return (
+        quantize_axis(t, floors[0]),
+        quantize_axis(p, floors[1]),
+        quantize_axis(l, floors[2]),
+    )
+
+
+def _inert_template(bank: ScenarioBank, slots: int) -> ScenarioBank:
+    """``slots`` all-inert scenario rows at ``bank``'s pad shapes, built
+    from the canonical shard-pad fills (append pads, slice them back out —
+    bit-identical to ``pad_bank_scenarios``'s rows by construction)."""
+    n = bank.n_scenarios
+    # pad rows carry no source table; strip tables so the subset below
+    # cannot try to slice them
+    stripped = dataclasses.replace(bank, tables=[])
+    padded = pad_bank_scenarios(stripped, count=n + slots)
+    return subset_bank(padded, list(range(n, n + slots)))
+
+
+class BankSlotCache:
+    """In-process signature → template cache with an optional on-disk
+    warm store (``Fleet.save`` format, one ``slot_TxPxL/`` dir per
+    signature)."""
+
+    def __init__(self, slots: int, *, warm_dir: Optional[str] = None) -> None:
+        if slots < 1:
+            raise ValueError(f"slots must be >= 1: {slots}")
+        self.slots = int(slots)
+        self.warm_dir = warm_dir
+        self._templates: Dict[Signature, ScenarioBank] = {}
+        self.hits = 0
+        self.misses = 0
+        self.warm_loads = 0
+
+    def _warm_path(self, sig: Signature) -> Optional[str]:
+        if self.warm_dir is None:
+            return None
+        t, p, l = sig
+        return os.path.join(self.warm_dir, f"slot_{t}x{p}x{l}")
+
+    def get_or_create(self, sig: Signature, seed_bank: ScenarioBank) -> ScenarioBank:
+        """The all-inert ``slots``-row template for ``sig`` — from the
+        in-process cache, the warm store, or freshly derived from
+        ``seed_bank`` (any bank already stacked at ``sig``'s pads, e.g. the
+        first routed request's single-row bank; then persisted to the warm
+        store)."""
+        template = self._templates.get(sig)
+        if template is not None:
+            self.hits += 1
+            return template
+        self.misses += 1
+
+        from repro.core.fleet import Fleet  # late: fleet imports are heavy
+
+        path = self._warm_path(sig)
+        if path is not None and os.path.isdir(path):
+            loaded = Fleet.load(path).bank
+            if (
+                (loaded.pad_legs, loaded.pad_procs, loaded.pad_links) != sig
+                or loaded.n_scenarios < 1
+            ):
+                raise ValueError(
+                    f"warm slot artifact {path!r} carries pads "
+                    f"{(loaded.pad_legs, loaded.pad_procs, loaded.pad_links)}"
+                    f" x {loaded.n_scenarios} scenarios, expected signature "
+                    f"{sig}; delete or regenerate the warm store"
+                )
+            # never trust persisted rows to be inert — rebuild the rows
+            # from the canonical pad fills at the artifact's shapes
+            template = _inert_template(
+                subset_bank(
+                    dataclasses.replace(loaded, tables=[]), [0]
+                ),
+                self.slots,
+            )
+            self.warm_loads += 1
+        else:
+            if (
+                seed_bank.pad_legs, seed_bank.pad_procs, seed_bank.pad_links
+            ) != sig:
+                raise ValueError(
+                    f"seed bank pads "
+                    f"{(seed_bank.pad_legs, seed_bank.pad_procs, seed_bank.pad_links)} "
+                    f"do not match the requested signature {sig}"
+                )
+            template = _inert_template(seed_bank, self.slots)
+            if path is not None:
+                Fleet(template).save(path)
+
+        self._templates[sig] = template
+        return template

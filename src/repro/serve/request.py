@@ -1,0 +1,91 @@
+"""Request/response records of the simulation service.
+
+A :class:`SimRequest` is one ``(grid, campaign, theta, n_replicas)`` query:
+"this campaign arrives at this grid — how do its transfers go?". The server
+compiles it to a single-scenario row at submit time, routes it to the slot
+bank matching its pad signature, and answers with a :class:`RequestResult`
+whose result rows are bit-identical to a direct ``Fleet.run`` of the same
+scenario with the same keys.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.engine import SimResult
+from repro.core.topology import Grid
+from repro.core.workload import Campaign
+
+__all__ = ["SimRequest", "RequestResult"]
+
+
+@dataclasses.dataclass
+class SimRequest:
+    """One simulation query.
+
+    ``theta`` is the optional ``[3]`` calibration vector (overhead, bg_mu,
+    bg_sigma — applied through the same row-local
+    ``calibration.make_theta_mapper`` path as ``Fleet.run(theta)``);
+    ``None`` runs the campaign's compiled base parameters. Replica RNG:
+    either explicit ``keys`` of shape ``[n_replicas, 2]`` (exactly the
+    per-scenario rows ``Fleet.run(keys=...)`` would consume), or a ``seed``
+    from which the server splits ``PRNGKey(seed)`` into ``n_replicas``
+    subkeys — the same schedule as ``Fleet.run(key=PRNGKey(seed),
+    replicas=n_replicas)`` on a single-scenario fleet.
+    """
+
+    rid: int
+    grid: Grid
+    campaign: Campaign
+    theta: Optional[np.ndarray] = None
+    n_replicas: int = 1
+    seed: int = 0
+    keys: Optional[np.ndarray] = None  # [n_replicas, 2] uint32
+    protocol: str = "webdav"
+    name: Optional[str] = None
+
+    def __post_init__(self) -> None:
+        if self.n_replicas < 1:
+            raise ValueError(f"n_replicas must be >= 1: {self.n_replicas}")
+        if self.keys is not None:
+            k = np.asarray(self.keys)
+            if k.shape != (self.n_replicas, 2):
+                raise ValueError(
+                    f"explicit keys must be [n_replicas={self.n_replicas}, 2], "
+                    f"got {k.shape}"
+                )
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """A served answer: the request's :class:`SimResult` rows plus timing.
+
+    ``result`` fields carry the request's replicas only — per-leg fields are
+    ``[n_replicas, T]`` at the slot bank's leg pad, ``ticks`` is
+    ``[n_replicas]`` — sliced bit-exactly out of the slot bank row. The
+    timestamps are ``time.perf_counter`` values from the serving process
+    (``latency`` = finish − submit, the benchmark's request latency);
+    ``windows`` counts the slot bank window steps the request was resident
+    for, and ``slot``/``signature`` record where it ran.
+    """
+
+    rid: int
+    name: str
+    result: SimResult
+    n_replicas: int
+    signature: tuple
+    slot: int
+    submitted_at: float
+    admitted_at: float
+    finished_at: float
+    windows: int
+
+    @property
+    def latency(self) -> float:
+        return self.finished_at - self.submitted_at
+
+    @property
+    def queue_delay(self) -> float:
+        return self.admitted_at - self.submitted_at

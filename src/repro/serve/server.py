@@ -1,0 +1,310 @@
+"""``SimServer`` — the synchronous in-process simulation service.
+
+One server owns a set of warm :class:`~repro.serve.slots.SlotBank` banks
+(one per pad signature), a per-signature admission queue, and the result
+store. ``submit`` compiles the request to a single-scenario row and
+enqueues it; ``step`` runs one scheduling round — retire finished rows,
+refill free slots from the queue, advance every busy bank by one window —
+and ``drain`` steps until nothing is queued or resident. Results stream
+back per request the round their scenario finishes, not when the whole
+batch drains.
+
+Parity contract: a served result is **bitwise identical** to a direct
+``Fleet.run`` of the same scenario with the same theta/keys — admission
+merges are masked carry re-initializations, empty slots are inert pads,
+window steps freeze finished elements, and every parameter row is computed
+through the same row-local calibration mapper ``Fleet.run`` uses
+(CONTRACTS.md §8; ``tests/test_serve.py`` pins it, and
+``benchmarks/serve_latency.py --smoke`` asserts it in CI).
+
+Under ``REPRO_DEBUG=1`` the runtime sanitizers come on: every slot-bank
+template passes ``sanitize.check_bank`` and every warm bank's scheduling
+round runs inside ``sanitize.retrace_guard(budget=0)`` — a steady-state
+retrace is a contract violation, not a slowdown.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import calibration as calibration_lib
+from repro.core import engine as engine_lib
+from repro.core.engine import make_bank_params
+from repro.core.workload import bank_from_tables, compile_campaign
+from repro.serve.cache import BankSlotCache, pad_signature
+from repro.serve.request import RequestResult, SimRequest
+from repro.serve.slots import Admission, SlotBank
+
+__all__ = ["ServeConfig", "SimServer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Server policy.
+
+    ``slots``/``replicas`` fix every slot bank's ``[S, R]`` shape.
+    ``pad_floors`` + ``quantize`` define the pad-signature tiers requests
+    route by (power-of-two brackets by default; ``quantize=False`` pins one
+    fixed shape and rejects campaigns that do not fit). ``window`` is the
+    fused tick window per scheduling round — **fixed per bank**, never
+    content-clamped, because a request-dependent window would retrace on
+    admission; results are bit-identical for every choice (CONTRACTS.md
+    §7), so it is purely a host-dispatch amortization knob. ``None``
+    resolves once through the engine's per-backend default, floored at 8:
+    the server's host-driven loop pays a dispatch + liveness sync per
+    window, which the stepped engine's CPU-tuned ``K=1`` would multiply by
+    every tick.
+    """
+
+    slots: int = 8
+    replicas: int = 1
+    pad_floors: Tuple[int, int, int] = (8, 8, 8)
+    quantize: bool = True
+    window: Optional[int] = None
+    leap: bool = False
+    backend: Optional[str] = None
+    warm_dir: Optional[str] = None
+
+
+class _Pending(collections.namedtuple("_Pending", "admission submitted_at")):
+    __slots__ = ()
+
+
+class SimServer:
+    """Continuous-batching simulation server (synchronous, in-process)."""
+
+    def __init__(self, config: Optional[ServeConfig] = None, *, devices=None):
+        self.config = config or ServeConfig()
+        if self.config.slots < 1:
+            raise ValueError(f"slots must be >= 1: {self.config.slots}")
+        if self.config.replicas < 1:
+            raise ValueError(f"replicas must be >= 1: {self.config.replicas}")
+        self.mesh = engine_lib.resolve_mesh(devices)
+        if self.mesh is not None and self.config.slots % self.mesh.devices.size:
+            raise ValueError(
+                f"slots={self.config.slots} must be a multiple of the mesh "
+                f"size {self.mesh.devices.size} (the slot bank shards over "
+                "the scenario axis)"
+            )
+        if self.config.window is not None:
+            self.window = max(1, int(self.config.window))
+        else:
+            self.window = max(
+                8, engine_lib._resolve_window(None, self.config.leap)
+            )
+        self.cache = BankSlotCache(
+            self.config.slots, warm_dir=self.config.warm_dir
+        )
+        self.banks: Dict[tuple, SlotBank] = {}
+        self.queues: Dict[tuple, Deque[_Pending]] = {}
+        self.results: Dict[int, RequestResult] = {}
+        self._submitted_at: Dict[int, float] = {}
+        self._admitted_at: Dict[int, float] = {}
+        self._seen_rids: set = set()
+        self._unreturned: List[RequestResult] = []
+        self.rounds = 0
+        self._debug = engine_lib._sanitizers_wanted()
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, req: SimRequest) -> int:
+        """Compile and enqueue one request; returns its ``rid``.
+
+        Compilation (campaign → leg table → single-row bank at the routed
+        signature, plus the row's params through the calibration mapper)
+        happens here, at the submission edge, so the scheduling rounds
+        stay pure routing + device work.
+        """
+        if req.rid in self._seen_rids:
+            raise ValueError(f"duplicate request id {req.rid}")
+        if req.n_replicas > self.config.replicas:
+            raise ValueError(
+                f"request {req.rid} wants {req.n_replicas} replicas but the "
+                f"server's slot banks carry replicas={self.config.replicas}; "
+                "raise ServeConfig.replicas"
+            )
+        table = compile_campaign(req.grid, req.campaign)
+        sig = pad_signature(
+            table,
+            floors=self.config.pad_floors,
+            quantize=self.config.quantize,
+        )
+        name = req.name if req.name is not None else f"request_{req.rid}"
+        row_bank = bank_from_tables(
+            [table], names=[name],
+            pad_legs=sig[0], pad_procs=sig[1], pad_links=sig[2],
+        )
+        if req.theta is None:
+            params = make_bank_params(row_bank)
+        else:
+            params = calibration_lib.make_theta_mapper(
+                row_bank, req.protocol, missing_ok=True
+            )(np.asarray(req.theta))
+        if req.keys is not None:
+            row_keys = np.asarray(req.keys, np.uint32)
+        else:
+            row_keys = np.asarray(
+                jax.random.split(
+                    jax.random.PRNGKey(req.seed), req.n_replicas
+                ),
+                np.uint32,
+            )
+        # pad unused replica lanes with zero keys: their rows simulate as
+        # extra replicas of the scenario and are sliced off at retire
+        keys = np.zeros((self.config.replicas, 2), np.uint32)
+        keys[: req.n_replicas] = row_keys
+        adm = Admission(
+            request=req,
+            row_bank=row_bank,
+            keep_frac=np.asarray(params.keep_frac, np.float32)[0],
+            bg_mu=np.asarray(params.bg_mu, np.float32)[0],
+            bg_sigma=np.asarray(params.bg_sigma, np.float32)[0],
+            keys=keys,
+        )
+        self._seen_rids.add(req.rid)
+        self.queues.setdefault(sig, collections.deque()).append(
+            _Pending(adm, time.perf_counter())
+        )
+        return req.rid
+
+    # -- scheduling ---------------------------------------------------------
+
+    def _bank_for(self, sig: tuple, seed_bank) -> SlotBank:
+        bank = self.banks.get(sig)
+        if bank is None:
+            template = self.cache.get_or_create(sig, seed_bank)
+            if self._debug:
+                from repro.analysis import sanitize
+
+                sanitize.check_bank_once(template)
+            bank = SlotBank(
+                sig, template, self.config.replicas,
+                window=self.window, leap=self.config.leap,
+                backend=self.config.backend, mesh=self.mesh,
+            )
+            self.banks[sig] = bank
+        return bank
+
+    def _bank_warm(self, bank: SlotBank) -> bool:
+        """Past warm-up: the bank has seen enough admit/step cycles that
+        every jit signature (including post-step carry shardings) is
+        cached. Two full cycles cover the init-carry → stepped-carry
+        sharding transition under a mesh."""
+        return bank.admitted >= 2 and bank.windows_total >= 2
+
+    def _round_one(self, sig: tuple, bank: SlotBank, now: float) -> bool:
+        """Retire / admit / step one slot bank; returns True if it still
+        holds or received live work."""
+        live = bank.live_rows()
+        for s, req in enumerate(bank.slot_req):
+            if req is not None and not live[s]:
+                done_req, rows, windows, _ticks = bank.retire(s)
+                res = RequestResult(
+                    rid=done_req.rid,
+                    name=done_req.name or f"request_{done_req.rid}",
+                    result=rows,
+                    n_replicas=done_req.n_replicas,
+                    signature=sig,
+                    slot=s,
+                    submitted_at=self._submitted_at.pop(done_req.rid),
+                    admitted_at=self._admitted_at.pop(done_req.rid),
+                    finished_at=now,
+                    windows=windows,
+                )
+                self.results[done_req.rid] = res
+                self._unreturned.append(res)
+
+        queue = self.queues.get(sig)
+        entries = []
+        if queue:
+            for slot in bank.free_slots():
+                if not queue:
+                    break
+                pending = queue.popleft()
+                entries.append((slot, pending.admission))
+                rid = pending.admission.request.rid
+                self._submitted_at[rid] = pending.submitted_at
+                self._admitted_at[rid] = now
+        if entries:
+            bank.admit(entries)
+        if bank.occupied:
+            bank.step()
+            return True
+        return bool(queue)
+
+    def step(self) -> bool:
+        """One scheduling round over every slot bank. Returns True while
+        any request is still queued or resident."""
+        now = time.perf_counter()
+        # create banks for queued signatures that have none yet
+        for sig, queue in list(self.queues.items()):
+            if queue and sig not in self.banks:
+                self._bank_for(sig, queue[0].admission.row_bank)
+        busy = False
+        for sig, bank in self.banks.items():
+            if self._debug and self._bank_warm(bank):
+                from repro.analysis import sanitize
+
+                with sanitize.retrace_guard(budget=0):
+                    busy |= self._round_one(sig, bank, now)
+            else:
+                busy |= self._round_one(sig, bank, now)
+        self.rounds += 1
+        return busy or any(self.queues.values())
+
+    def poll(self, rid: int) -> Optional[RequestResult]:
+        """The finished result for ``rid``, or ``None`` while it is still
+        queued/running (non-destructive)."""
+        if rid not in self._seen_rids:
+            raise KeyError(f"unknown request id {rid}")
+        return self.results.get(rid)
+
+    def drain(self, *, max_rounds: int = 1_000_000) -> List[RequestResult]:
+        """Step until every submitted request has finished; returns the
+        results completed since the last ``drain`` in completion order
+        (each exactly once)."""
+        rounds = 0
+        while self.step():
+            rounds += 1
+            if rounds >= max_rounds:
+                raise RuntimeError(
+                    f"drain did not converge within {max_rounds} scheduling "
+                    "rounds — a request can neither finish nor admit"
+                )
+        out = self._unreturned
+        self._unreturned = []
+        return out
+
+    # -- observability ------------------------------------------------------
+
+    def metrics(self) -> dict:
+        """Serving metrics: global counters plus per-signature slot-bank
+        occupancy/idle/realized-tick measurements (the straggler-bucket
+        cost-model inputs of the ROADMAP straggler-bucket item)."""
+        return {
+            "rounds": self.rounds,
+            "submitted": len(self._seen_rids),
+            "completed": len(self.results),
+            "queued": sum(len(q) for q in self.queues.values()),
+            "resident": sum(b.occupied for b in self.banks.values()),
+            "window": self.window,
+            "slots": self.config.slots,
+            "replicas": self.config.replicas,
+            "mesh_devices": (
+                int(self.mesh.devices.size) if self.mesh is not None else 0
+            ),
+            "cache": {
+                "hits": self.cache.hits,
+                "misses": self.cache.misses,
+                "warm_loads": self.cache.warm_loads,
+            },
+            "slot_banks": {
+                "x".join(str(d) for d in sig): bank.metrics()
+                for sig, bank in self.banks.items()
+            },
+        }

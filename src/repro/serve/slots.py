@@ -1,0 +1,228 @@
+"""A slot bank: one resident, mutable, fixed-shape bank of serving slots.
+
+The serving twin of the seed continuous-batching engine's decode batch:
+``slots`` scenario rows × ``replicas`` RNG replicas, resident on device as
+a :class:`~repro.core.residency.ResidentBank`, advanced window by window
+through the engine's donated stepped loop. Finished rows freeze (their
+carry is done — further windows are bit-exact no-ops), free rows are inert
+shard-pad scenarios (never live), and admission overwrites a row's spec /
+params / keys on the host mirror, re-uploads, and merges a fresh carry for
+exactly the admitted rows (``ResidentBank.admit``). Nothing in that cycle
+changes an array shape, so a slot bank traces once per
+(signature, window, leap, backend, mesh) and then serves forever.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import SimParams, SimResult
+from repro.core.residency import ResidentBank
+from repro.core.workload import ScenarioBank
+from repro.serve.request import SimRequest
+
+__all__ = ["SlotBank", "Admission"]
+
+
+@dataclasses.dataclass
+class Admission:
+    """One request ready to enter a slot: its single-row bank (at the slot
+    bank's pads), its row params, and its ``[R, 2]`` replica keys (already
+    padded to the slot bank's replica count)."""
+
+    request: SimRequest
+    row_bank: ScenarioBank
+    keep_frac: np.ndarray  # [T] f32
+    bg_mu: np.ndarray  # [L] f32
+    bg_sigma: np.ndarray  # [L] f32
+    keys: np.ndarray  # [R, 2] uint32
+
+
+def _owned_copy(bank: ScenarioBank) -> ScenarioBank:
+    """A deep array copy of ``bank`` that a mutable ResidentBank may own
+    (the cached template must survive this slot bank's row writes)."""
+    fields = {}
+    for f in dataclasses.fields(ScenarioBank):
+        v = getattr(bank, f.name)
+        if isinstance(v, np.ndarray):
+            v = np.array(v, copy=True)
+        elif isinstance(v, list):
+            v = list(v)
+        fields[f.name] = v
+    return ScenarioBank(**fields)
+
+
+class SlotBank:
+    """``slots`` warm serving rows at one pad signature.
+
+    Construction uploads the all-inert template and initializes a carry in
+    which every element is already done — the bank is immediately steppable
+    and costs nothing until the first admission. ``mesh`` (a resolved 1-D
+    Mesh or None) shards the window step over the scenario axis; the slot
+    count must then be a multiple of the mesh size.
+    """
+
+    def __init__(
+        self,
+        signature: Tuple[int, int, int],
+        template: ScenarioBank,
+        replicas: int,
+        *,
+        window: int,
+        leap: bool = False,
+        backend: Optional[str] = None,
+        mesh=None,
+    ) -> None:
+        self.signature = signature
+        self.n_slots = template.n_scenarios
+        self.replicas = int(replicas)
+        self.window = int(window)
+        self.leap = bool(leap)
+        self.backend = backend
+        self.mesh = mesh
+        if mesh is not None and self.n_slots % mesh.devices.size:
+            raise ValueError(
+                f"slot count {self.n_slots} must be a multiple of the mesh "
+                f"size {mesh.devices.size} to shard the slot bank"
+            )
+
+        self.resident = ResidentBank(_owned_copy(template), mutable=True)
+        T = template.pad_legs
+        L = template.pad_links
+        S = self.n_slots
+        # host params mirror, inert-row fills (keep=1, mu=sigma=0 — the
+        # engine's _pad_params_rows contract)
+        self._keep = np.ones((S, T), np.float32)
+        self._bg_mu = np.zeros((S, L), np.float32)
+        self._bg_sigma = np.zeros((S, L), np.float32)
+        self._keys = np.zeros((S, self.replicas, 2), np.uint32)
+        self._params_dev = self._upload_params()
+        self.carry = self.resident.init_carry(
+            self._params_dev, jnp.asarray(self._keys)
+        )
+
+        self.slot_req: List[Optional[SimRequest]] = [None] * S
+        self.slot_windows = [0] * S  # windows since the row was admitted
+        # carry version -> memoized bank result (retiring several slots in
+        # one round materializes the result view once)
+        self._version = 0
+        self._result_cache: Optional[Tuple[int, SimResult]] = None
+        # observability (ROADMAP straggler-cost measurements)
+        self.windows_total = 0
+        self.occupied_window_sum = 0  # sum over windows of occupied slots
+        self.admitted = 0
+        self.retired = 0
+        self.realized_ticks = 0  # sum of retired rows' realized tick counts
+
+    # -- params -------------------------------------------------------------
+
+    def _upload_params(self) -> SimParams:
+        return SimParams(
+            keep_frac=jnp.asarray(self._keep),
+            bg_mu=jnp.asarray(self._bg_mu),
+            bg_sigma=jnp.asarray(self._bg_sigma),
+            enabled=None,
+        )
+
+    # -- scheduling surface -------------------------------------------------
+
+    @property
+    def occupied(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    def free_slots(self) -> List[int]:
+        return [s for s, r in enumerate(self.slot_req) if r is None]
+
+    def live_rows(self) -> np.ndarray:
+        """Host-synced ``[S]`` row liveness (any replica still ticking)."""
+        return np.asarray(jnp.any(self.resident.live(self.carry), axis=-1))
+
+    def admit(self, entries: Sequence[Tuple[int, Admission]]) -> None:
+        """Admit ``(slot, admission)`` pairs in one masked merge.
+
+        Writes every admitted row into the host mirrors, re-uploads the
+        spec and params (transfers, not traces), and re-initializes exactly
+        the admitted rows inside the donated carry — in-flight rows pass
+        through bit for bit.
+        """
+        if not entries:
+            return
+        mask = np.zeros(self.n_slots, bool)
+        for slot, adm in entries:
+            if self.slot_req[slot] is not None:
+                raise ValueError(f"slot {slot} is occupied")
+            mask[slot] = True
+            self.resident.write_rows([slot], adm.row_bank)
+            self._keep[slot] = adm.keep_frac
+            self._bg_mu[slot] = adm.bg_mu
+            self._bg_sigma[slot] = adm.bg_sigma
+            self._keys[slot] = adm.keys
+            self.slot_req[slot] = adm.request
+            self.slot_windows[slot] = 0
+        self._params_dev = self._upload_params()
+        self.carry = self.resident.admit(
+            self._params_dev, self._keys, self.carry, mask
+        )
+        self._version += 1
+        self.admitted += len(entries)
+
+    def step(self) -> None:
+        """One donated window step over the whole slot bank."""
+        self.carry = self.resident.window_step(
+            self._params_dev, self.carry,
+            backend=self.backend, leap=self.leap, window=self.window,
+            mesh=self.mesh,
+        )
+        self._version += 1
+        self.windows_total += 1
+        self.occupied_window_sum += self.occupied
+        for s, r in enumerate(self.slot_req):
+            if r is not None:
+                self.slot_windows[s] += 1
+
+    def retire(self, slot: int) -> Tuple[SimRequest, SimResult, int, int]:
+        """Extract the finished request in ``slot`` and free it.
+
+        Returns ``(request, result_rows, windows_resident, realized_ticks)``
+        where ``result_rows`` is the request's bit-exact ``[n_replicas, ...]``
+        slice of the bank result. The freed row keeps its frozen carry (all
+        done — every further window over it is a no-op) until the next
+        admission overwrites it.
+        """
+        req = self.slot_req[slot]
+        if req is None:
+            raise ValueError(f"slot {slot} is empty")
+        if self._result_cache is None or self._result_cache[0] != self._version:
+            self._result_cache = (
+                self._version, self.resident.result(self.carry)
+            )
+        full = self._result_cache[1]
+        r = req.n_replicas
+        rows = jax.tree.map(lambda a: np.asarray(a[slot, :r]), full)
+        ticks = int(np.max(np.asarray(full.ticks[slot, :r])))
+        windows = self.slot_windows[slot]
+        self.slot_req[slot] = None
+        self.slot_windows[slot] = 0
+        self.retired += 1
+        self.realized_ticks += ticks
+        return req, rows, windows, ticks
+
+    # -- observability ------------------------------------------------------
+
+    def metrics(self) -> dict:
+        denom = max(1, self.windows_total * self.n_slots)
+        return {
+            "slots": self.n_slots,
+            "replicas": self.replicas,
+            "window": self.window,
+            "windows_total": self.windows_total,
+            "admitted": self.admitted,
+            "retired": self.retired,
+            "occupancy_mean": self.occupied_window_sum / max(1, self.windows_total),
+            "idle_window_fraction": 1.0 - self.occupied_window_sum / denom,
+            "realized_ticks": self.realized_ticks,
+        }

@@ -1,3 +1,20 @@
-from repro.serving.engine import ServeConfig, ServingEngine
+"""Deprecation shim: the LLM-token serving engine is retired.
 
-__all__ = ["ServeConfig", "ServingEngine"]
+The continuous-batching loop lives on — generalized from token slots to
+simulation slots — as :mod:`repro.serve` (``SimServer``), which serves
+``(grid, campaign, theta, n_replicas)`` requests from warm resident slot
+banks with bit-exact ``Fleet.run`` parity. Any import from this package
+fails loudly with that pointer.
+"""
+from __future__ import annotations
+
+_MESSAGE = (
+    "repro.serving (the LLM-token ServingEngine) was removed; its "
+    "slot/queue/refill design now drives the simulation service in "
+    "repro.serve — use repro.serve.SimServer (submit/poll/drain) with "
+    "repro.serve.SimRequest instead."
+)
+
+
+def __getattr__(name: str):
+    raise ImportError(_MESSAGE)
