@@ -3,9 +3,9 @@
 The loop baseline is what the pre-bank architecture forced on every consumer
 of scenario diversity: one ``simulate_batch`` dispatch per (grid, campaign)
 pair, each distinct campaign shape paying its own jit trace. The fleet runs
-the identical fleet x replicas through one padded trace per
-``max_ticks``-homogeneous sub-bank (``repro.Fleet`` — the façade this
-harness now drives end to end: compile with shared pad floors, run, stream).
+the identical fleet x replicas through one padded trace per work-cost-packed
+sub-bank (``repro.Fleet`` — the façade this harness now drives end to end:
+compile with shared pad floors, run, stream).
 
     PYTHONPATH=src python benchmarks/bank_throughput.py \
         [--scenarios 64] [--replicas 4] [--buckets 8] [--out BENCH_bank.json]
@@ -14,15 +14,30 @@ harness now drives end to end: compile with shared pad floors, run, stream).
 
 Emits ``BENCH_bank.json`` with cold (trace included — the cost scenario
 diversity actually incurs) and warm (all traces cached) walls, per-bucket
-warm throughput (tick bound, realized final tick, resolved window), the
-fused-window sweep (``window_sweep``) with
+warm throughput (tick bound, realized final tick, resolved window, cost
+share), the packing-efficiency section (``bucket_packing``: per-bucket
+modelled costs, the packing budget, and the cost-normalized throughput
+spread), the fused-window sweep (``window_sweep``) with
 ``fused_vs_per_tick_speedup`` (auto window vs window=1 on the bucketed
 fleet), the manual-banked-kernel vs vmap lowering delta on the monolithic
 bank, streaming-fleet walls, and the speedups future PRs must not regress:
 ``speedup_warm`` (bucketed warm vs cached loop), ``speedup_fresh_fleet``
 (steady-state scenario diversity), ``bank_fresh_fleet_retraces`` and
 ``stream_retraces_after_first`` (both must stay 0 for fixed pad/bucket
-shapes). Windowed-vs-per-tick **bitwise** parity is asserted on every run.
+shapes). Windowed-vs-per-tick and bucketed-vs-monolithic **bitwise**
+parity are asserted on every run.
+
+Per-bucket throughput metric: buckets deliberately carry *equal work*, not
+equal scenario counts, so raw scenarios/sec is no longer comparable across
+buckets (a 3-scenario long-tail bucket at pad 58 does as much work as a
+19-scenario bucket at pad 10). ``scenarios_per_sec`` therefore reports
+**cost-normalized equivalent scenarios/sec** — the bucket's dispatch-
+shifted share of the fleet's modelled work, expressed in whole-fleet
+scenarios, divided by its wall (``n * cost_share / warm_s``) — which is
+flat across buckets exactly when the packing equalized real per-bucket
+walls; the raw member count rate is kept as ``scenarios_per_sec_raw``.
+The min/max spread of the normalized rate is asserted <= 1.5x on every
+run (the count-packed plan it replaced measured 4.4x).
 ``--smoke`` runs a tiny fleet through every section and every assertion,
 writing the report to ``BENCH_smoke.json`` (the tracked
 ``BENCH_bank.json`` is only rewritten by full runs).
@@ -214,22 +229,28 @@ def main() -> None:
     probe2 = Fleet.from_pairs(pairs2, max_ticks=args.max_ticks)
     pads = tuple(max(a, b) for a, b in zip(probe1.pads, probe2.pads))
     # ... and shared per-bucket pad floors so both fleets reuse every bucket
-    # trace (two-pass: bucket each fleet, then join the bucket shapes)
+    # trace.  Cost packing realizes a *variable* bucket count, so the
+    # cross-fleet join pins fleet 2 to fleet 1's packing plan via
+    # ``bucket_counts`` (per-bucket group sizes in packed order) — the two
+    # plans then have identical bucket counts and member counts, and the
+    # per-bucket pad floors can be joined elementwise
     b1 = Fleet.from_pairs(pairs, max_ticks=args.max_ticks, n_buckets=k,
-                          pad_floors=pads)
+                          pad_floors=pads, leap=args.leap)
+    counts = b1.bucket_scenario_counts
     b2 = Fleet.from_pairs(pairs2, max_ticks=args.max_ticks, n_buckets=k,
-                          pad_floors=pads)
+                          pad_floors=pads, bucket_counts=counts,
+                          leap=args.leap)
     bucket_floors = [
         tuple(max(a, b) for a, b in zip(x, y))
         for x, y in zip(b1.bucket_pad_floors, b2.bucket_pad_floors)
     ]
     fleet = Fleet.from_pairs(
         pairs, max_ticks=args.max_ticks, n_buckets=k, pad_floors=pads,
-        bucket_pad_floors=bucket_floors, leap=args.leap,
+        bucket_counts=counts, bucket_pad_floors=bucket_floors, leap=args.leap,
     )
     fleet2 = Fleet.from_pairs(
         pairs2, max_ticks=args.max_ticks, n_buckets=k, pad_floors=pads,
-        bucket_pad_floors=bucket_floors, leap=args.leap,
+        bucket_counts=counts, bucket_pad_floors=bucket_floors, leap=args.leap,
     )
     bank, bank2 = fleet.bank, fleet2.bank
     keys = jax.random.split(jax.random.PRNGKey(args.seed), n * r).reshape(n, r, 2)
@@ -275,7 +296,7 @@ def main() -> None:
     )
     timed(lambda: run_mono("vmap"))
     _, vmap_mono_warm = timed_warm(lambda: run_mono("vmap"))
-    timed(lambda: run_mono("banked"))
+    mono_res, _ = timed(lambda: run_mono("banked"))
     _, banked_mono_warm = timed_warm(lambda: run_mono("banked"))
 
     # ---- bucketed fleet (the warm-path fix) -------------------------------
@@ -285,6 +306,17 @@ def main() -> None:
         bank_res, bank_cold = timed(run_fleet)
     _, bank_warm = timed_warm(run_fleet)
     bank_traces = cold_traces.count
+
+    # cost-packed sub-banks must stay an implementation detail: the scattered
+    # result is asserted **bitwise** equal to the monolithic bank on every run
+    for f in ("transfer_time", "conth_mb", "conpr_mb", "done", "ticks",
+              "start_tick"):
+        a = np.asarray(getattr(bank_res, f))
+        b = np.asarray(getattr(mono_res, f))
+        assert (a == b).all(), (
+            f"bucketed vs monolithic mismatch in {f}: max |delta| = "
+            f"{np.abs(a.astype(np.float64) - b.astype(np.float64)).max()}"
+        )
 
     # ---- windowed vs per-tick: parity (bitwise) + the fused speedup -------
     # parity is asserted at an explicit K>1 (not the auto default, which
@@ -308,11 +340,11 @@ def main() -> None:
 
     sweep_ks = [1, 16] if args.smoke else [1, 4, 8, 16, 32, 64]
     window_sweep = []
-    for k in sweep_ks:
-        run_k = lambda: fleet.run(keys=keys, window=k)
+    for kw in sweep_ks:
+        run_k = lambda kw=kw: fleet.run(keys=keys, window=kw)
         timed(run_k)  # pay the per-window-size trace outside the timing
         _, warm_k = timed_warm(run_k)
-        window_sweep.append({"window": k, "warm_s": round(warm_k, 4)})
+        window_sweep.append({"window": kw, "warm_s": round(warm_k, 4)})
     # seed the persisted autotuner table from the full sweep (smoke fleets
     # are too small/noisy to trust); default_tick_window() reads this back
     window_table_path = None
@@ -324,18 +356,33 @@ def main() -> None:
             jax.default_backend(), **{mode: best_k}
         )), repo)
 
-    # per-bucket warm throughput: each sub-bank timed as its own dispatch
+    # per-bucket warm throughput: each sub-bank timed as its own dispatch.
+    # Buckets carry equal *work*, not equal counts, so ``scenarios_per_sec``
+    # is cost-normalized (the bucket's dispatch-shifted share of the fleet's
+    # modelled work in whole-fleet-scenario units, over its wall); the raw
+    # member-count rate rides along as ``scenarios_per_sec_raw``
     bank_ticks = np.asarray(bank_res.ticks)  # [N, R] realized final ticks
-    per_bucket = []
+    subs = []
     for bucket in bank.buckets:
         sub_fleet = Fleet(bucket.bank, leap=args.leap)
         ids = np.asarray(bucket.scenario_ids)
-        sub_keys = keys[ids]
-        run_sub = lambda: sub_fleet.run(keys=sub_keys)
-        timed(run_sub)  # warm the (already cached) shape + params transfer
-        _, sub_warm = timed_warm(run_sub)
+        subs.append((bucket, sub_fleet, keys[ids]))
+        jax.block_until_ready(sub_fleet.run(keys=keys[ids]))  # warm
+    # best-of-N with the buckets *interleaved* (round-robin), not timed as
+    # per-bucket blocks: host scheduler drift then hits every bucket's
+    # sample set equally instead of landing wholesale on whichever bucket
+    # owned the slow stretch — the per-bucket spread is a tracked
+    # assertion, so its estimator must not absorb block-local noise
+    best = [float("inf")] * len(subs)
+    for _ in range(25):
+        for i, (_, sub_fleet, sub_keys) in enumerate(subs):
+            _, dt = timed(lambda f=sub_fleet, sk=sub_keys: f.run(keys=sk))
+            best[i] = min(best[i], dt)
+    per_bucket = []
+    for (bucket, sub_fleet, _), sub_warm in zip(subs, best):
         sub = bucket.bank
         bound = int(sub.max_ticks.max())
+        ids = np.asarray(bucket.scenario_ids)
         per_bucket.append({
             "scenarios": len(bucket.scenario_ids),
             "pad_legs": sub.pad_legs,
@@ -345,9 +392,39 @@ def main() -> None:
             "realized_ticks": int(bank_ticks[ids].max()),
             # the window the engine actually resolved for this bucket
             "window": engine_lib._clamp_window(window, bound),
+            "cost": round(bucket.cost, 1),
+            "cost_share": round(bucket.cost_share, 4),
             "warm_s": round(sub_warm, 4),
-            "scenarios_per_sec": round(len(bucket.scenario_ids) / sub_warm, 2),
+            "scenarios_per_sec": round(n * bucket.cost_share / sub_warm, 2),
+            "scenarios_per_sec_raw": round(
+                len(bucket.scenario_ids) / sub_warm, 2),
         })
+
+    # packing efficiency: what the cost model planned vs. what it realized.
+    # ``cost_budget`` is the per-bucket close threshold the packer swept
+    # with (slack x total/k); ``spread_warm`` is the min/max ratio of the
+    # cost-normalized per-bucket rate — 1.0 means the model predicted every
+    # bucket's wall perfectly; ``spread_warm_raw`` is the same ratio on raw
+    # member counts, which equal-work packing deliberately does NOT equalize
+    from repro.core import workload as workload_lib
+    norm_rates = [e["scenarios_per_sec"] for e in per_bucket]
+    raw_rates = [e["scenarios_per_sec_raw"] for e in per_bucket]
+    total_cost = sum(b.cost for b in bank.buckets)
+    slack = workload_lib._DEFAULT_BUCKET_SLACK
+    packing_section = {
+        "mode": bank.packing,
+        "slack": slack,
+        "cost_step_base": workload_lib._COST_STEP_BASE,
+        "cost_dispatch_base": workload_lib._COST_DISPATCH_BASE,
+        "n_buckets_hint": k,
+        "n_buckets_realized": len(bank.buckets),
+        "cost_budget": round(slack * total_cost / min(k, n), 1),
+        "bucket_scenarios": [len(b.scenario_ids) for b in bank.buckets],
+        "bucket_costs": [round(b.cost, 1) for b in bank.buckets],
+        "bucket_cost_shares": [round(b.cost_share, 4) for b in bank.buckets],
+        "spread_warm": round(max(norm_rates) / min(norm_rates), 2),
+        "spread_warm_raw": round(max(raw_rates) / min(raw_rates), 2),
+    }
 
     # ---- a FRESH fleet: the steady-state cost of scenario diversity -------
     # every new fleet re-pays the loop's per-shape traces; the bucketed
@@ -415,18 +492,24 @@ def main() -> None:
     work = float((legs[:, None] * bank_ticks).sum())
 
     # identically-shaped buckets share one jit trace, so the cold trace count
-    # equals the number of *distinct* bucket shapes, not the bucket count
-    # (e.g. with the default full fleet, two of the eight buckets share the
-    # (8, 24, 24, 4) shape -> 7 traces).  The shape key is everything the jit
-    # cache keys on per bucket: the padded scenario count (shard padding
-    # included, hence n_scenarios rather than len(scenario_ids)), the three
-    # pad axes, and the *clamped* window static argument
-    distinct_shapes = len({
-        (b.bank.n_scenarios, b.bank.pad_legs, b.bank.pad_procs,
-         b.bank.pad_links,
-         engine_lib._clamp_window(window, int(b.bank.max_ticks.max())))
-        for b in bank.buckets
-    })
+    # equals the number of *distinct* bucket shapes, not the bucket count.
+    # The shape key is everything the jit cache keys on per bucket: the
+    # padded scenario count (shard padding included, hence n_scenarios
+    # rather than len(scenario_ids)), the replica axis (a singleton
+    # long-tail bucket is widened across replicas — the engine folds
+    # ``_replica_fold(r)`` replicas onto the scenario axis, so its trace
+    # runs at ``(fold, r // fold)`` instead of ``(1, r)``), the three pad
+    # axes, and the *clamped* window static argument
+    def _bucket_shape_key(b):
+        s_b, r_eff = b.bank.n_scenarios, r
+        if s_b == 1 and len(b.scenario_ids) == 1 and r > 1:
+            fold = engine_lib._replica_fold(r)
+            s_b, r_eff = fold, r // fold
+        return (s_b, r_eff, b.bank.pad_legs, b.bank.pad_procs,
+                b.bank.pad_links,
+                engine_lib._clamp_window(window, int(b.bank.max_ticks.max())))
+
+    distinct_shapes = len({_bucket_shape_key(b) for b in bank.buckets})
 
     report = {
         "n_scenarios": n,
@@ -451,6 +534,7 @@ def main() -> None:
         "banked_mono_warm_s": round(banked_mono_warm, 3),
         "banked_vs_vmap_speedup": round(vmap_mono_warm / banked_mono_warm, 2),
         "realized_ticks": int(bank_ticks.max()),
+        "bucket_packing": packing_section,
         "per_bucket_warm": per_bucket,
         "scenarios_per_sec_loop_cold": round(n / loop_cold, 2),
         "scenarios_per_sec_bank_cold": round(n / bank_cold, 2),
@@ -484,6 +568,12 @@ def main() -> None:
     )
     assert stream_retraces == 0, (
         "streamed chunks must reuse the first chunk's trace"
+    )
+    assert packing_section["spread_warm"] <= 1.5, (
+        f"cost-normalized per-bucket throughput spread "
+        f"{packing_section['spread_warm']}x exceeds 1.5x: the work cost "
+        f"model no longer predicts per-bucket walls "
+        f"(rates: {sorted(norm_rates)})"
     )
     if not args.smoke:
         assert sharded_speedup > 1.0, (

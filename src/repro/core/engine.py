@@ -1234,6 +1234,19 @@ _WINDOW_DEFAULT_OTHER = (1, 1)
 # non-smoke runs) via record_window_sweep and committed alongside the code.
 # The hardcoded pairs above remain the fallback for platforms the sweep has
 # never run on.
+#
+# The window interacts with the bucket *work-cost model* (see
+# workload.compile_bank): a scenario's packing cost is
+# ``units * (_COST_STEP_BASE + pow2ceil(n_legs))`` where ``units`` is
+# ``LegTable.leap_event_estimate()`` under the leap engine and
+# ``ceil(expected_ticks / resolved window)`` under tick stepping — the
+# tick-mode unit count reads this table through ``_resolve_window(None,
+# False)``, so retuning a backend's window also rebalances cost-packed
+# buckets on the next compile. Knobs: ``compile_bank(bucket_packing=
+# "cost"|"count", bucket_slack=..., bucket_cost_leap=..., bucket_counts=
+# ...)``; the model constants live next to the formula in
+# ``core/workload.py`` (_COST_STEP_BASE, _COST_DISPATCH_BASE,
+# _DEFAULT_BUCKET_SLACK).
 _WINDOW_TABLE_PATH = os.path.join(os.path.dirname(__file__), "window_table.json")
 
 
@@ -1390,6 +1403,30 @@ def _dispatch_bank(
     )
 
 
+# Cost-packed banks split long-tail scenarios into singleton buckets at
+# native pads (see compile_bank). A 1-scenario program leaves the engine's
+# scenario axis a single row, so on tiled backends its fused kernel runs
+# nearly empty. When the replica count allows, the bucketed dispatcher
+# *widens* such buckets across the replica axis — [1, R] elements reshaped
+# to [fold, R/fold] with the spec broadcast over the folded scenario rows —
+# which is bitwise inert: the engine is element-independent (per-element
+# freeze masks and per-element RNG), and the while condition ranges over the
+# same element set either way, so iteration counts and per-element
+# trajectories are unchanged; only the tile occupancy differs. The fold is
+# capped so the broadcast spec stays small.
+_SINGLETON_FOLD_MAX = 8
+
+
+def _replica_fold(n_replicas: int) -> int:
+    """Largest power of two <= _SINGLETON_FOLD_MAX dividing n_replicas."""
+    fold = 1
+    while (
+        fold * 2 <= _SINGLETON_FOLD_MAX and n_replicas % (fold * 2) == 0
+    ):
+        fold *= 2
+    return fold
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
@@ -1465,8 +1502,39 @@ def _simulate_bank_bucketed_impl(
             bg_sigma=links(params.bg_sigma),
             enabled=legs(params.enabled),
         )
-        res = sim(spec_b, sub_params, keys[gid], backend=backend, leap=leap,
-                  window=w_b)
+        # singleton long-tail bucket: widen across the replica axis so the
+        # fused kernel fills its scenario tiles (bitwise inert, see
+        # _replica_fold). Per-replica (ndim-3) param leaves opt out — their
+        # replica axis cannot be folded without reshaping caller data.
+        fold = 1
+        if (
+            mesh is None
+            and s_b == 1
+            and n_real == 1
+            and r > 1
+            and all(
+                a is None or a.ndim == 2
+                for a in (
+                    params.keep_frac, params.bg_mu,
+                    params.bg_sigma, params.enabled,
+                )
+            )
+        ):
+            fold = _replica_fold(r)
+        if fold > 1:
+            widen = lambda a: jnp.broadcast_to(a, (fold,) + a.shape[1:])
+            res = sim(
+                jax.tree.map(widen, spec_b),
+                jax.tree.map(widen, sub_params),
+                keys[gid].reshape(fold, r // fold, 2),
+                backend=backend, leap=leap, window=w_b,
+            )
+            res = jax.tree.map(
+                lambda a: a.reshape((1, r) + a.shape[2:]), res
+            )
+        else:
+            res = sim(spec_b, sub_params, keys[gid], backend=backend,
+                      leap=leap, window=w_b)
         if s_b != n_real:
             res = jax.tree.map(lambda a: a[:n_real], res)
         out = SimResult(

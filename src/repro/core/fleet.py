@@ -63,6 +63,7 @@ import numpy as np
 
 from repro.core import calibration as calibration_lib
 from repro.core import engine as engine_lib
+from repro.core import workload
 from repro.core.engine import SimParams, SimResult, make_bank_params, simulate_bank
 from repro.core.scenarios import sample_scenarios
 from repro.core.topology import Grid
@@ -223,6 +224,9 @@ class Fleet:
         *,
         max_ticks: TicksLike = None,
         n_buckets: int = 1,
+        bucket_packing: str = "cost",
+        bucket_slack: Optional[float] = None,
+        bucket_counts: Optional[Sequence[int]] = None,
         pad_floors: Optional[Tuple[int, int, int]] = None,
         pad_multiple: int = 1,
         bucket_pad_floors: Optional[Sequence[Tuple[int, int, int]]] = None,
@@ -238,7 +242,12 @@ class Fleet:
         ``pad_floors = (legs, procs, links)`` sets the global pad floors
         (:func:`~repro.core.workload.compile_bank` ``pad_*``), the knob that
         lets differently-sized fleets share one jit trace; ``n_buckets`` /
-        ``bucket_pad_floors`` select and shape the bucketed warm path. A
+        ``bucket_packing`` / ``bucket_slack`` / ``bucket_counts`` /
+        ``bucket_pad_floors`` select and shape the bucketed warm path (see
+        :func:`~repro.core.workload.compile_bank`'s bucketing contract —
+        the fleet's ``leap`` flag doubles as the cost model's
+        ``bucket_cost_leap``, so a leap fleet packs by event estimates and
+        a tick fleet by window counts). A
         hashable ``cache_key`` memoizes the compiled bank in the fleet-level
         compile cache: it must uniquely identify the *pair set* (the pairs
         themselves are unhashable); every compile knob is folded into the
@@ -258,6 +267,10 @@ class Fleet:
         """
         mesh = engine_lib.resolve_mesh(devices)
         shards = int(mesh.devices.size) if mesh is not None else 1
+        slack = (
+            workload._DEFAULT_BUCKET_SLACK if bucket_slack is None
+            else float(bucket_slack)
+        )
         key = (
             None
             if cache_key is None
@@ -266,6 +279,10 @@ class Fleet:
                 cache_key,
                 _hashable_ticks(max_ticks),
                 n_buckets,
+                bucket_packing,
+                slack,
+                tuple(bucket_counts) if bucket_counts is not None else None,
+                bool(leap),  # leap selects the packing cost model
                 tuple(pad_floors) if pad_floors is not None else None,
                 pad_multiple,
                 tuple(map(tuple, bucket_pad_floors))
@@ -285,6 +302,10 @@ class Fleet:
                 pad_links=pk,
                 pad_multiple=pad_multiple,
                 n_buckets=n_buckets,
+                bucket_packing=bucket_packing,
+                bucket_slack=slack,
+                bucket_cost_leap=leap,
+                bucket_counts=bucket_counts,
                 bucket_pad_floors=bucket_pad_floors,
                 shards=shards,
             )
@@ -305,6 +326,9 @@ class Fleet:
         scale: float = 1.0,
         max_ticks: TicksLike = None,
         n_buckets: int = 1,
+        bucket_packing: str = "cost",
+        bucket_slack: Optional[float] = None,
+        bucket_counts: Optional[Sequence[int]] = None,
         pad_floors: Optional[Tuple[int, int, int]] = None,
         pad_multiple: int = 1,
         bucket_pad_floors: Optional[Sequence[Tuple[int, int, int]]] = None,
@@ -334,6 +358,9 @@ class Fleet:
             lambda: sample_scenarios(families, n, seed, scale=scale),
             max_ticks=max_ticks,
             n_buckets=n_buckets,
+            bucket_packing=bucket_packing,
+            bucket_slack=bucket_slack,
+            bucket_counts=bucket_counts,
             pad_floors=pad_floors,
             pad_multiple=pad_multiple,
             bucket_pad_floors=bucket_pad_floors,
@@ -428,6 +455,16 @@ class Fleet:
             (b.bank.pad_legs, b.bank.pad_procs, b.bank.pad_links)
             for b in self.bank.buckets
         ]
+
+    @property
+    def bucket_scenario_counts(self) -> Optional[Tuple[int, ...]]:
+        """Unpadded per-bucket member counts in packed order, reusable as
+        ``bucket_counts`` to pin another same-size fleet to this fleet's
+        bucket plan (the trace-sharing companion of
+        :attr:`bucket_pad_floors` under variable-size cost packing)."""
+        if not isinstance(self.bank, BucketedBank):
+            return None
+        return self.bank.bucket_scenario_counts
 
     def __repr__(self) -> str:
         kind = type(self.bank).__name__
@@ -792,6 +829,7 @@ class Fleet:
         if isinstance(bank, BucketedBank):
             arrays["bucket_of"] = np.asarray(bank.bucket_of)
             arrays["slot_of"] = np.asarray(bank.slot_of)
+            meta["packing"] = bank.packing
             meta["buckets"] = [
                 {
                     "scenario_ids": [int(i) for i in b.scenario_ids],
@@ -799,6 +837,8 @@ class Fleet:
                     "pad_procs": b.bank.pad_procs,
                     "pad_links": b.bank.pad_links,
                     "scenarios": b.bank.n_scenarios,
+                    "cost": float(b.cost),
+                    "cost_share": float(b.cost_share),
                 }
                 for b in bank.buckets
             ]
@@ -846,7 +886,16 @@ class Fleet:
                 padded = int(info.get("scenarios", len(ids)))
                 if padded > len(ids):
                     sub = pad_bank_scenarios(sub, count=padded)
-                buckets.append(BankBucket(scenario_ids=ids, bank=sub))
+                buckets.append(
+                    BankBucket(
+                        scenario_ids=ids,
+                        bank=sub,
+                        # .get defaults: saves from before the cost-packing
+                        # format carry no cost metadata (still format 1)
+                        cost=float(info.get("cost", 0.0)),
+                        cost_share=float(info.get("cost_share", 0.0)),
+                    )
+                )
             bank = BucketedBank(
                 **{
                     f.name: getattr(mono, f.name)
@@ -855,6 +904,7 @@ class Fleet:
                 bucket_of=arrays["bucket_of"],
                 slot_of=arrays["slot_of"],
                 buckets=buckets,
+                packing=str(meta.get("packing", "count")),
             )
         opts = dict(meta.get("run_opts") or {})
         resolved = opts.pop("resolved_window", None)

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -56,6 +57,23 @@ __all__ = [
 PAD_PROFILE = -1
 PAD_PROTOCOL = -1
 PAD_BG_PERIOD = 1 << 30
+
+# --- bucket work-cost model (see compile_bank) -----------------------------
+# Per-scenario cost ~= units * (_COST_STEP_BASE + pow2ceil(n_legs)): each
+# engine iteration of a bucket costs a fixed base plus a term linear in the
+# bucket's (power-of-two-bracketed) leg pad, and a scenario forces as many
+# iterations as its own event count (leap) or fused-window count (tick).
+# The constants were fitted on the standard 64-scenario fleet against
+# measured per-bucket walls (c(S, T) ~ 6 + S*(6.4 + 0.28*T) us/iter plus a
+# ~0.22 ms dispatch overhead per bucket program); only their *ratios*
+# matter for packing, so they are dimensionless here.
+_COST_STEP_BASE = 104.0
+# Per-bucket fixed dispatch cost in the same units, added once per bucket
+# when normalizing cost shares (a bucket is never cheaper than one dispatch).
+_COST_DISPATCH_BASE = 1770.0
+# Default budget slack for cost packing: a bucket may exceed the ideal
+# equal-share cost by this factor before it is closed.
+_DEFAULT_BUCKET_SLACK = 1.25
 
 
 class AccessProfileKind(enum.Enum):
@@ -226,6 +244,33 @@ class LegTable:
         )
         return max(1, min(legacy, tight))
 
+    def leap_event_estimate(self) -> int:
+        """Estimated event-leap iterations to finish this campaign.
+
+        The leap engine advances each (scenario, replica) element to its own
+        next event, so a campaign's iteration count tracks how many
+        *distinct* completion/release events its legs generate, not its tick
+        bound. Two regimes bracket it:
+
+        - serial-ish campaigns finish one leg per few iterations:
+          ``0.75 * n_legs + n_releases``;
+        - wide parallel campaigns finish identical legs together, so the
+          count collapses toward the number of distinct ``(release, size)``
+          classes: ``0.9 * u_rs + n_releases + 2``.
+
+        The minimum of the two matched measured leap-step counts within
+        ~1.3x on the standard sampled fleet (steps 6-54), which is accurate
+        enough for the work-cost bucket packing in :func:`compile_bank` —
+        the estimate only needs to rank and roughly proportion scenarios.
+        """
+        rel = np.asarray(self.release)
+        n_rel = len(np.unique(rel))
+        u_rs = len(
+            {(int(r), round(float(s), 4)) for r, s in zip(rel, self.size_mb)}
+        )
+        bound = min(0.75 * self.n_legs + n_rel, 0.9 * u_rs + n_rel + 2)
+        return max(1, int(round(bound)))
+
 
 def compile_campaign(grid: Grid, campaign: Campaign) -> LegTable:
     """Compile a campaign against a grid into the dense leg table."""
@@ -388,6 +433,92 @@ def _union_protocols(tables: Sequence["LegTable"]) -> List[str]:
     return sorted(set().union(*(t.protocol_names for t in tables)))
 
 
+def _pow2ceil(n: int) -> int:
+    t = 1
+    while t < n:
+        t *= 2
+    return t
+
+
+def _scenario_costs(
+    tables: Sequence["LegTable"], expected: np.ndarray, *, leap: bool
+) -> np.ndarray:
+    """Per-scenario work-cost vector for bucket packing (see compile_bank).
+
+    ``cost_i = units_i * (_COST_STEP_BASE + pow2ceil(n_legs_i))`` where
+    ``units`` is the engine-iteration estimate: :meth:`LegTable.
+    leap_event_estimate` under the leap engine, else the expected tick bound
+    divided by the resolved fused window. The leg tier uses the power-of-two
+    bracket because buckets of similar leg counts compile to the same padded
+    program — the packing keys on ``(cost, n_legs)`` so leg-homogeneous
+    scenarios land together and the tier is what their shared pad costs.
+    """
+    if leap:
+        units = np.array(
+            [t.leap_event_estimate() for t in tables], np.float64
+        )
+    else:
+        # late import: engine imports workload at module level
+        from repro.core.engine import _resolve_window
+
+        window = max(1, int(_resolve_window(None, False)))
+        units = np.maximum(
+            1.0, np.ceil(np.asarray(expected, np.float64) / window)
+        )
+    tier = np.array([_pow2ceil(t.n_legs) for t in tables], np.float64)
+    return units * (_COST_STEP_BASE + tier)
+
+
+def _pack_by_cost(
+    costs: np.ndarray, legs: np.ndarray, n_buckets: int, slack: float
+) -> List[np.ndarray]:
+    """Greedy budgeted sweep in ascending (cost, n_legs) order.
+
+    Buckets are closed when the next scenario would push their total past
+    ``slack * total_cost / n_buckets``; a scenario whose own cost exceeds
+    the budget becomes a singleton bucket (long-tail split). The realized
+    bucket count is therefore *variable* — typically close to ``n_buckets``
+    but free to differ so no bucket carries an outsized cost share.
+    """
+    n = len(costs)
+    order = np.lexsort((np.arange(n), legs, costs))
+    budget = float(slack) * float(costs.sum()) / max(1, int(n_buckets))
+    groups: List[np.ndarray] = []
+    cur: List[int] = []
+    acc = 0.0
+    for i in order:
+        ci = float(costs[i])
+        if cur and acc + ci > budget:
+            groups.append(np.asarray(cur, np.int64))
+            cur, acc = [], 0.0
+        cur.append(int(i))
+        acc += ci
+        if ci > budget:  # long-tail split: singleton at native pads
+            groups.append(np.asarray(cur, np.int64))
+            cur, acc = [], 0.0
+    if cur:
+        groups.append(np.asarray(cur, np.int64))
+    return groups
+
+
+def _split_by_counts(
+    order: np.ndarray, counts: Sequence[int], n: int
+) -> List[np.ndarray]:
+    """Split a packing order into explicitly-sized contiguous groups."""
+    counts = [int(c) for c in counts]
+    if any(c <= 0 for c in counts):
+        raise ValueError(f"bucket_counts entries must be positive: {counts}")
+    if sum(counts) != n:
+        raise ValueError(
+            f"bucket_counts sum to {sum(counts)}, expected {n} scenarios"
+        )
+    groups, pos = [], 0
+    for c in counts:
+        groups.append(np.asarray(order[pos : pos + c], np.int64))
+        pos += c
+    return groups
+
+
 @dataclasses.dataclass
 class ScenarioBank:
     """``N`` compiled ``(Grid, Campaign)`` pairs padded to shared shapes.
@@ -473,14 +604,23 @@ class ScenarioBank:
 
 @dataclasses.dataclass
 class BankBucket:
-    """One max_ticks/size-homogeneous sub-bank of a :class:`BucketedBank`.
+    """One work-cost-homogeneous sub-bank of a :class:`BucketedBank`.
 
     ``scenario_ids`` are the *original* bank indices (ascending), so slot
     ``s`` of ``bank`` is scenario ``scenario_ids[s]`` of the parent.
+
+    ``cost`` is the bucket's total modelled work (sum of the members'
+    per-scenario costs, see :func:`compile_bank`); ``cost_share`` is its
+    dispatch-shifted fraction ``(cost + D0) / sum_b (cost_b + D0)`` of the
+    whole bank's work — the expected fraction of bank wall time this bucket
+    accounts for. Both are metadata: the engine ignores them, benchmarks
+    use them to cost-normalize per-bucket throughput.
     """
 
     scenario_ids: np.ndarray  # [S_b] i32, ascending original indices
     bank: ScenarioBank  # sub-bank with its own (smaller) pads
+    cost: float = 0.0  # modelled total work of the members
+    cost_share: float = 0.0  # dispatch-shifted share of bank-wide work
 
 
 @dataclasses.dataclass
@@ -499,10 +639,22 @@ class BucketedBank(ScenarioBank):
     bucket_of: np.ndarray  # [N] i32 bucket index per original scenario
     slot_of: np.ndarray  # [N] i32 slot within the bucket
     buckets: List[BankBucket]
+    packing: str = "cost"  # bucket_packing mode the plan was built with
 
     @property
     def n_buckets(self) -> int:
         return len(self.buckets)
+
+    @property
+    def bucket_scenario_counts(self) -> Tuple[int, ...]:
+        """Unpadded member count per bucket, in packed order.
+
+        Feeding these back as ``compile_bank(..., bucket_counts=...)``
+        reproduces this bank's grouping *sizes* exactly on another fleet,
+        which (joined with matching ``bucket_pad_floors``) pins per-bucket
+        trace shapes across fleets.
+        """
+        return tuple(len(b.scenario_ids) for b in self.buckets)
 
 
 def _stack_tables(
@@ -591,6 +743,10 @@ def compile_bank(
     pad_links: Optional[int] = None,
     pad_multiple: int = 1,
     n_buckets: int = 1,
+    bucket_packing: str = "cost",
+    bucket_slack: float = _DEFAULT_BUCKET_SLACK,
+    bucket_cost_leap: bool = True,
+    bucket_counts: Optional[Sequence[int]] = None,
     bucket_pad_floors: Optional[Sequence[Tuple[int, int, int]]] = None,
     shards: int = 1,
 ) -> ScenarioBank:
@@ -621,22 +777,50 @@ def compile_bank(
     in-trace under the identical inert contract when run on a mesh.
 
     **Bucketing contract** (``n_buckets > 1`` returns a
-    :class:`BucketedBank`): scenarios are sorted by the key
-    ``(min(resolved max_ticks, table-typical bound), resolved max_ticks,
-    n_legs)`` — the typical bound is ``max_ticks_upper_bound(
-    bg_override_cap=0.0)``, which tracks realized simulated length where
-    the resolved (override-robust) cap does not — and split into
-    ``n_buckets`` contiguous, near-equal-count groups, so each sub-bank
-    groups scenarios of similar simulated length and size. Each bucket is
+    :class:`BucketedBank`): scenarios are grouped into sub-banks, each
     padded to **its own** member maxima (optionally raised by
     ``bucket_pad_floors[b] = (legs, procs, links)`` and rounded to
-    ``pad_multiple``), and its engine trace runs only until the bucket's own
-    slowest scenario finishes — no scenario ticks past its bucket's bound,
-    which is what closes the warm-bank throughput gap of monolithic padding.
-    The engine also resolves its fused tick window per bucket (capped at
-    the bucket's tick bound's power-of-two bracket), so the bandwidth-aware
-    :meth:`LegTable.max_ticks_upper_bound` both groups scenarios of similar
-    simulated length and keeps short buckets from paying long windows.
+    ``pad_multiple``), and each engine trace runs only until the bucket's
+    own slowest scenario finishes — no scenario ticks past its bucket's
+    bound, which is what closes the warm-bank throughput gap of monolithic
+    padding. The engine also resolves its fused tick window per bucket
+    (capped at the bucket's tick bound's power-of-two bracket).
+
+    How scenarios are grouped depends on ``bucket_packing``:
+
+    - ``"cost"`` (default): each scenario is scored with the work-cost
+      model ``cost_i = units_i * (_COST_STEP_BASE + pow2ceil(n_legs_i))``
+      where ``units`` is the engine-iteration estimate
+      (:meth:`LegTable.leap_event_estimate` when ``bucket_cost_leap``,
+      else ``ceil(min(resolved, typical) / fused window)`` with the
+      typical bound ``max_ticks_upper_bound(bg_override_cap=0.0)``).
+      Scenarios are swept in ascending ``(cost, n_legs)`` order into
+      buckets closed at the budget
+      ``bucket_slack * total_cost / n_buckets``; a scenario whose own cost
+      exceeds the budget becomes a **singleton long-tail bucket** at its
+      native pads (the engine widens such buckets across the replica axis
+      so their fused kernels still fill their tiles). Buckets are
+      *variable-size* — the realized bucket count may differ from
+      ``n_buckets`` — so bucket wall times equalize by total work, not by
+      member count: no straggler bucket carries a multiple of the others'
+      cost (the per-bucket warm-throughput spread this replaces was 4.4x).
+    - ``"count"``: the legacy plan — sort by ``(min(resolved, typical),
+      resolved, n_legs)`` and split into exactly ``n_buckets`` contiguous
+      near-equal-count groups. Kept for comparison and for callers that
+      need a fixed bucket count.
+
+    ``bucket_counts`` overrides both: the active mode's packing *order* is
+    split into exactly these group sizes (positive, summing to the fleet
+    size). Feed one fleet's ``bucket_scenario_counts`` back through this to
+    pin another same-size fleet to an identical plan, so per-bucket trace
+    shapes (after joining ``bucket_pad_floors``) match across fleets.
+
+    ``n_buckets`` larger than the fleet is clamped to the fleet size with a
+    warning (every bucket a singleton) rather than rejected.
+
+    Every bucket records its modelled ``cost`` and dispatch-shifted
+    ``cost_share`` (under both packing modes) for cost-normalized
+    throughput reporting; see :class:`BankBucket`.
 
     The **scenario index map is stable**: within each bucket, scenarios keep
     ascending original order, so ``bucket_of[i]`` / ``slot_of[i]`` are
@@ -645,9 +829,10 @@ def compile_bank(
     stacked arrays (and therefore every params builder) always use the
     original scenario order with the global pads; the global ``pad_*``
     floors apply only to that monolithic view, ``bucket_pad_floors`` only to
-    the sub-banks. Two fleets bucketed with the same ``n_buckets``, equal
-    fleet size, and matching bucket pad shapes reuse each bucket's jit trace
-    (zero retraces — see ``benchmarks/bank_throughput.py``).
+    the sub-banks (validated against the *realized* bucket count). Two
+    fleets bucketed with the same plan sizes and matching bucket pad shapes
+    reuse each bucket's jit trace (zero retraces — see
+    ``benchmarks/bank_throughput.py``).
     """
     if not pairs:
         raise ValueError("compile_bank needs at least one (grid, campaign)")
@@ -661,25 +846,28 @@ def compile_bank(
     proto_names = _union_protocols(tables)
     ticks = _resolve_ticks(tables, max_ticks)
 
-    if n_buckets <= 1:
+    if n_buckets <= 1 and bucket_counts is None:
         return _stack_tables(tables, names, ticks, T, P, L, proto_names)
 
-    if n_buckets > n:
-        raise ValueError(f"n_buckets={n_buckets} exceeds {n} scenarios")
-    if bucket_pad_floors is not None and len(bucket_pad_floors) != n_buckets:
+    if bucket_packing not in ("cost", "count"):
         raise ValueError(
-            f"bucket_pad_floors: expected {n_buckets} entries, "
-            f"got {len(bucket_pad_floors)}"
+            f"bucket_packing must be 'cost' or 'count': {bucket_packing!r}"
         )
+    if n_buckets > n:
+        warnings.warn(
+            f"n_buckets={n_buckets} exceeds {n} scenarios; clamping to {n} "
+            f"(every bucket a singleton)",
+            stacklevel=2,
+        )
+        n_buckets = n
 
-    # sort by *expected* simulated length and split into near-equal
-    # contiguous groups. The resolved cap is robust to calibration bg
+    # Work-cost scoring. The resolved cap is robust to calibration bg
     # overrides (see max_ticks_upper_bound's bg_override_cap) and therefore
     # a poor predictor of how long a scenario actually runs; the
     # table-typical bound (override cap 0 — the compiled moments only)
-    # tracks realized length, which is what groups buckets so no fast
-    # scenario waits on a slow one's tick chain. Binding explicit caps
-    # still dominate via the min.
+    # tracks realized length. Binding explicit caps still dominate via the
+    # min. Costs are computed under *both* packing modes so every bucket
+    # carries cost metadata.
     typical = np.array(
         [t.max_ticks_upper_bound(bg_override_cap=0.0) for t in tables],
         np.int64,
@@ -687,8 +875,30 @@ def compile_bank(
     resolved = np.array(ticks, np.int64)
     expected = np.minimum(resolved, typical)
     legs = np.array([t.n_legs for t in tables], np.int64)
-    order = np.lexsort((legs, resolved, expected))
-    groups = [g for g in np.array_split(order, n_buckets) if len(g)]
+    costs = _scenario_costs(tables, expected, leap=bucket_cost_leap)
+
+    if bucket_counts is not None:
+        if bucket_packing == "cost":
+            order = np.lexsort((np.arange(n), legs, costs))
+        else:
+            order = np.lexsort((legs, resolved, expected))
+        groups = _split_by_counts(order, bucket_counts, n)
+    elif bucket_packing == "cost":
+        groups = _pack_by_cost(costs, legs, n_buckets, bucket_slack)
+    else:
+        order = np.lexsort((legs, resolved, expected))
+        groups = [g for g in np.array_split(order, n_buckets) if len(g)]
+
+    if bucket_pad_floors is not None and len(bucket_pad_floors) != len(groups):
+        raise ValueError(
+            f"bucket_pad_floors: expected {len(groups)} entries (the "
+            f"realized bucket count), got {len(bucket_pad_floors)}"
+        )
+
+    shifted = np.array(
+        [float(costs[g].sum()) + _COST_DISPATCH_BASE for g in groups]
+    )
+    shares = shifted / shifted.sum()
 
     bucket_of = np.zeros(n, np.int32)
     slot_of = np.zeros(n, np.int32)
@@ -710,7 +920,14 @@ def compile_bank(
         )
         if shards > 1:
             sub = pad_bank_scenarios(sub, shards)
-        buckets.append(BankBucket(scenario_ids=ids, bank=sub))
+        buckets.append(
+            BankBucket(
+                scenario_ids=ids,
+                bank=sub,
+                cost=float(costs[ids].sum()),
+                cost_share=float(shares[b]),
+            )
+        )
 
     # the monolithic view must dominate every bucket pad (the engine slices
     # bank-wide params down to each bucket's pads), so explicit
@@ -725,6 +942,7 @@ def compile_bank(
         bucket_of=bucket_of,
         slot_of=slot_of,
         buckets=buckets,
+        packing=bucket_packing,
     )
 
 

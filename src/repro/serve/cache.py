@@ -38,10 +38,24 @@ Signature = Tuple[int, int, int]
 def quantize_axis(n: int, floor: int) -> int:
     """Smallest power-of-two tier >= max(n, floor) — the bracketing that
     keeps the universe of slot-bank shapes (and therefore traces) small
-    while every campaign still fits its tier."""
-    tier = max(1, int(floor))
-    # round the floor itself up to a power of two so tiers are stable
-    while tier < max(n, floor):
+    while every campaign still fits its tier.
+
+    The floor itself is rounded up to a power of two *first*, so tiers are
+    true powers of two regardless of the configured floor: doubling from a
+    non-power-of-two floor used to emit ``floor * 2**k`` tiers instead
+    (``quantize_axis(13, 12)`` returned 24, and ``quantize_axis(5, 12)``
+    returned the non-power-of-two floor 12 verbatim), splitting what should
+    be one 16-tier across two shapes — two traces where the contract
+    promises one. Warm-store migration: directories named for the old
+    ``floor * 2**k`` tiers (``warm_dir/slot_12x...``) can never match a
+    corrected signature, so a restarted server simply misses the warm cache
+    for them and rebuilds the template at the right tier — stale dirs are
+    inert leftovers, safe to delete.
+    """
+    tier = 1
+    while tier < max(1, int(floor)):
+        tier *= 2
+    while tier < n:
         tier *= 2
     return tier
 

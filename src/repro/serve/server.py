@@ -226,8 +226,20 @@ class SimServer:
                 if not queue:
                     break
                 pending = queue.popleft()
-                entries.append((slot, pending.admission))
-                rid = pending.admission.request.rid
+                adm = pending.admission
+                if adm.request.n_replicas > self.config.replicas:
+                    # defensive: submit() rejects oversized requests before
+                    # queueing, so an entry like this means the queue was
+                    # poked externally — fail it loudly instead of letting
+                    # it cycle (admitted-but-never-live would spin drain)
+                    raise ValueError(
+                        f"request {adm.request.rid} asks for "
+                        f"{adm.request.n_replicas} replicas but the server "
+                        f"runs {self.config.replicas}; it can never be "
+                        "admitted"
+                    )
+                entries.append((slot, adm))
+                rid = adm.request.rid
                 self._submitted_at[rid] = pending.submitted_at
                 self._admitted_at[rid] = now
         if entries:
@@ -235,6 +247,9 @@ class SimServer:
         if bank.occupied:
             bank.step()
             return True
+        # no resident work: this bank is busy only if requests are still
+        # queued behind it (queue may be None when the signature has no
+        # queue at all — treat exactly like an empty queue)
         return bool(queue)
 
     def step(self) -> bool:
@@ -264,12 +279,44 @@ class SimServer:
             raise KeyError(f"unknown request id {rid}")
         return self.results.get(rid)
 
+    def _progress_snapshot(self) -> tuple:
+        """Monotone progress counters: every legitimate busy round advances
+        at least one (admission bumps ``admitted``, resident work bumps
+        ``windows_total``, completion bumps ``retired``/``results``)."""
+        return (
+            sum(b.admitted for b in self.banks.values()),
+            sum(b.retired for b in self.banks.values()),
+            sum(b.windows_total for b in self.banks.values()),
+            len(self.results),
+        )
+
     def drain(self, *, max_rounds: int = 1_000_000) -> List[RequestResult]:
         """Step until every submitted request has finished; returns the
         results completed since the last ``drain`` in completion order
-        (each exactly once)."""
+        (each exactly once).
+
+        Liveness guard: a busy round that advances **no** progress counter
+        (no admission, no window stepped, no retirement) means some queued
+        request can never be admitted — e.g. a queue entry that bypassed
+        :meth:`submit` validation. Such a stall raises immediately, naming
+        the stuck request ids, instead of spinning silently to
+        ``max_rounds``."""
         rounds = 0
+        before = self._progress_snapshot()
         while self.step():
+            after = self._progress_snapshot()
+            if after == before:
+                stuck = [
+                    p.admission.request.rid
+                    for q in self.queues.values()
+                    for p in q
+                ]
+                raise RuntimeError(
+                    "drain stalled: a scheduling round reported busy but "
+                    "admitted, stepped, and retired nothing — queued "
+                    f"request ids {stuck} can never be admitted"
+                )
+            before = after
             rounds += 1
             if rounds >= max_rounds:
                 raise RuntimeError(

@@ -2,8 +2,9 @@
 
 Three layers of the warm-path rework are pinned against each other here:
 
-- ``compile_bank(..., n_buckets=k)`` — max_ticks-bucketed sub-banks with a
-  stable scenario -> (bucket, slot) index map and per-bucket pads;
+- ``compile_bank(..., n_buckets=k)`` — work-cost-packed sub-banks (with the
+  legacy ``bucket_packing="count"`` plan kept for comparison) with a stable
+  scenario -> (bucket, slot) index map and per-bucket pads;
 - ``engine.simulate_bank`` on a :class:`BucketedBank` — per-bucket traces
   scattered back into the caller's original ``[N, R]`` order;
 - the manual ``[S, R, ...]`` tick/leap loop on ``ops.grid_tick_bank``
@@ -56,7 +57,11 @@ def _assert_results_equal(a, b, fields=FIELDS, rtol=1e-5, atol=1e-5, msg=""):
 def test_bucketed_bank_index_map_is_stable_and_complete():
     bank = compile_bank(_pairs(n=9, seed=2), n_buckets=3)
     assert isinstance(bank, BucketedBank)
-    assert bank.n_buckets == 3
+    # cost packing: the realized bucket count is variable (close to the
+    # hint, never zero) and the plan records its packing mode
+    assert 1 <= bank.n_buckets <= bank.n_scenarios
+    assert bank.packing == "cost"
+    assert sum(bank.bucket_scenario_counts) == bank.n_scenarios
     seen = set()
     for b, bucket in enumerate(bank.buckets):
         ids = np.asarray(bucket.scenario_ids)
@@ -74,9 +79,19 @@ def test_bucketed_bank_index_map_is_stable_and_complete():
             )
             assert int(bucket.bank.max_ticks[slot]) == int(bank.max_ticks[i])
     assert seen == set(range(bank.n_scenarios))
-    # buckets group by simulated length: bucket tick bounds are sorted
-    bounds = [int(b.bank.max_ticks.max()) for b in bank.buckets]
-    assert bounds == sorted(bounds)
+    # every bucket carries cost metadata; shares are a distribution
+    assert all(b.cost > 0 for b in bank.buckets)
+    shares = [b.cost_share for b in bank.buckets]
+    assert all(s > 0 for s in shares)
+    assert abs(sum(shares) - 1.0) < 1e-9
+    # budget contract: only singleton (long-tail) buckets may exceed the
+    # packing budget — multi-member buckets close before overflowing it
+    from repro.core.workload import _DEFAULT_BUCKET_SLACK
+
+    total = sum(b.cost for b in bank.buckets)
+    budget = _DEFAULT_BUCKET_SLACK * total / 3
+    for b in bank.buckets:
+        assert b.cost <= budget or len(b.scenario_ids) == 1
 
 
 def test_bucketed_bank_per_bucket_pads_not_larger_than_global():
@@ -91,18 +106,24 @@ def test_bucketed_bank_per_bucket_pads_not_larger_than_global():
 
 
 def test_bucket_pad_floors_and_trace_reuse_across_fleets():
-    """Two fleets bucketed to matching shapes share every bucket trace."""
+    """Two fleets pinned to one plan (counts + floors) share every bucket
+    trace: probe fleet 1's natural cost packing, force fleet 2 onto the
+    same group sizes via ``bucket_counts``, join the pad floors."""
     p1, p2 = _pairs(n=6, seed=10), _pairs(n=6, seed=77)
     b1 = compile_bank(p1, n_buckets=2, max_ticks=20_000)
-    b2 = compile_bank(p2, n_buckets=2, max_ticks=20_000)
+    counts = b1.bucket_scenario_counts
+    b2 = compile_bank(p2, n_buckets=2, max_ticks=20_000, bucket_counts=counts)
+    assert b2.bucket_scenario_counts == counts
     floors = [
         (max(x.bank.pad_legs, y.bank.pad_legs),
          max(x.bank.pad_procs, y.bank.pad_procs),
          max(x.bank.pad_links, y.bank.pad_links))
         for x, y in zip(b1.buckets, b2.buckets)
     ]
-    b1 = compile_bank(p1, n_buckets=2, max_ticks=20_000, bucket_pad_floors=floors)
-    b2 = compile_bank(p2, n_buckets=2, max_ticks=20_000, bucket_pad_floors=floors)
+    b1 = compile_bank(p1, n_buckets=2, max_ticks=20_000,
+                      bucket_counts=counts, bucket_pad_floors=floors)
+    b2 = compile_bank(p2, n_buckets=2, max_ticks=20_000,
+                      bucket_counts=counts, bucket_pad_floors=floors)
     keys = _keys(6, 2)
     # identically-shaped buckets share one trace: expect distinct shapes
     expected = len({
@@ -121,10 +142,24 @@ def test_bucket_pad_floors_and_trace_reuse_across_fleets():
 
 def test_compile_bank_bucket_validation():
     pairs = _pairs(n=4)
-    with pytest.raises(ValueError, match="n_buckets"):
-        compile_bank(pairs, n_buckets=9)
+    # n_buckets beyond the fleet clamps (singletons) instead of raising
+    with pytest.warns(UserWarning, match="n_buckets=9 exceeds 4"):
+        bank = compile_bank(pairs, n_buckets=9)
+    assert isinstance(bank, BucketedBank)
+    assert bank.n_buckets <= 4
+    # floors are validated against the *realized* bucket count; count
+    # packing realizes exactly n_buckets groups, so a short floors list
+    # must raise
     with pytest.raises(ValueError, match="bucket_pad_floors"):
-        compile_bank(pairs, n_buckets=2, bucket_pad_floors=[(1, 1, 1)])
+        compile_bank(pairs, n_buckets=2, bucket_packing="count",
+                     bucket_pad_floors=[(1, 1, 1)])
+    with pytest.raises(ValueError, match="bucket_packing"):
+        compile_bank(pairs, n_buckets=2, bucket_packing="magic")
+    # bucket_counts must be positive and sum to the fleet size
+    with pytest.raises(ValueError, match="bucket_counts"):
+        compile_bank(pairs, n_buckets=2, bucket_counts=[3, 2])
+    with pytest.raises(ValueError, match="bucket_counts"):
+        compile_bank(pairs, n_buckets=2, bucket_counts=[4, 0])
     # n_buckets=1 keeps the plain ScenarioBank type
     bank = compile_bank(pairs, n_buckets=1)
     assert isinstance(bank, ScenarioBank)
@@ -184,14 +219,69 @@ def test_bucketed_padding_is_inert_per_bucket():
 
 def test_bucketed_stochastic_bg_statistically_equivalent():
     """With sigma > 0 the bucketed run is draw-for-draw identical to the
-    monolithic engine (same per-(scenario, replica) key streams)."""
+    monolithic engine (same per-(scenario, replica) key streams) — bitwise,
+    not merely close: the scatter-back copies the sub-bank results
+    verbatim."""
     n = 6
     bank = compile_bank(_pairs(n=n, seed=6), n_buckets=2)
     params = make_bank_params(bank, bg_mu=4.0, bg_sigma=2.0)
     keys = _keys(n, 4, seed=6)
     res_b = simulate_bank(bank, params, keys, leap=False)
     res_m = simulate_bank(bank, params, keys, leap=False, bucketed=False)
-    _assert_results_equal(res_b, res_m, msg="stochastic ")
+    for f in FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res_b, f)), np.asarray(getattr(res_m, f)),
+            err_msg=f"stochastic bitwise {f}",
+        )
+
+
+@pytest.mark.parametrize("leap", [False, True])
+def test_cost_vs_count_packing_bitwise(leap):
+    """Cost-packed and legacy count-packed plans of the same fleet produce
+    bitwise-identical results (packing only regroups work; the per-element
+    physics and RNG streams never see the plan)."""
+    n = 8
+    pairs = _pairs(n=n, seed=21)
+    b_cost = compile_bank(pairs, n_buckets=3, bucket_packing="cost")
+    b_count = compile_bank(pairs, n_buckets=3, bucket_packing="count")
+    assert b_cost.packing == "cost" and b_count.packing == "count"
+    # both modes carry cost metadata
+    for bank in (b_cost, b_count):
+        assert all(b.cost > 0 for b in bank.buckets)
+        assert abs(sum(b.cost_share for b in bank.buckets) - 1.0) < 1e-9
+    params_a = make_bank_params(b_cost, bg_mu=3.0, bg_sigma=1.5)
+    params_b = make_bank_params(b_count, bg_mu=3.0, bg_sigma=1.5)
+    keys = _keys(n, 4, seed=21)
+    res_a = simulate_bank(b_cost, params_a, keys, leap=leap)
+    res_b = simulate_bank(b_count, params_b, keys, leap=leap)
+    for f in FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res_a, f)), np.asarray(getattr(res_b, f)),
+            err_msg=f"leap={leap} cost-vs-count {f}",
+        )
+
+
+def test_singleton_longtail_buckets_bitwise_and_widened():
+    """A tiny slack forces singleton long-tail buckets; the engine widens
+    them across the replica axis (replicas=4 folds to [4, 1]) and the
+    results stay bitwise those of the monolithic bank."""
+    n = 8
+    pairs = _pairs(n=n, seed=22)
+    bank = compile_bank(pairs, n_buckets=4, bucket_slack=0.4)
+    singles = [b for b in bank.buckets if len(b.scenario_ids) == 1]
+    assert singles, "fixture must produce singleton long-tail buckets"
+    mono = compile_bank(pairs)
+    keys = _keys(n, 4, seed=22)
+    res_b = simulate_bank(bank, make_bank_params(bank), keys, leap=True)
+    res_m = simulate_bank(mono, make_bank_params(mono), keys, leap=True)
+    t = mono.pad_legs
+    for f in FIELDS:
+        a = np.asarray(getattr(res_b, f))
+        m = np.asarray(getattr(res_m, f))
+        np.testing.assert_array_equal(
+            a[..., :t] if a.ndim == 3 else a, m,
+            err_msg=f"singleton widened {f}",
+        )
 
 
 # ---------------------------------------------------------------------------

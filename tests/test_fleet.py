@@ -262,6 +262,39 @@ def test_save_load_roundtrips_bucketed_bank(tmp_path):
         loaded.bank.scenario_table(0)
 
 
+def test_singleton_longtail_save_load_and_shards(tmp_path):
+    """Cost packing's singleton long-tail buckets survive persistence and
+    shard padding: a tiny slack forces singletons, shards=2 pads each
+    singleton sub-bank to 2 rows (inert), Fleet.save/load restores the
+    padded shapes plus the cost metadata, and every variant stays bitwise
+    the plain monolithic run."""
+    pairs = sample_scenarios(n=8, seed=23)
+    bank = compile_bank(pairs, n_buckets=4, bucket_slack=0.4, shards=2)
+    singles = [b for b in bank.buckets if len(b.scenario_ids) == 1]
+    assert singles, "fixture must produce singleton long-tail buckets"
+    for b in singles:  # shard padding rounds the singleton up to 2 rows
+        assert b.bank.n_scenarios == 2
+    fleet = Fleet(bank, leap=True)
+    loaded = Fleet.load(fleet.save(str(tmp_path / "longtail")))
+    assert loaded.bank.packing == "cost"
+    for lb, fb in zip(loaded.bank.buckets, fleet.bank.buckets):
+        np.testing.assert_array_equal(lb.scenario_ids, fb.scenario_ids)
+        assert lb.bank.n_scenarios == fb.bank.n_scenarios
+        assert lb.cost == fb.cost and lb.cost_share == fb.cost_share
+        assert lb.cost > 0 and 0 < lb.cost_share < 1
+    plain = Fleet(compile_bank(pairs), leap=True)
+    keys = _keys(8, 4, seed=23)
+    res_plain = plain.run(keys=keys)
+    t = plain.pad_legs
+    for other, msg in ((fleet, "sharded singleton "),
+                       (loaded, "loaded singleton ")):
+        res = other.run(keys=keys)
+        sliced = type(res)(*[
+            a[..., :t] if a.ndim == 3 else a for a in res
+        ])
+        _assert_bitwise_equal(res_plain, sliced, msg=msg)
+
+
 def test_save_load_roundtrips_monolithic_bank(tmp_path):
     fleet = Fleet.from_scenarios(n=3, seed=8, max_ticks=10_000)
     loaded = Fleet.load(fleet.save(str(tmp_path / "mono")))
@@ -326,6 +359,20 @@ def test_from_pairs_cache_key_folds_compile_knobs():
     assert f2.bank is not f1.bank
     assert f3.bank is not f1.bank and isinstance(f3.bank, BucketedBank)
     assert f4.bank is not f1.bank and f4.pad_legs == 64
+    # the cost-packing knobs are folded in too: packing mode, slack,
+    # explicit counts, and leap (which selects the packing cost model)
+    f5 = Fleet.from_pairs(pairs, max_ticks=5_000, cache_key="k", n_buckets=2,
+                          bucket_packing="count")
+    f6 = Fleet.from_pairs(pairs, max_ticks=5_000, cache_key="k", n_buckets=2,
+                          bucket_slack=2.0)
+    f7 = Fleet.from_pairs(pairs, max_ticks=5_000, cache_key="k", n_buckets=2,
+                          bucket_counts=f3.bucket_scenario_counts)
+    f8 = Fleet.from_pairs(pairs, max_ticks=5_000, cache_key="k", n_buckets=2,
+                          leap=True)
+    assert f5.bank is not f3.bank and f5.bank.packing == "count"
+    assert f6.bank is not f3.bank
+    assert f7.bank is not f3.bank
+    assert f8.bank is not f3.bank
 
 
 def test_subset_bank_rejects_pads_beyond_parent():

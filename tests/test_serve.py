@@ -193,6 +193,61 @@ def test_duplicate_rid_and_replica_overflow_rejected():
         server.poll(999)
 
 
+def test_drain_stall_raises_instead_of_spinning(monkeypatch):
+    """A queued request that can never be admitted (here: every slot
+    reported unavailable) must terminate drain with a diagnostic naming the
+    stuck rid, not spin silently toward the 1M-round cap."""
+    from repro.serve import slots as slots_mod
+
+    (g, c), = sample_scenarios(n=1, seed=11, scale=0.5)
+    server = SimServer(ServeConfig(slots=2, replicas=1))
+    server.submit(SimRequest(rid=7, grid=g, campaign=c))
+    monkeypatch.setattr(slots_mod.SlotBank, "free_slots", lambda self: [])
+    with pytest.raises(RuntimeError, match=r"drain stalled.*\[7\]"):
+        server.drain()
+    assert server.rounds < 10, "stall must be detected immediately"
+
+
+def test_round_one_rejects_unadmittable_queue_entry():
+    """submit() rejects oversized requests before queueing; an entry that
+    reaches the queue anyway (external poke) must fail the scheduling round
+    loudly instead of being admitted into replica lanes that don't exist."""
+    import dataclasses as dc
+
+    (g, c), = sample_scenarios(n=1, seed=12, scale=0.5)
+    server = SimServer(ServeConfig(slots=2, replicas=1))
+    server.submit(SimRequest(rid=3, grid=g, campaign=c))
+    (sig, queue), = server.queues.items()
+    pending = queue[0]
+    bad_req = dc.replace(pending.admission.request, n_replicas=5)
+    queue[0] = pending._replace(
+        admission=dc.replace(pending.admission, request=bad_req)
+    )
+    with pytest.raises(ValueError, match="request 3 asks for 5 replicas"):
+        server.drain()
+
+
+def test_quantize_axis_emits_true_power_of_two_tiers():
+    """Regression: a non-power-of-two floor used to leak into the tier
+    sequence (quantize_axis(5, 12) == 12, quantize_axis(13, 12) == 24),
+    splitting one power-of-two tier across two trace shapes. The floor is
+    now rounded up to a power of two before bracketing ``n``."""
+    from repro.serve.cache import quantize_axis
+
+    assert quantize_axis(5, 12) == 16
+    assert quantize_axis(13, 12) == 16
+    assert quantize_axis(17, 12) == 32
+    assert quantize_axis(5, 8) == 8
+    assert quantize_axis(9, 8) == 16
+    assert quantize_axis(1, 1) == 1
+    assert quantize_axis(3, 1) == 4
+    # every tier is a power of two for any floor
+    for floor in (1, 3, 7, 8, 12, 100):
+        for n in range(1, 300, 7):
+            t = quantize_axis(n, floor)
+            assert t >= n and t >= floor and (t & (t - 1)) == 0
+
+
 def test_metrics_expose_slot_observability():
     pairs = sample_scenarios(n=5, seed=8, scale=0.5)
     server = SimServer(ServeConfig(slots=4, replicas=1))
