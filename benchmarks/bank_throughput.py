@@ -529,6 +529,17 @@ def main() -> None:
         "bank_warm_s": round(bank_warm, 3),
         "bank_warm_k1_s": round(bank_warm_k1, 3),
         "fused_vs_per_tick_speedup": round(bank_warm_k1 / bank_warm, 2),
+        # loud, machine-readable flag when the auto-resolved window loses
+        # to per-tick K=1 — a stale/missing window-table entry, not noise,
+        # is the usual cause; a sub-1 ratio must never pass silently
+        "window_regression_warning": (
+            None if bank_warm_k1 >= bank_warm else (
+                f"auto window K={window} ({bank_warm:.3f}s warm) loses to "
+                f"per-tick K=1 ({bank_warm_k1:.3f}s): the persisted window "
+                "table is stale for this platform — re-record it with a "
+                "full (non-smoke) bench run"
+            )
+        ),
         "window_sweep": window_sweep,
         "vmap_mono_warm_s": round(vmap_mono_warm, 3),
         "banked_mono_warm_s": round(banked_mono_warm, 3),
@@ -584,6 +595,10 @@ def main() -> None:
         print(
             f"WARNING: warm bucketed fleet ({bank_warm:.3f}s) still trails the "
             f"cached per-scenario loop ({loop_warm:.3f}s)", file=sys.stderr,
+        )
+    if report["window_regression_warning"]:
+        print(
+            f"WARNING: {report['window_regression_warning']}", file=sys.stderr,
         )
 
 

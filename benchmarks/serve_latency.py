@@ -24,19 +24,29 @@ scenarios/sec:
 
     PYTHONPATH=src python benchmarks/serve_latency.py --smoke   # CI guard
 
-Every run (smoke included) asserts the two serving contracts of
-CONTRACTS.md §8: served results **bitwise equal** a direct ``Fleet.run``
-of the same scenario, and the steady phase — after one warm-up probe per
-pad signature in the workload — admits every remaining request with
-**zero** banked-engine retraces. On a multi-device host (the CI
-8-virtual-device job) the server itself runs sharded (``devices=``), so
-the same assertions cover the sharded admission path; single-device full
-runs additionally spawn an 8-virtual-CPU worker subprocess for a sharded
-throughput section. ``--smoke`` writes ``BENCH_serve_smoke.json``; the
-tracked ``BENCH_serve.json`` is only rewritten by full runs. The report
-also carries the server's observability metrics (per-slot occupancy,
-idle-window fraction, realized ticks per signature bank) — the
-measurement inputs of the ROADMAP straggler-bucket cost model.
+Every run (smoke included) asserts the serving contracts of
+CONTRACTS.md §8 across three modes — batch, sharded, and warm-restart:
+served results **bitwise equal** a direct ``Fleet.run`` of the same
+scenario, and the steady phase — after one warm-up probe per pad
+signature, submitted widest-first so up-tier coalescing (when enabled)
+finds its wide banks already warm — admits every remaining request with
+**zero** banked-engine retraces (a bank pre-traces its whole ladder at
+construction). On a multi-device host (the CI 8-virtual-device job) the
+server itself runs sharded (``devices=``), so the same assertions cover
+the sharded overlap-scheduling path; single-device full runs
+additionally spawn an 8-virtual-CPU worker subprocess for a sharded
+throughput section, and every run restarts a server against a
+``warm_dir`` store and asserts the restart loads templates and retraces
+nothing. ``--smoke`` writes ``BENCH_serve_smoke.json``; the tracked
+``BENCH_serve.json`` is only rewritten by full runs. The report carries
+the overlap scheduler's observability surface — per-bank rung
+histograms, the coalesce count, the admit/dispatch/sync/retire wall
+split of the scheduling rounds — plus per-slot occupancy, idle-window
+fraction, and realized ticks per signature bank (the measurement inputs
+of the ROADMAP straggler-bucket cost model); the smoke asserts those
+fields exist in every mode's report. Full runs additionally assert the
+throughput floors: ``serve_vs_warm_batch >= 0.8``,
+``serve_vs_bucketed_batch >= 0.7``, and steady ``p99_ms <= 826``.
 """
 from __future__ import annotations
 
@@ -49,13 +59,27 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-SMOKE = dict(requests=24, slots=4, replicas=1, rate=500.0, scale=0.5)
-FULL = dict(requests=64, slots=4, replicas=4, rate=200.0, scale=4.0,
-            window=128)  # heavy rows + few slots + wide windows: device
-                         # compute must dominate per-window host dispatch,
-                         # and occupancy (live rows / slot lanes) is the
-                         # throughput lever — idle lanes still compute
+SMOKE = dict(requests=24, slots=4, replicas=1, rate=500.0, scale=0.5,
+             rungs=None, coalesce=True)  # default 3-rung ladder + up-tier
+                                         # coalescing: CI exercises both
+                                         # overlap-scheduler paths
+FULL = dict(requests=64, slots=2, replicas=4, rate=200.0, scale=4.0,
+            window=64, rungs=(16, 64), coalesce=False)
+# Measured on the tracked workload (64 heavy requests, 9 signatures, one
+# shared CPU device): live occupancy never exceeds ~2 rows per bank while
+# a window executes every slot lane, frozen or not — so 2 slots at W=64
+# with the W/4 down-rung (fast slot turnover near completions) beats
+# every wider/deeper variant (slots=4 W=128 runs 2.3x slower). The 4W
+# up-rung and up-tier coalescing are both disabled here: on a single
+# compute-bound device they concentrate the hottest queue's tail and
+# push steady p99 past the 826 ms floor (spill "capacity" in another
+# bank's idle lanes is an illusion when all banks serialize on one
+# device; the smoke keeps both paths covered).
 SHARDED_DEVICES = 8  # full-run worker subprocess (single-device hosts)
+SMOKE_BUCKETED_FLOOR = 0.05  # smoke-size serve/bucketed ratio guard: the
+                             # tiny workload is pure host overhead against
+                             # a compile-excluded device ceiling, so the
+                             # absolute ratio stays far below full runs
 
 
 def _percentiles(xs):
@@ -93,11 +117,12 @@ def _assert_parity(server, req, signature):
         )
 
 
-def serve_section(args, workload, sig_of, *, devices=None):
+def serve_section(args, workload, sig_of, *, devices=None, warm_dir=None):
     """Probe-warm a server, run the steady open-loop phase, assert the
     zero-retrace contract, and return (report-dict, server, results)."""
     from repro.core import engine
     from repro.serve import ServeConfig, SimRequest, SimServer
+    from repro.serve.cache import signature_volume
 
     slots = args.slots
     if devices is not None and slots % devices:
@@ -107,28 +132,35 @@ def serve_section(args, workload, sig_of, *, devices=None):
             slots=slots,
             replicas=args.replicas,
             window=args.window,
+            rungs=getattr(args, "rungs", None),
+            coalesce=getattr(args, "coalesce", True),
+            warm_dir=warm_dir,
         ),
         devices=devices,
     )
 
-    # -- warm-up: two probes per distinct pad signature ---------------------
-    # Each *new* signature costs exactly two traces (admission merge +
-    # window step); two probes also push every bank past its admit/step
-    # warm-up so post-step carry shardings are cached under a mesh.
+    # -- warm-up: one probe per distinct pad signature, widest first --------
+    # A bank pre-traces its whole dispatch set (admission merge + one step
+    # per ladder rung + snapshot) at construction, so one probe per
+    # signature suffices. Volume-descending order makes the wide banks
+    # exist before the narrow signatures route, so coalescing consolidates
+    # the narrow traffic up-tier instead of fragmenting one bank per
+    # signature.
     probe_of = {}
     for _, req in workload:
         probe_of.setdefault(sig_of[req.rid], req)
     rid = 1_000_000
-    for sig, req in probe_of.items():
-        for j in range(2):
-            server.submit(
-                SimRequest(
-                    rid=rid, grid=req.grid, campaign=req.campaign,
-                    theta=req.theta, n_replicas=req.n_replicas,
-                    seed=req.seed + 7919 * (j + 1), name=f"probe_{rid}",
-                )
+    for sig, req in sorted(
+        probe_of.items(), key=lambda kv: -signature_volume(kv[0])
+    ):
+        server.submit(
+            SimRequest(
+                rid=rid, grid=req.grid, campaign=req.campaign,
+                theta=req.theta, n_replicas=req.n_replicas,
+                seed=req.seed + 7919, name=f"probe_{rid}",
             )
-            rid += 1
+        )
+        rid += 1
     t0 = time.perf_counter()
     server.drain()
     warmup_s = time.perf_counter() - t0
@@ -152,11 +184,21 @@ def serve_section(args, workload, sig_of, *, devices=None):
     )
 
     n = len(workload)
+    m = server.metrics()
+    rung_hist = {}
+    for bank_m in m["slot_banks"].values():
+        for k, v in bank_m["rung_windows"].items():
+            rung_hist[k] = rung_hist.get(k, 0) + v
     report = {
         "devices": devices or 1,
         "slots": slots,
         "window": server.window,
+        "rungs": m["rungs"],
+        "rung_windows": rung_hist,
+        "coalesced": m["coalesced"],
+        "banks": len(server.banks),
         "signatures": len(probe_of),
+        "wall_split_s": m["wall_split_s"],
         "warmup_probes": rid - 1_000_000,
         "warmup_s": round(warmup_s, 3),
         "steady_wall_s": round(steady_wall, 3),
@@ -166,6 +208,74 @@ def serve_section(args, workload, sig_of, *, devices=None):
         "queue_delay": _percentiles([r.queue_delay for r in results]),
     }
     return report, server, results
+
+
+# observability fields the CI smoke asserts on every mode's report (batch,
+# sharded, warm-restart): the rung histogram, the coalesce count, and the
+# dispatch-vs-sync wall split of the overlapped rounds
+REQUIRED_OBS_FIELDS = ("rungs", "rung_windows", "coalesced", "wall_split_s")
+
+
+def _assert_obs_fields(section: dict, name: str) -> None:
+    missing = [f for f in REQUIRED_OBS_FIELDS if f not in section]
+    assert not missing, f"{name} report is missing {missing}"
+
+
+def warm_restart_section(args, workload, sig_of):
+    """Serve a subset cold through a ``warm_dir`` store, restart the server
+    on the same store, and assert the restart is warm: slot templates load
+    from disk, the whole run (bank construction included) retraces nothing,
+    and served rows keep bitwise ``Fleet.run`` parity."""
+    import tempfile
+
+    from repro.core import engine
+    from repro.serve import ServeConfig, SimServer
+
+    sub = workload[: min(8, len(workload))]
+    with tempfile.TemporaryDirectory() as warm:
+        cfg = ServeConfig(
+            slots=args.slots, replicas=args.replicas, window=args.window,
+            warm_dir=warm,
+        )
+        cold = SimServer(cfg)
+        for _, req in sub:
+            cold.submit(req)
+        cold.drain()
+
+        restarted = SimServer(cfg)
+        t0 = time.perf_counter()
+        with engine.count_bank_traces() as traces:
+            for _, req in sub:
+                restarted.submit(req)
+            results = restarted.drain()
+        wall = time.perf_counter() - t0
+        assert restarted.cache.warm_loads >= 1, (
+            "warm restart loaded no slot template from the warm store"
+        )
+        assert traces.count == 0, (
+            f"warm restart retraced {traces.count}x — the restarted banks "
+            "must reuse every cached trace"
+        )
+        assert sorted(r.rid for r in results) == sorted(
+            req.rid for _, req in sub
+        )
+        for _, req in sub[:2]:
+            _assert_parity(restarted, req, sig_of[req.rid])
+        m = restarted.metrics()
+        rung_hist = {}
+        for bank_m in m["slot_banks"].values():
+            for k, v in bank_m["rung_windows"].items():
+                rung_hist[k] = rung_hist.get(k, 0) + v
+        return {
+            "requests": len(sub),
+            "warm_loads": restarted.cache.warm_loads,
+            "steady_retraces": traces.count,
+            "wall_s": round(wall, 3),
+            "rungs": m["rungs"],
+            "rung_windows": rung_hist,
+            "coalesced": m["coalesced"],
+            "wall_split_s": m["wall_split_s"],
+        }
 
 
 def sharded_worker(args) -> None:
@@ -334,6 +444,7 @@ def main() -> None:
         ),
         "metrics": server.metrics(),
     }
+    report["warm_restart"] = warm_restart_section(args, workload, sig_of)
     if not args.smoke and jax.device_count() == 1:
         report["sharded"] = _spawn_sharded_worker(args)
     report["total_s"] = round(time.time() - t_start, 1)
@@ -343,10 +454,39 @@ def main() -> None:
     print(json.dumps(report, indent=2))
 
     assert serve_report["steady_retraces"] == 0
-    if not args.smoke:
+    _assert_obs_fields(report["served"], "served")
+    _assert_obs_fields(report["warm_restart"], "warm_restart")
+    if "sharded" in report:
+        _assert_obs_fields(report["sharded"], "sharded")
+        assert report["sharded"]["steady_retraces"] == 0
+    if args.smoke:
+        # modest smoke floor: the tiny workload (light rows, 1 replica)
+        # maximizes host overhead per unit of device work, so the served /
+        # bucketed ratio sits far below the full-run number — the floor
+        # guards against scheduler regressions, not absolute throughput.
+        # Only meaningful unsharded: on a virtual-device host the server
+        # pays shard_map collectives for zero real parallelism while the
+        # bucketed baseline runs unsharded, so that leg asserts parity /
+        # retraces / observability, not throughput.
+        if serve_report["devices"] == 1:
+            assert report["serve_vs_bucketed_batch"] >= SMOKE_BUCKETED_FLOOR, (
+                f"smoke serve_vs_bucketed_batch "
+                f"{report['serve_vs_bucketed_batch']} fell below the "
+                f"{SMOKE_BUCKETED_FLOOR} floor"
+            )
+    else:
         assert report["serve_vs_warm_batch"] >= 0.8, (
             f"steady served throughput is {report['serve_vs_warm_batch']}x "
             "the warm batch Fleet.run ceiling (contract: >= 0.8x)"
+        )
+        assert report["serve_vs_bucketed_batch"] >= 0.7, (
+            f"steady served throughput is {report['serve_vs_bucketed_batch']}x"
+            " the bucketed-batch ceiling (contract: >= 0.7x after the "
+            "overlap-scheduling rework)"
+        )
+        assert serve_report["latency"]["p99_ms"] <= 826, (
+            f"steady p99 {serve_report['latency']['p99_ms']} ms regressed "
+            "past the pre-rework 826 ms"
         )
 
 

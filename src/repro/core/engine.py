@@ -23,7 +23,7 @@ from typing import Callable, Iterator, NamedTuple, Optional, Sequence, Tuple, Un
 import jax
 from jax.experimental.shard_map import shard_map
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 import numpy as np
 
 from repro.core.workload import (
@@ -537,6 +537,9 @@ def reset_bank_trace_count(*, clear_caches: bool = True) -> None:
         _banked_window_step.clear_cache()
         _banked_window_step_sharded.clear_cache()
         _admit_bank_rows.clear_cache()
+        _admit_bank_rows_sharded.clear_cache()
+        _bank_snapshot.clear_cache()
+        _bank_snapshot_sharded.clear_cache()
         for fn in list(_cache_clear_hooks):
             fn()
 
@@ -1070,6 +1073,98 @@ def _admit_bank_rows(
         return jnp.where(m, new, old)
 
     return _Carry(*(merge(n, o) for n, o in zip(fresh, carry)))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mesh",), donate_argnames=("carry",)
+)
+def _admit_bank_rows_sharded(
+    spec: SimSpec,
+    params: SimParams,
+    keys: jax.Array,  # [S, R, 2]
+    carry: _Carry,
+    mask: jax.Array,  # [S] bool
+    *,
+    mesh: Mesh,
+) -> _Carry:
+    """Sharded twin of :func:`_admit_bank_rows`: the masked admission merge
+    partitioned over the 1-D mesh with ``shard_map``.
+
+    The merge is row-local over the scenario axis (masked rows restart from
+    init-carry state, others pass through bit for bit), so sharding it is
+    collective-free — and, crucially for the serving layer's zero-retrace
+    contract, the output carry keeps the *same* ``P(axis)`` sharding the
+    sharded window step produces and consumes: admission never perturbs the
+    carry's sharding, so the admit → step → snapshot cycle holds one stable
+    set of jit cache keys under a mesh.
+    """
+    global _bank_traces
+    _bank_traces += 1  # executes at trace time only
+
+    def body(
+        sp: SimSpec, pa: SimParams, ke: jax.Array, ca: _Carry, ma: jax.Array
+    ) -> _Carry:
+        fresh = _banked_init_carry(sp, pa, ke)
+
+        def merge(new: jax.Array, old: jax.Array) -> jax.Array:
+            m = ma.reshape((ma.shape[0],) + (1,) * (old.ndim - 1))
+            return jnp.where(m, new, old)
+
+        return _Carry(*(merge(n, o) for n, o in zip(fresh, ca)))
+
+    p = PartitionSpec(mesh.axis_names[0])
+    return shard_map(
+        body, mesh=mesh, in_specs=(p, p, p, p, p), out_specs=p,
+        check_rep=False,
+    )(spec, params, keys, carry, mask)
+
+
+def _bank_snapshot_body(spec: SimSpec, carry: _Carry):
+    live = jnp.any(_banked_live(spec, carry), axis=-1)
+    return live, _banked_result(spec, carry)
+
+
+@jax.jit
+def _bank_snapshot(spec: SimSpec, carry: _Carry):
+    """One async dispatch: ``([S] row liveness, bank SimResult view)``.
+
+    The serving scheduler's batched-liveness surface: instead of a blocking
+    per-bank ``np.asarray(any(live))`` round-trip before every step, the
+    server dispatches this snapshot right after each window step and fetches
+    *last* round's snapshots in one batched host sync per scheduling round.
+    The carry is **not** donated — both outputs are fresh buffers (jit
+    outputs never alias non-donated inputs), so the snapshot survives the
+    next step's carry donation and retirement can slice result rows from it
+    without ever waiting on an in-flight window. Frozen rows make the
+    one-round-stale view exact: a finished row's carry never changes again
+    (CONTRACTS.md §7), so its result slice is bitwise identical in every
+    later version.
+    """
+    global _bank_traces
+    _bank_traces += 1  # executes at trace time only
+    return _bank_snapshot_body(spec, carry)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh",))
+def _bank_snapshot_sharded(spec: SimSpec, carry: _Carry, *, mesh: Mesh):
+    """Sharded twin of :func:`_bank_snapshot` (row-local, collective-free;
+    ``check_rep=False`` as for the other sharded bank programs)."""
+    global _bank_traces
+    _bank_traces += 1  # executes at trace time only
+    p = PartitionSpec(mesh.axis_names[0])
+    return shard_map(
+        _bank_snapshot_body, mesh=mesh, in_specs=(p, p), out_specs=(p, p),
+        check_rep=False,
+    )(spec, carry)
+
+
+def _shard_carry(carry: _Carry, mesh: Mesh) -> _Carry:
+    """Place a (freshly initialized) carry with the ``P(axis)`` sharding the
+    sharded window step emits, so the very first admit/step under a mesh
+    already sees the steady-state input sharding — one trace per program,
+    no init-carry → stepped-carry sharding transition to warm through."""
+    sharding = NamedSharding(mesh, PartitionSpec(mesh.axis_names[0]))
+    return jax.tree.map(lambda a: jax.device_put(a, sharding), carry)
 
 
 class BankCheckpoint(NamedTuple):

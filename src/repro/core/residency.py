@@ -152,13 +152,23 @@ class ResidentBank:
     # -- stepped execution --------------------------------------------------
 
     def init_carry(
-        self, params: SimParams, keys: jax.Array
+        self,
+        params: SimParams,
+        keys: jax.Array,
+        *,
+        mesh: Optional[Union[Mesh, int, Sequence]] = None,
     ) -> engine_lib._Carry:
         """Fresh ``[S, R, ...]`` window-loop carry (copies ``keys`` so the
-        caller's buffer survives the first donation)."""
-        return engine_lib._banked_init_carry(
+        caller's buffer survives the first donation). With ``mesh`` the
+        carry is placed with the sharded window step's output sharding, so
+        the first step traces against the steady-state layout."""
+        carry = engine_lib._banked_init_carry(
             self.spec, params, jnp.array(keys, copy=True)
         )
+        resolved = engine_lib.resolve_mesh(mesh)
+        if resolved is not None:
+            carry = engine_lib._shard_carry(carry, resolved)
+        return carry
 
     def window_step(
         self,
@@ -190,15 +200,41 @@ class ResidentBank:
         keys: jax.Array,
         carry: engine_lib._Carry,
         mask: np.ndarray,
+        *,
+        mesh: Optional[Union[Mesh, int, Sequence]] = None,
     ) -> engine_lib._Carry:
         """Re-initialize the rows selected by ``mask`` from the current
         spec/params/keys inside the donated ``carry`` (see
         :func:`engine._admit_bank_rows`); all other rows pass through
-        bit-exactly."""
+        bit-exactly. With ``mesh`` the merge runs sharded so the carry
+        keeps the sharded step's ``P(axis)`` layout across admissions."""
+        resolved = engine_lib.resolve_mesh(mesh)
+        if resolved is not None:
+            return engine_lib._admit_bank_rows_sharded(
+                self.spec, params, jnp.asarray(keys),
+                carry, jnp.asarray(mask, bool), mesh=resolved,
+            )
         return engine_lib._admit_bank_rows(
             self.spec, params, jnp.asarray(keys),
             carry, jnp.asarray(mask, bool),
         )
+
+    def snapshot(
+        self,
+        carry: engine_lib._Carry,
+        *,
+        mesh: Optional[Union[Mesh, int, Sequence]] = None,
+    ):
+        """One async dispatch of ``([S] row liveness, bank result view)``
+        (see :func:`engine._bank_snapshot`). Pure — the carry stays valid
+        for further stepping, and the outputs are fresh buffers that
+        survive the carry's next donation."""
+        resolved = engine_lib.resolve_mesh(mesh)
+        if resolved is not None:
+            return engine_lib._bank_snapshot_sharded(
+                self.spec, carry, mesh=resolved
+            )
+        return engine_lib._bank_snapshot(self.spec, carry)
 
     def live(self, carry: engine_lib._Carry) -> jax.Array:
         """Per-element ``[S, R]`` liveness (the stepped loop condition)."""

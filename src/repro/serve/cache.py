@@ -30,9 +30,35 @@ from repro.core.workload import (
     subset_bank,
 )
 
-__all__ = ["BankSlotCache", "pad_signature", "quantize_axis"]
+__all__ = [
+    "BankSlotCache",
+    "dominates",
+    "pad_signature",
+    "quantize_axis",
+    "signature_volume",
+]
 
 Signature = Tuple[int, int, int]
+
+
+def dominates(wide: Signature, narrow: Signature) -> bool:
+    """Whether a bank at signature ``wide`` can host a request whose native
+    signature is ``narrow``: every pad axis at least as large. Domination is
+    what makes up-tier coalescing bitwise-safe — padded legs/procs/links are
+    inert (contribute exactly zero to every reduction) and the RNG draws are
+    prefix-stable across link-pad widths (``jax_threefry_partitionable``,
+    pinned at package import), so the wide row's values on the narrow
+    extent equal the narrow run bit for bit."""
+    return all(w >= n for w, n in zip(wide, narrow))
+
+
+def signature_volume(sig: Signature) -> int:
+    """Pad volume ``legs * procs * links`` — the coalescing router's waste
+    metric: among the warm banks dominating a request, prefer the smallest
+    volume (least over-padding), and refuse up-tiers wider than
+    ``ServeConfig.coalesce_ratio`` times the native volume."""
+    t, p, l = sig
+    return int(t) * int(p) * int(l)
 
 
 def quantize_axis(n: int, floor: int) -> int:

@@ -3,29 +3,53 @@
 One server owns a set of warm :class:`~repro.serve.slots.SlotBank` banks
 (one per pad signature), a per-signature admission queue, and the result
 store. ``submit`` compiles the request to a single-scenario row and
-enqueues it; ``step`` runs one scheduling round — retire finished rows,
-refill free slots from the queue, advance every busy bank by one window —
-and ``drain`` steps until nothing is queued or resident. Results stream
-back per request the round their scenario finishes, not when the whole
-batch drains.
+enqueues it; ``step`` runs one **overlapped** scheduling round; ``drain``
+steps until nothing is queued or resident. Results stream back per request
+the round their scenario finishes, not when the whole batch drains.
+
+A round is four phases, ordered so the host never blocks on work it
+dispatched in the *same* round:
+
+1. **ADMIT** — fill free slots from the native-signature queues, then a
+   coalescing pass: a request whose native bank is cold (never built) or
+   saturated is re-stacked up-tier into an existing wider bank whose
+   signature dominates its pads (results are sliced back to native shape
+   at retire — bitwise identical by the inert-pad + prefix-stable-RNG
+   contracts). Fewer, fuller banks instead of one fragment per signature.
+2. **DISPATCH** — every believed-live bank picks a window-ladder rung from
+   its residual-work estimates and dispatches one async window step plus
+   its post-step liveness/result snapshot. No host sync anywhere in this
+   phase; JAX async dispatch keeps the device busy across banks.
+3. **FETCH** — one batched ``device_get`` over the snapshots dispatched
+   *last* round. This is the round's only host sync, and it waits on
+   device work that has had a full round to complete.
+4. **RETIRE** — free every slot the fetched snapshots prove finished,
+   slicing result rows out of the snapshot buffers (never the live carry,
+   so retirement cannot block on the in-flight step). Deferred liveness
+   means a finished row is detected at most one round late; the extra
+   window it sits through is a bit-exact no-op on its frozen carry
+   (CONTRACTS.md §7/§8 — retire latency ≤ 1 round).
 
 Parity contract: a served result is **bitwise identical** to a direct
 ``Fleet.run`` of the same scenario with the same theta/keys — admission
-merges are masked carry re-initializations, empty slots are inert pads,
-window steps freeze finished elements, and every parameter row is computed
-through the same row-local calibration mapper ``Fleet.run`` uses
-(CONTRACTS.md §8; ``tests/test_serve.py`` pins it, and
-``benchmarks/serve_latency.py --smoke`` asserts it in CI).
+merges are masked carry re-initializations, empty slots and unused replica
+lanes are inert, window steps freeze finished elements regardless of rung
+choice, and every parameter row is computed through the same row-local
+calibration mapper ``Fleet.run`` uses (CONTRACTS.md §8;
+``tests/test_serve.py`` pins it, and ``benchmarks/serve_latency.py
+--smoke`` asserts it in CI).
 
 Under ``REPRO_DEBUG=1`` the runtime sanitizers come on: every slot-bank
-template passes ``sanitize.check_bank`` and every warm bank's scheduling
-round runs inside ``sanitize.retrace_guard(budget=0)`` — a steady-state
+template passes ``sanitize.check_bank`` and — because a bank pre-traces
+its whole dispatch set at construction — every round that creates no new
+bank runs inside ``sanitize.retrace_guard(budget=0)``: a steady-state
 retrace is a contract violation, not a slowdown.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import math
 import time
 from typing import Deque, Dict, List, Optional, Tuple
 
@@ -36,7 +60,12 @@ from repro.core import calibration as calibration_lib
 from repro.core import engine as engine_lib
 from repro.core.engine import make_bank_params
 from repro.core.workload import bank_from_tables, compile_campaign
-from repro.serve.cache import BankSlotCache, pad_signature
+from repro.serve.cache import (
+    BankSlotCache,
+    dominates,
+    pad_signature,
+    signature_volume,
+)
 from repro.serve.request import RequestResult, SimRequest
 from repro.serve.slots import Admission, SlotBank
 
@@ -50,15 +79,28 @@ class ServeConfig:
     ``slots``/``replicas`` fix every slot bank's ``[S, R]`` shape.
     ``pad_floors`` + ``quantize`` define the pad-signature tiers requests
     route by (power-of-two brackets by default; ``quantize=False`` pins one
-    fixed shape and rejects campaigns that do not fit). ``window`` is the
-    fused tick window per scheduling round — **fixed per bank**, never
-    content-clamped, because a request-dependent window would retrace on
-    admission; results are bit-identical for every choice (CONTRACTS.md
-    §7), so it is purely a host-dispatch amortization knob. ``None``
-    resolves once through the engine's per-backend default, floored at 8:
-    the server's host-driven loop pays a dispatch + liveness sync per
-    window, which the stepped engine's CPU-tuned ``K=1`` would multiply by
-    every tick.
+    fixed shape and rejects campaigns that do not fit).
+
+    ``window`` is the base fused tick window per scheduling round; ``None``
+    resolves once through the engine's per-backend default, floored at 8
+    (the server's host-driven loop pays a dispatch per window, which the
+    stepped engine's CPU-tuned ``K=1`` would multiply by every tick).
+    ``rungs`` is the per-bank window ladder — ``None`` derives the pow2 set
+    ``{W/4, W, 4W}`` from the base window. Every rung is traced once at
+    bank construction and never again (per-signature trace budget =
+    ``len(rungs) + 2``); results are bit-identical for every rung
+    (CONTRACTS.md §7), so the per-round rung choice is purely a
+    host-dispatch amortization knob driven by residual-work estimates.
+
+    ``coalesce`` enables up-tier routing: a request whose native-signature
+    bank is cold or saturated may run in a warmer, wider bank whose
+    signature dominates its pads, as long as the wide bank's pad volume is
+    at most ``coalesce_ratio`` times the native volume. A window executes
+    every pad element, so an up-tiered row costs up to ``coalesce_ratio``
+    times its native compute — the conservative default of 2 merges only
+    near-equal-volume tiers, where fewer/fuller banks beat the
+    over-padding; raise it when trace/bank-construction cost dominates
+    device compute (many one-off signatures).
     """
 
     slots: int = 8
@@ -66,9 +108,12 @@ class ServeConfig:
     pad_floors: Tuple[int, int, int] = (8, 8, 8)
     quantize: bool = True
     window: Optional[int] = None
+    rungs: Optional[Tuple[int, ...]] = None
     leap: bool = False
     backend: Optional[str] = None
     warm_dir: Optional[str] = None
+    coalesce: bool = True
+    coalesce_ratio: float = 2.0
 
 
 class _Pending(collections.namedtuple("_Pending", "admission submitted_at")):
@@ -97,6 +142,14 @@ class SimServer:
             self.window = max(
                 8, engine_lib._resolve_window(None, self.config.leap)
             )
+        if self.config.rungs is not None:
+            self.rungs = tuple(sorted(set(int(r) for r in self.config.rungs)))
+        else:
+            self.rungs = tuple(
+                sorted({max(1, self.window // 4), self.window, self.window * 4})
+            )
+        if any(r < 1 for r in self.rungs):
+            raise ValueError(f"window rungs must be >= 1: {self.rungs}")
         self.cache = BankSlotCache(
             self.config.slots, warm_dir=self.config.warm_dir
         )
@@ -108,6 +161,12 @@ class SimServer:
         self._seen_rids: set = set()
         self._unreturned: List[RequestResult] = []
         self.rounds = 0
+        self.coalesced = 0
+        # dispatch-vs-sync wall split, accumulated across rounds
+        self.wall_admit_s = 0.0
+        self.wall_dispatch_s = 0.0
+        self.wall_sync_s = 0.0
+        self.wall_retire_s = 0.0
         self._debug = engine_lib._sanitizers_wanted()
 
     # -- submission ---------------------------------------------------------
@@ -115,10 +174,11 @@ class SimServer:
     def submit(self, req: SimRequest) -> int:
         """Compile and enqueue one request; returns its ``rid``.
 
-        Compilation (campaign → leg table → single-row bank at the routed
-        signature, plus the row's params through the calibration mapper)
-        happens here, at the submission edge, so the scheduling rounds
-        stay pure routing + device work.
+        Compilation (campaign → leg table → single-row bank at the native
+        signature, the row's params through the calibration mapper, and
+        the residual-work estimate that drives the window ladder) happens
+        here, at the submission edge, so the scheduling rounds stay pure
+        routing + device work.
         """
         if req.rid in self._seen_rids:
             raise ValueError(f"duplicate request id {req.rid}")
@@ -154,10 +214,15 @@ class SimServer:
                 ),
                 np.uint32,
             )
-        # pad unused replica lanes with zero keys: their rows simulate as
-        # extra replicas of the scenario and are sliced off at retire
+        # unused replica lanes get zero keys but are *inert* (born-done via
+        # the per-lane enabled mask), so they cost nothing and the retired
+        # [n_replicas, ...] slice is unchanged
         keys = np.zeros((self.config.replicas, 2), np.uint32)
         keys[: req.n_replicas] = row_keys
+        if self.config.leap:
+            est = table.leap_event_estimate()
+        else:
+            est = table.max_ticks_upper_bound(bg_override_cap=0.0, slack=1.0)
         adm = Admission(
             request=req,
             row_bank=row_bank,
@@ -165,6 +230,9 @@ class SimServer:
             bg_mu=np.asarray(params.bg_mu, np.float32)[0],
             bg_sigma=np.asarray(params.bg_sigma, np.float32)[0],
             keys=keys,
+            table=table,
+            native_sig=sig,
+            est_units=max(1, int(math.ceil(float(est)))),
         )
         self._seen_rids.add(req.rid)
         self.queues.setdefault(sig, collections.deque()).append(
@@ -172,7 +240,7 @@ class SimServer:
         )
         return req.rid
 
-    # -- scheduling ---------------------------------------------------------
+    # -- routing ------------------------------------------------------------
 
     def _bank_for(self, sig: tuple, seed_bank) -> SlotBank:
         bank = self.banks.get(sig)
@@ -184,32 +252,178 @@ class SimServer:
                 sanitize.check_bank_once(template)
             bank = SlotBank(
                 sig, template, self.config.replicas,
-                window=self.window, leap=self.config.leap,
+                window=self.window, rungs=self.rungs,
+                leap=self.config.leap,
                 backend=self.config.backend, mesh=self.mesh,
             )
             self.banks[sig] = bank
         return bank
 
-    def _bank_warm(self, bank: SlotBank) -> bool:
-        """Past warm-up: the bank has seen enough admit/step cycles that
-        every jit signature (including post-step carry shardings) is
-        cached. Two full cycles cover the init-carry → stepped-carry
-        sharding transition under a mesh."""
-        return bank.admitted >= 2 and bank.windows_total >= 2
+    def _coalesce_target(
+        self, sig: tuple, taken: Optional[Dict[tuple, int]] = None
+    ) -> Optional[SlotBank]:
+        """The cheapest existing bank a ``sig``-native request may run in
+        up-tier: signature strictly wider, dominating every pad axis, pad
+        volume within ``coalesce_ratio`` of native, and — when ``taken``
+        (slots already claimed this round) is given — still holding a free
+        slot beyond the claims. None when no such bank exists."""
+        native_vol = signature_volume(sig)
+        best = None
+        for bsig, bank in self.banks.items():
+            if tuple(bsig) == tuple(sig) or not dominates(bsig, sig):
+                continue
+            if signature_volume(bsig) > self.config.coalesce_ratio * native_vol:
+                continue
+            if taken is not None:
+                free = len(bank.free_slots()) - taken.get(tuple(bsig), 0)
+                if free <= 0:
+                    continue
+            if best is None or signature_volume(bsig) < signature_volume(
+                best.signature
+            ):
+                best = bank
+        return best
 
-    def _round_one(self, sig: tuple, bank: SlotBank, now: float) -> bool:
-        """Retire / admit / step one slot bank; returns True if it still
-        holds or received live work."""
-        live = bank.live_rows()
-        for s, req in enumerate(bank.slot_req):
-            if req is not None and not live[s]:
-                done_req, rows, windows, _ticks = bank.retire(s)
+    def _restack(self, adm: Admission, sig: tuple) -> Admission:
+        """Re-stack an admission at a wider bank's pads: rebuild the row
+        bank from the compiled table at ``sig`` and extend the param rows
+        with the canonical inert fills (keep=1, mu=sigma=0). The widened
+        row is bitwise the native row on the native extent — padded
+        legs/links contribute exactly zero and the RNG stream is
+        prefix-stable across link-pad widths."""
+        req = adm.request
+        name = req.name if req.name is not None else f"request_{req.rid}"
+        row_bank = bank_from_tables(
+            [adm.table], names=[name],
+            pad_legs=sig[0], pad_procs=sig[1], pad_links=sig[2],
+        )
+        keep = np.ones(sig[0], np.float32)
+        keep[: adm.keep_frac.shape[0]] = adm.keep_frac
+        bg_mu = np.zeros(sig[2], np.float32)
+        bg_mu[: adm.bg_mu.shape[0]] = adm.bg_mu
+        bg_sigma = np.zeros(sig[2], np.float32)
+        bg_sigma[: adm.bg_sigma.shape[0]] = adm.bg_sigma
+        return dataclasses.replace(
+            adm, row_bank=row_bank,
+            keep_frac=keep, bg_mu=bg_mu, bg_sigma=bg_sigma,
+        )
+
+    def _ensure_banks(self) -> int:
+        """Create slot banks for queued signatures that have none — unless
+        coalescing can host the whole queue in an existing wider bank, in
+        which case the cold native bank is never built. Returns how many
+        banks were created (a creation round is exempt from the
+        zero-retrace guard; construction pre-traces the new bank's whole
+        dispatch set)."""
+        created = 0
+        for sig, queue in list(self.queues.items()):
+            if not queue or sig in self.banks:
+                continue
+            if self.config.coalesce and self._coalesce_target(sig) is not None:
+                continue
+            self._bank_for(sig, queue[0].admission.row_bank)
+            created += 1
+        return created
+
+    # -- scheduling ---------------------------------------------------------
+
+    def _pop_for(self, queue: Deque[_Pending], now: float) -> Admission:
+        pending = queue.popleft()
+        adm = pending.admission
+        if adm.request.n_replicas > self.config.replicas:
+            # defensive: submit() rejects oversized requests before
+            # queueing, so an entry like this means the queue was poked
+            # externally — fail it loudly instead of letting it cycle
+            # (admitted-but-never-live would spin drain)
+            raise ValueError(
+                f"request {adm.request.rid} asks for "
+                f"{adm.request.n_replicas} replicas but the server "
+                f"runs {self.config.replicas}; it can never be admitted"
+            )
+        rid = adm.request.rid
+        self._submitted_at[rid] = pending.submitted_at
+        self._admitted_at[rid] = now
+        return adm
+
+    def _admit_phase(self, now: float) -> None:
+        """Native pass — every queue fills its own bank's free slots —
+        then the coalescing pass: whatever is still queued (native bank
+        cold or saturated) is re-stacked into a dominating wider bank with
+        capacity, cheapest signature first."""
+        for sig, bank in self.banks.items():
+            queue = self.queues.get(sig)
+            if not queue:
+                continue
+            entries = []
+            for slot in bank.free_slots():
+                if not queue:
+                    break
+                entries.append((slot, self._pop_for(queue, now)))
+            if entries:
+                bank.admit(entries)
+        if not self.config.coalesce:
+            return
+        for sig, queue in self.queues.items():
+            batches: Dict[tuple, List[Tuple[int, Admission]]] = {}
+            taken: Dict[tuple, int] = {}
+            while queue:
+                target = self._coalesce_target(sig, taken)
+                if target is None:
+                    break
+                tsig = tuple(target.signature)
+                k = taken.get(tsig, 0)
+                slot = target.free_slots()[k]
+                taken[tsig] = k + 1
+                adm = self._restack(self._pop_for(queue, now), tsig)
+                batches.setdefault(tsig, []).append((slot, adm))
+                self.coalesced += 1
+            for tsig, entries in batches.items():
+                self.banks[tsig].admit(entries)
+
+    def _round(self, now: float) -> bool:
+        """One overlapped scheduling round: admit → dispatch → fetch →
+        retire (see the module docstring). Returns True while any bank
+        still holds resident work."""
+        t0 = time.perf_counter()
+        # snapshots dispatched last round — this round's only host sync
+        # reads these, never the steps dispatched below
+        pend = []
+        for bank in self.banks.values():
+            snap = bank.pending_snapshot()
+            if snap is not None:
+                pend.append((bank, snap))
+        self._admit_phase(now)
+        t1 = time.perf_counter()
+        for bank in self.banks.values():
+            if bank.any_believed_live():
+                bank.step(bank.choose_rung())
+        t2 = time.perf_counter()
+        if pend:
+            lives = jax.device_get([snap[1] for _, snap in pend])
+            for (bank, snap), live in zip(pend, lives):
+                bank.apply_snapshot(snap[0], np.asarray(live, bool), snap[2])
+        t3 = time.perf_counter()
+        to_retire = [
+            (sig, bank, rs)
+            for sig, bank in self.banks.items()
+            if (rs := bank.retirable_slots())
+        ]
+        # one batched host fetch of the retiring banks' snapshot results —
+        # per-slot slicing then runs on host arrays, not device buffers
+        hosts = (
+            jax.device_get([b._seen[2] for _, b, _ in to_retire])
+            if to_retire else []
+        )
+        for (sig, bank, rs), host in zip(to_retire, hosts):
+            for s in rs:
+                native = tuple(bank.slot_native[s] or sig)
+                done_req, rows, windows, _ticks = bank.retire(s, result=host)
                 res = RequestResult(
                     rid=done_req.rid,
                     name=done_req.name or f"request_{done_req.rid}",
                     result=rows,
                     n_replicas=done_req.n_replicas,
-                    signature=sig,
+                    signature=native,
                     slot=s,
                     submitted_at=self._submitted_at.pop(done_req.rid),
                     admitted_at=self._admitted_at.pop(done_req.rid),
@@ -218,57 +432,25 @@ class SimServer:
                 )
                 self.results[done_req.rid] = res
                 self._unreturned.append(res)
-
-        queue = self.queues.get(sig)
-        entries = []
-        if queue:
-            for slot in bank.free_slots():
-                if not queue:
-                    break
-                pending = queue.popleft()
-                adm = pending.admission
-                if adm.request.n_replicas > self.config.replicas:
-                    # defensive: submit() rejects oversized requests before
-                    # queueing, so an entry like this means the queue was
-                    # poked externally — fail it loudly instead of letting
-                    # it cycle (admitted-but-never-live would spin drain)
-                    raise ValueError(
-                        f"request {adm.request.rid} asks for "
-                        f"{adm.request.n_replicas} replicas but the server "
-                        f"runs {self.config.replicas}; it can never be "
-                        "admitted"
-                    )
-                entries.append((slot, adm))
-                rid = adm.request.rid
-                self._submitted_at[rid] = pending.submitted_at
-                self._admitted_at[rid] = now
-        if entries:
-            bank.admit(entries)
-        if bank.occupied:
-            bank.step()
-            return True
-        # no resident work: this bank is busy only if requests are still
-        # queued behind it (queue may be None when the signature has no
-        # queue at all — treat exactly like an empty queue)
-        return bool(queue)
+        t4 = time.perf_counter()
+        self.wall_admit_s += t1 - t0
+        self.wall_dispatch_s += t2 - t1
+        self.wall_sync_s += t3 - t2
+        self.wall_retire_s += t4 - t3
+        return any(b.occupied for b in self.banks.values())
 
     def step(self) -> bool:
         """One scheduling round over every slot bank. Returns True while
         any request is still queued or resident."""
         now = time.perf_counter()
-        # create banks for queued signatures that have none yet
-        for sig, queue in list(self.queues.items()):
-            if queue and sig not in self.banks:
-                self._bank_for(sig, queue[0].admission.row_bank)
-        busy = False
-        for sig, bank in self.banks.items():
-            if self._debug and self._bank_warm(bank):
-                from repro.analysis import sanitize
+        created = self._ensure_banks()
+        if self._debug and self.banks and not created:
+            from repro.analysis import sanitize
 
-                with sanitize.retrace_guard(budget=0):
-                    busy |= self._round_one(sig, bank, now)
-            else:
-                busy |= self._round_one(sig, bank, now)
+            with sanitize.retrace_guard(budget=0):
+                busy = self._round(now)
+        else:
+            busy = self._round(now)
         self.rounds += 1
         return busy or any(self.queues.values())
 
@@ -330,9 +512,9 @@ class SimServer:
     # -- observability ------------------------------------------------------
 
     def metrics(self) -> dict:
-        """Serving metrics: global counters plus per-signature slot-bank
-        occupancy/idle/realized-tick measurements (the straggler-bucket
-        cost-model inputs of the ROADMAP straggler-bucket item)."""
+        """Serving metrics: global counters, the dispatch-vs-sync wall
+        split of the overlapped rounds, and per-signature slot-bank
+        occupancy / rung-histogram / coalesce measurements."""
         return {
             "rounds": self.rounds,
             "submitted": len(self._seen_rids),
@@ -340,8 +522,16 @@ class SimServer:
             "queued": sum(len(q) for q in self.queues.values()),
             "resident": sum(b.occupied for b in self.banks.values()),
             "window": self.window,
+            "rungs": list(self.rungs),
+            "coalesced": self.coalesced,
             "slots": self.config.slots,
             "replicas": self.config.replicas,
+            "wall_split_s": {
+                "admit": round(self.wall_admit_s, 6),
+                "dispatch": round(self.wall_dispatch_s, 6),
+                "sync": round(self.wall_sync_s, 6),
+                "retire": round(self.wall_retire_s, 6),
+            },
             "mesh_devices": (
                 int(self.mesh.devices.size) if self.mesh is not None else 0
             ),

@@ -7,22 +7,47 @@ through the engine's donated stepped loop. Finished rows freeze (their
 carry is done — further windows are bit-exact no-ops), free rows are inert
 shard-pad scenarios (never live), and admission overwrites a row's spec /
 params / keys on the host mirror, re-uploads, and merges a fresh carry for
-exactly the admitted rows (``ResidentBank.admit``). Nothing in that cycle
-changes an array shape, so a slot bank traces once per
-(signature, window, leap, backend, mesh) and then serves forever.
+exactly the admitted rows (``ResidentBank.admit``).
+
+Scheduling is **overlapped**, not lockstep. The bank never blocks on its
+own liveness: each window step immediately dispatches an async
+``(liveness, result-view)`` snapshot of the post-step carry
+(``ResidentBank.snapshot``), and the server fetches *last* round's
+snapshots in one batched host sync per round. Host-side ``live_mask`` is
+therefore the *believed* liveness — at most one round stale — and
+retirement reads rows from the fetched snapshot (fresh buffers that
+survive the carry's next donation), so retiring never waits on an
+in-flight step. One-round-late retirement is still bitwise exact because
+a finished row's carry is frozen (CONTRACTS.md §7/§8).
+
+Instead of a single fixed window, the bank holds a small pow2 **rung
+ladder** (e.g. ``{W/4, W, 4W}``). Every rung — plus the admission merge
+and the snapshot — is traced once at construction on the all-inert carry,
+so the per-signature trace budget is exactly ``len(rungs) + 2`` and steady
+state retraces nothing no matter which rung each round picks
+(results are bit-identical across window sizes, so rung choice is purely
+a cost knob). ``choose_rung`` sizes the round from the residual-work
+estimates carried by each admission.
+
+Unused replica lanes of an admitted row (``n_replicas < replicas``) are
+**inert**: a per-lane ``enabled`` mask marks them born-done, so they never
+tick, never draw from any RNG stream, and never hold the row live — the
+row retires when its *real* replicas finish. A row admitted up-tier
+(signature coalescing) remembers its native signature; ``retire`` slices
+the leg axis back to the native pads, which is bitwise the native-pads run
+by the inert-pad + prefix-stable-RNG contracts.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import SimParams, SimResult
 from repro.core.residency import ResidentBank
-from repro.core.workload import ScenarioBank
+from repro.core.workload import LegTable, ScenarioBank
 from repro.serve.request import SimRequest
 
 __all__ = ["SlotBank", "Admission"]
@@ -30,9 +55,15 @@ __all__ = ["SlotBank", "Admission"]
 
 @dataclasses.dataclass
 class Admission:
-    """One request ready to enter a slot: its single-row bank (at the slot
-    bank's pads), its row params, and its ``[R, 2]`` replica keys (already
-    padded to the slot bank's replica count)."""
+    """One request ready to enter a slot: its single-row bank (at the
+    *routed* bank's pads), its row params, and its ``[R, 2]`` replica keys
+    (already padded to the slot bank's replica count). ``native_sig`` is
+    the request's own quantized signature (what ``retire`` slices back to
+    when the row was coalesced up-tier), ``table`` the compiled leg table
+    (kept so a saturation-time re-route can re-stack the row at a wider
+    bank's pads), and ``est_units`` the residual-work estimate — expected
+    engine iterations (ticks, or leap events under ``leap``) — feeding the
+    window-ladder rung choice."""
 
     request: SimRequest
     row_bank: ScenarioBank
@@ -40,6 +71,9 @@ class Admission:
     bg_mu: np.ndarray  # [L] f32
     bg_sigma: np.ndarray  # [L] f32
     keys: np.ndarray  # [R, 2] uint32
+    table: Optional[LegTable] = None
+    native_sig: Optional[Tuple[int, int, int]] = None
+    est_units: int = 1
 
 
 def _owned_copy(bank: ScenarioBank) -> ScenarioBank:
@@ -59,11 +93,16 @@ def _owned_copy(bank: ScenarioBank) -> ScenarioBank:
 class SlotBank:
     """``slots`` warm serving rows at one pad signature.
 
-    Construction uploads the all-inert template and initializes a carry in
-    which every element is already done — the bank is immediately steppable
-    and costs nothing until the first admission. ``mesh`` (a resolved 1-D
-    Mesh or None) shards the window step over the scenario axis; the slot
-    count must then be a multiple of the mesh size.
+    Construction uploads the all-inert template, initializes a carry in
+    which every element is already done, and **pre-traces the full steady
+    dispatch set** — the admission merge, one window step per ladder rung,
+    and the liveness/result snapshot — on that inert carry. The bank is
+    then warm by construction: its trace budget is ``len(rungs) + 2`` and
+    every later scheduling round is transfers + cached dispatch only.
+    ``mesh`` (a resolved 1-D Mesh or None) shards every program over the
+    scenario axis; the slot count must then be a multiple of the mesh
+    size, and the carry is born with the sharded step's ``P(axis)`` layout
+    so no sharding-transition retrace exists to warm through.
     """
 
     def __init__(
@@ -73,6 +112,7 @@ class SlotBank:
         replicas: int,
         *,
         window: int,
+        rungs: Optional[Sequence[int]] = None,
         leap: bool = False,
         backend: Optional[str] = None,
         mesh=None,
@@ -81,6 +121,11 @@ class SlotBank:
         self.n_slots = template.n_scenarios
         self.replicas = int(replicas)
         self.window = int(window)
+        self.rungs: Tuple[int, ...] = tuple(
+            sorted(set(int(r) for r in (rungs or [window])))
+        )
+        if any(r < 1 for r in self.rungs):
+            raise ValueError(f"window rungs must be >= 1: {self.rungs}")
         self.leap = bool(leap)
         self.backend = backend
         self.mesh = mesh
@@ -94,38 +139,75 @@ class SlotBank:
         T = template.pad_legs
         L = template.pad_links
         S = self.n_slots
+        R = self.replicas
         # host params mirror, inert-row fills (keep=1, mu=sigma=0 — the
-        # engine's _pad_params_rows contract)
+        # engine's _pad_params_rows contract). ``enabled`` is per *lane*
+        # [S, R, T]: admission switches on exactly the request's
+        # n_replicas lanes, the rest stay born-done.
         self._keep = np.ones((S, T), np.float32)
         self._bg_mu = np.zeros((S, L), np.float32)
         self._bg_sigma = np.zeros((S, L), np.float32)
-        self._keys = np.zeros((S, self.replicas, 2), np.uint32)
+        self._keys = np.zeros((S, R, 2), np.uint32)
+        self._enabled = np.zeros((S, R, T), bool)
         self._params_dev = self._upload_params()
-        self.carry = self.resident.init_carry(
-            self._params_dev, jnp.asarray(self._keys)
-        )
 
         self.slot_req: List[Optional[SimRequest]] = [None] * S
+        self.slot_native: List[Optional[Tuple[int, int, int]]] = [None] * S
         self.slot_windows = [0] * S  # windows since the row was admitted
-        # carry version -> memoized bank result (retiring several slots in
-        # one round materializes the result view once)
+        self.slot_est = [0] * S  # residual-work estimate at admission
+        self.slot_units = [0] * S  # window units stepped while resident
+        # believed row liveness: optimistically True from admission until
+        # a snapshot at/after the admission version says otherwise
+        self.live_mask = np.zeros(S, bool)
+        self._admit_version = np.zeros(S, np.int64)
         self._version = 0
-        self._result_cache: Optional[Tuple[int, SimResult]] = None
         # observability (ROADMAP straggler-cost measurements)
         self.windows_total = 0
         self.occupied_window_sum = 0  # sum over windows of occupied slots
         self.admitted = 0
         self.retired = 0
         self.realized_ticks = 0  # sum of retired rows' realized tick counts
+        self.rung_windows: Dict[int, int] = {r: 0 for r in self.rungs}
+        self.coalesced_in = 0  # rows admitted with a narrower native sig
+        # online residual-work calibration: EMA of realized ticks across
+        # this bank's retired rows. The static per-request estimates are
+        # upper bounds that overshoot realized work severalfold, which
+        # would pin the ladder to its top rung; the EMA pulls the residual
+        # back toward what rows in this bank actually take. 0 = no retire
+        # observed yet.
+        self.ema_ticks = 0.0
+
+        # ---- warm-up: pre-trace the steady dispatch set -------------------
+        self.carry = self.resident.init_carry(
+            self._params_dev, self._keys, mesh=self.mesh
+        )
+        self.carry = self.resident.admit(
+            self._params_dev, self._keys, self.carry,
+            np.zeros(S, bool), mesh=self.mesh,
+        )
+        for rung in self.rungs:
+            self.carry = self.resident.window_step(
+                self._params_dev, self.carry,
+                backend=self.backend, leap=self.leap, window=rung,
+                mesh=self.mesh,
+            )
+        live, result = self.resident.snapshot(self.carry, mesh=self.mesh)
+        # latest dispatched snapshot / latest fetched snapshot, each
+        # (carry version, [S] liveness, bank result view). The fetched
+        # side holds host liveness; the dispatched side a device array.
+        self._snap = (0, live, result)
+        self._seen = (0, np.zeros(S, bool), result)
 
     # -- params -------------------------------------------------------------
 
     def _upload_params(self) -> SimParams:
+        import jax.numpy as jnp
+
         return SimParams(
             keep_frac=jnp.asarray(self._keep),
             bg_mu=jnp.asarray(self._bg_mu),
             bg_sigma=jnp.asarray(self._bg_sigma),
-            enabled=None,
+            enabled=jnp.asarray(self._enabled),
         )
 
     # -- scheduling surface -------------------------------------------------
@@ -137,17 +219,32 @@ class SlotBank:
     def free_slots(self) -> List[int]:
         return [s for s, r in enumerate(self.slot_req) if r is None]
 
+    def any_believed_live(self) -> bool:
+        """Whether this round should dispatch a window step: some resident
+        row was live as of the last fetched snapshot (or was admitted after
+        it and is optimistically live)."""
+        return bool(self.live_mask.any())
+
     def live_rows(self) -> np.ndarray:
-        """Host-synced ``[S]`` row liveness (any replica still ticking)."""
+        """Host-synced ``[S]`` row liveness of the *current* carry.
+
+        Debug/compat surface only — it blocks on every in-flight step. The
+        scheduler uses the async snapshot pipeline (``pending_snapshot`` /
+        ``apply_snapshot``) instead.
+        """
+        import jax.numpy as jnp
+
         return np.asarray(jnp.any(self.resident.live(self.carry), axis=-1))
 
-    def admit(self, entries: Sequence[Tuple[int, Admission]]) -> None:
+    def admit(self, entries: Sequence[Tuple[int, "Admission"]]) -> None:
         """Admit ``(slot, admission)`` pairs in one masked merge.
 
         Writes every admitted row into the host mirrors, re-uploads the
         spec and params (transfers, not traces), and re-initializes exactly
         the admitted rows inside the donated carry — in-flight rows pass
-        through bit for bit.
+        through bit for bit. Unused replica lanes are disabled (born-done);
+        admitted rows become believed-live until a snapshot at or after
+        this carry version reports them finished.
         """
         if not entries:
             return
@@ -161,54 +258,162 @@ class SlotBank:
             self._bg_mu[slot] = adm.bg_mu
             self._bg_sigma[slot] = adm.bg_sigma
             self._keys[slot] = adm.keys
+            n_rep = adm.request.n_replicas
+            self._enabled[slot] = False
+            self._enabled[slot, :n_rep, :] = True
             self.slot_req[slot] = adm.request
+            native = adm.native_sig or self.signature
+            self.slot_native[slot] = native
+            if tuple(native) != tuple(self.signature):
+                self.coalesced_in += 1
             self.slot_windows[slot] = 0
+            self.slot_est[slot] = max(1, int(adm.est_units))
+            self.slot_units[slot] = 0
         self._params_dev = self._upload_params()
         self.carry = self.resident.admit(
-            self._params_dev, self._keys, self.carry, mask
+            self._params_dev, self._keys, self.carry, mask, mesh=self.mesh
         )
         self._version += 1
-        self.admitted += len(entries)
+        self._admit_version[mask] = self._version
+        self.live_mask |= mask
+        self.admitted += int(mask.sum())
 
-    def step(self) -> None:
-        """One donated window step over the whole slot bank."""
+    def choose_rung(self) -> int:
+        """Pick this round's window from the residual-work estimates: the
+        largest rung that does not overshoot the *nearest* believed-live
+        completion. Slot turnover is the throughput lever — a window
+        executes all K ticks over every lane, frozen rows included, so
+        running a wide window past a completion burns bank-wide compute
+        while the finished row waits to retire and its slot waits to
+        refill. When every resident run is long, wide rungs amortize
+        host dispatch at no cost (nothing retires inside the window
+        either way).
+
+        Static estimates are upper bounds that overshoot realized work
+        severalfold, so once this bank has retired a row each estimate is
+        capped at 1.1x the realized-ticks EMA — deliberately tight,
+        because the costs are asymmetric: overshooting a completion burns
+        a wide window of bank-wide compute, while undershooting just
+        drops the row to base-window progress. A row past its (capped)
+        estimate claims the base window — progress never degenerates to
+        the bottom rung on an undershot estimate."""
+        cap = int(self.ema_ticks * 1.1) if self.ema_ticks else None
+        horizon = None
+        for s, req in enumerate(self.slot_req):
+            if req is None or not self.live_mask[s]:
+                continue
+            est = self.slot_est[s] if cap is None else min(self.slot_est[s], cap)
+            left = est - self.slot_units[s]
+            if left <= 0:
+                left = self.window
+            horizon = left if horizon is None else min(horizon, left)
+        if horizon is None:
+            return self.rungs[0]
+        for rung in reversed(self.rungs):
+            if rung <= horizon:
+                return rung
+        return self.rungs[0]
+
+    def step(self, rung: Optional[int] = None) -> None:
+        """One donated window step over the whole slot bank, immediately
+        followed by the async post-step snapshot dispatch (no host sync
+        anywhere — the server fetches snapshots batched, a round later)."""
+        rung = self.window if rung is None else int(rung)
         self.carry = self.resident.window_step(
             self._params_dev, self.carry,
-            backend=self.backend, leap=self.leap, window=self.window,
+            backend=self.backend, leap=self.leap, window=rung,
             mesh=self.mesh,
         )
         self._version += 1
         self.windows_total += 1
+        self.rung_windows[rung] = self.rung_windows.get(rung, 0) + 1
         self.occupied_window_sum += self.occupied
         for s, r in enumerate(self.slot_req):
             if r is not None:
                 self.slot_windows[s] += 1
+                self.slot_units[s] += rung
+        live, result = self.resident.snapshot(self.carry, mesh=self.mesh)
+        self._snap = (self._version, live, result)
 
-    def retire(self, slot: int) -> Tuple[SimRequest, SimResult, int, int]:
+    def pending_snapshot(self):
+        """The latest dispatched-but-unfetched ``(version, live_dev,
+        result)`` snapshot, or None when already applied. The server
+        gathers these across all banks into one batched host fetch."""
+        return self._snap if self._snap[0] > self._seen[0] else None
+
+    def apply_snapshot(self, version: int, live: np.ndarray, result) -> None:
+        """Install a fetched snapshot: update believed liveness for every
+        row the snapshot covers (admitted at or before its version — a row
+        admitted later stays optimistically live until a newer snapshot)."""
+        if version <= self._seen[0]:
+            return
+        self._seen = (int(version), np.asarray(live, bool), result)
+        for s in range(self.n_slots):
+            if self._admit_version[s] <= version:
+                self.live_mask[s] = (
+                    bool(live[s]) and self.slot_req[s] is not None
+                )
+
+    def retirable_slots(self) -> List[int]:
+        """Slots whose request is finished *as of the fetched snapshot*:
+        occupied, covered by the snapshot version, and not live in it."""
+        version, live, _ = self._seen
+        return [
+            s
+            for s in range(self.n_slots)
+            if self.slot_req[s] is not None
+            and self._admit_version[s] <= version
+            and not live[s]
+        ]
+
+    def retire(
+        self, slot: int, result: Optional[SimResult] = None
+    ) -> Tuple[SimRequest, SimResult, int, int]:
         """Extract the finished request in ``slot`` and free it.
 
         Returns ``(request, result_rows, windows_resident, realized_ticks)``
         where ``result_rows`` is the request's bit-exact ``[n_replicas, ...]``
-        slice of the bank result. The freed row keeps its frozen carry (all
-        done — every further window over it is a no-op) until the next
-        admission overwrites it.
+        slice of the *fetched snapshot's* result view, leg axis cut back to
+        the request's native pads (a no-op unless the row was coalesced
+        up-tier). Reading the snapshot — not the live carry — is what keeps
+        retirement from ever blocking on an in-flight window step: the row
+        froze before the snapshot was taken, so the one-round-old view is
+        bitwise final. The freed row keeps its frozen carry (all done —
+        every further window over it is a no-op) until the next admission
+        overwrites it.
+
+        ``result`` lets the caller pass the snapshot's result view already
+        fetched to host (the server batches one ``device_get`` over every
+        bank retiring this round instead of paying per-field transfers per
+        slot); it must be this bank's ``_seen`` snapshot result.
         """
         req = self.slot_req[slot]
         if req is None:
             raise ValueError(f"slot {slot} is empty")
-        if self._result_cache is None or self._result_cache[0] != self._version:
-            self._result_cache = (
-                self._version, self.resident.result(self.carry)
-            )
-        full = self._result_cache[1]
+        full = self._seen[2] if result is None else result
         r = req.n_replicas
-        rows = jax.tree.map(lambda a: np.asarray(a[slot, :r]), full)
+        native_legs = (self.slot_native[slot] or self.signature)[0]
+
+        def cut(a):
+            a = np.asarray(a[slot, :r])
+            return a[:, :native_legs] if a.ndim == 2 else a
+
+        rows = jax.tree.map(cut, full)
         ticks = int(np.max(np.asarray(full.ticks[slot, :r])))
         windows = self.slot_windows[slot]
         self.slot_req[slot] = None
+        self.slot_native[slot] = None
         self.slot_windows[slot] = 0
+        self.slot_est[slot] = 0
+        self.slot_units[slot] = 0
+        self.live_mask[slot] = False
         self.retired += 1
         self.realized_ticks += ticks
+        self.ema_ticks = (
+            float(ticks)
+            if not self.ema_ticks
+            else 0.7 * self.ema_ticks + 0.3 * ticks
+        )
         return req, rows, windows, ticks
 
     # -- observability ------------------------------------------------------
@@ -219,9 +424,14 @@ class SlotBank:
             "slots": self.n_slots,
             "replicas": self.replicas,
             "window": self.window,
+            "rungs": list(self.rungs),
+            "rung_windows": {
+                str(r): c for r, c in sorted(self.rung_windows.items())
+            },
             "windows_total": self.windows_total,
             "admitted": self.admitted,
             "retired": self.retired,
+            "coalesced_in": self.coalesced_in,
             "occupancy_mean": self.occupied_window_sum / max(1, self.windows_total),
             "idle_window_fraction": 1.0 - self.occupied_window_sum / denom,
             "realized_ticks": self.realized_ticks,

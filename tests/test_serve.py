@@ -264,6 +264,152 @@ def test_metrics_expose_slot_observability():
 
 
 # ---------------------------------------------------------------------------
+# overlap scheduler: deferred retirement, window ladder, coalescing
+# ---------------------------------------------------------------------------
+def test_per_request_theta_parity():
+    """Deferred retirement with a different theta per request: every served
+    row still equals its own direct ``Fleet.run`` bit for bit."""
+    pairs = sample_scenarios(n=3, seed=13, scale=0.5)
+    thetas = [
+        np.asarray([0.1, 0.3, 0.15], np.float32),
+        np.asarray([0.25, 0.5, 0.05], np.float32),
+        np.asarray([0.4, 0.2, 0.3], np.float32),
+    ]
+    server = SimServer(ServeConfig(slots=2, replicas=2))
+    for i, (g, c) in enumerate(pairs):
+        server.submit(
+            SimRequest(
+                rid=i, grid=g, campaign=c, theta=thetas[i], n_replicas=2,
+                seed=i,
+            )
+        )
+    server.drain()
+    for i, (g, c) in enumerate(pairs):
+        _assert_served_equals_direct(
+            server, i, g, c, theta=thetas[i], replicas=2, seed=i
+        )
+
+
+def test_window_ladder_parity_across_rungs():
+    """Rung choice is a pure cost knob: the same workload served through
+    different window ladders (including a degenerate single-rung one)
+    produces bitwise identical results (CONTRACTS.md §7/§8)."""
+    pairs = sample_scenarios(n=4, seed=14, scale=0.5)
+    results = []
+    for rungs in [(8,), (2, 16), (4, 32, 256)]:
+        server = SimServer(ServeConfig(slots=2, replicas=1, rungs=rungs))
+        for i, (g, c) in enumerate(pairs):
+            server.submit(SimRequest(rid=i, grid=g, campaign=c, seed=i))
+        server.drain()
+        results.append({i: server.poll(i).result for i in range(len(pairs))})
+        for i, (g, c) in enumerate(pairs):
+            _assert_served_equals_direct(server, i, g, c, seed=i)
+    base = results[0]
+    for other in results[1:]:
+        for i, res in base.items():
+            for f in res._fields:
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(res, f)),
+                    np.asarray(getattr(other[i], f)),
+                    err_msg=f"rid {i}: field {f!r} diverged across rungs",
+                )
+
+
+def test_coalesced_uptier_slice_parity():
+    """A request whose native bank is cold routes up-tier into an existing
+    wider bank (dominating signature) and its retired slice — cut back to
+    native pads — is still bitwise the native-pads ``Fleet.run``."""
+    pairs = sample_scenarios(n=12, seed=15, scale=0.5)
+    sigs = [pad_signature(compile_campaign(g, c)) for g, c in pairs]
+    wide_i = narrow_i = None
+    for i, a in enumerate(sigs):
+        for j, b in enumerate(sigs):
+            if a != b and all(x >= y for x, y in zip(a, b)):
+                wide_i, narrow_i = i, j
+                break
+        if wide_i is not None:
+            break
+    assert wide_i is not None, "workload has no dominating signature pair"
+    server = SimServer(
+        ServeConfig(slots=4, replicas=1, coalesce_ratio=1e9)
+    )
+    server.submit(
+        SimRequest(rid=0, grid=pairs[wide_i][0], campaign=pairs[wide_i][1],
+                   seed=0)
+    )
+    server.drain()
+    assert list(server.banks) == [sigs[wide_i]]
+    server.submit(
+        SimRequest(rid=1, grid=pairs[narrow_i][0],
+                   campaign=pairs[narrow_i][1], seed=1)
+    )
+    server.drain()
+    # the narrow request never built its own bank — it ran up-tier
+    assert list(server.banks) == [sigs[wide_i]]
+    assert server.coalesced == 1
+    m = server.metrics()
+    (bank_m,) = m["slot_banks"].values()
+    assert bank_m["coalesced_in"] == 1
+    res = server.poll(1)
+    assert res.signature == sigs[narrow_i], "served signature must be native"
+    _assert_served_equals_direct(
+        server, 1, pairs[narrow_i][0], pairs[narrow_i][1], seed=1
+    )
+
+
+def test_trace_budget_is_rungs_plus_two_per_bank():
+    """The whole dispatch set is traced at bank construction: exactly
+    ``len(rungs) + 2`` traces per pad signature (admission merge + one
+    window step per rung + snapshot), and zero afterwards no matter how
+    requests, rungs, or admissions interleave."""
+    pairs = sample_scenarios(n=10, seed=16, scale=0.5)
+    engine.reset_bank_trace_count(clear_caches=True)
+    server = SimServer(
+        ServeConfig(slots=3, replicas=2, rungs=(8, 64), coalesce=False)
+    )
+    with engine.count_bank_traces() as probe:
+        for i, (g, c) in enumerate(pairs[:4]):
+            server.submit(SimRequest(rid=i, grid=g, campaign=c, seed=i))
+        server.drain()
+    expected = len(server.banks) * (len(server.rungs) + 2)
+    assert probe.count == expected, (
+        f"{probe.count} traces for {len(server.banks)} banks with "
+        f"{len(server.rungs)} rungs — budget is rungs + 2 per signature"
+    )
+    with engine.count_bank_traces() as steady:
+        for i, (g, c) in enumerate(pairs[4:], start=4):
+            server.submit(SimRequest(rid=i, grid=g, campaign=c, seed=i))
+            server.step()
+        server.drain()
+    new_banks = len(server.banks) * (len(server.rungs) + 2) - expected
+    assert steady.count == new_banks, (
+        f"{steady.count} steady-state traces ({new_banks} budgeted for "
+        "banks first built in the steady phase)"
+    )
+    assert all(server.poll(i) is not None for i in range(len(pairs)))
+
+
+def test_unused_replica_lanes_are_inert():
+    """An ``n_replicas=1`` request on a ``replicas=4`` server leaves lanes
+    1..3 born-done: they never tick (no compute, no RNG draws), while the
+    real lane runs — and the retired ``[n_replicas, ...]`` slice still
+    matches the direct run."""
+    (g, c), = sample_scenarios(n=1, seed=17, scale=0.5)
+    server = SimServer(ServeConfig(slots=2, replicas=4))
+    server.submit(SimRequest(rid=0, grid=g, campaign=c, n_replicas=1, seed=0))
+    server.drain()
+    res = server.poll(0)
+    (bank,) = server.banks.values()
+    _version, _live, full = bank._seen
+    ticks = np.asarray(full.ticks)  # [S, R]
+    assert ticks[res.slot, 0] > 0, "the real replica lane must have run"
+    assert ticks[res.slot, 1:].max() == 0, (
+        "unused replica lanes ticked — they must be born-done inert"
+    )
+    _assert_served_equals_direct(server, 0, g, c, replicas=1, seed=0)
+
+
+# ---------------------------------------------------------------------------
 # warm store
 # ---------------------------------------------------------------------------
 def test_warm_dir_roundtrip(tmp_path):
